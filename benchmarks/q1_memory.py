@@ -1,0 +1,100 @@
+"""Q1 (paper Fig. 2): does AION bound memory under growing lateness?
+
+For each workload, run AION vs the in-memory baseline with the number of
+past windows (max allowed lateness) growing; record the device-tier bytes
+and whether the baseline OOMs. Scales are reduced (virtual time, small
+budget) so the benchmark finishes in seconds — the *shape* of the result
+(AION flat, baseline linear until crash) is the reproduction target.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.base import AionConfig
+from repro.configs.workloads import WORKLOADS
+from repro.core import (
+    EngineOOM, InMemoryPolicy, PeriodicWatermarkGenerator, StreamEngine,
+    TumblingWindows,
+)
+from repro.core.operators import make_operator
+from repro.core.triggers import DeltaTTrigger
+from repro.data.generators import make_generator
+
+BUDGET = 24 << 20
+EVENTS_PER_WM = 2500
+N_WATERMARKS = 10
+
+
+def _build(workload, baseline: bool, seed=0):
+    gen = make_generator(workload, seed=seed)
+    aion = AionConfig(block_size=256)
+    kw = {}
+    if workload.operator == "stock":
+        kw = {"num_keys": workload.num_keys}
+    elif workload.operator == "lrb":
+        kw = {"num_segments": workload.num_keys}
+    elif workload.operator == "bigrams":
+        kw = {"vocab": 64}
+    op = make_operator(workload.operator, aion.block_size, gen.width, **kw)
+    eng = StreamEngine(
+        assigner=TumblingWindows(workload.window_duration),
+        operator=op, aion=aion, value_width=gen.width,
+        device_budget_bytes=BUDGET,
+        policy=InMemoryPolicy() if baseline else None,
+        trigger=DeltaTTrigger(executions=2),
+    )
+    return gen, eng
+
+
+def run_one(workload, baseline: bool, past_windows: int) -> Dict:
+    gen, eng = _build(workload, baseline)
+    wd = workload.window_duration
+    now = past_windows * wd
+    rng = np.random.default_rng(1)
+    device_samples: List[int] = []
+    oom_at = None
+    t0 = time.time()
+    try:
+        for wm_i in range(N_WATERMARKS):
+            batch = gen.batch(EVENTS_PER_WM, now)
+            # clamp lateness to the experiment's past-window horizon
+            batch.timestamps = np.maximum(batch.timestamps,
+                                          now - past_windows * wd)
+            eng.ingest(batch, now)
+            device_samples.append(eng.device_bytes())   # while window live
+            eng.advance_watermark(now, now)
+            device_samples.append(eng.device_bytes())
+            eng.poll(now)
+            now += wd
+    except EngineOOM:
+        oom_at = wm_i
+    eng.close()
+    return {
+        "workload": workload.name,
+        "backend": "baseline" if baseline else "aion",
+        "past_windows": past_windows,
+        "median_device_mb": float(np.median(device_samples)) / 2**20
+        if device_samples else float("nan"),
+        "peak_device_mb": eng.budget.peak_bytes / 2**20,
+        "oom_at_watermark": oom_at,
+        "seconds": time.time() - t0,
+    }
+
+
+def run(workload_names=("average", "stock_market"),
+        past_windows=(1, 4, 8)) -> List[Dict]:
+    rows = []
+    for name in workload_names:
+        w = WORKLOADS[name]
+        for pw in past_windows:
+            for baseline in (False, True):
+                rows.append(run_one(w, baseline, pw))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,83 @@
+"""Q2 (paper Figs. 3-5): AION's ingestion/processing-rate overhead vs the
+in-memory baseline when everything fits in memory."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.base import AionConfig
+from repro.configs.workloads import WORKLOADS
+from repro.core import (
+    EngineOOM, InMemoryPolicy, StreamEngine, TumblingWindows,
+)
+from repro.core.operators import make_operator
+from repro.core.triggers import DeltaTTrigger
+from repro.data.generators import make_generator
+
+EVENTS_PER_WM = 1500
+N_WATERMARKS = 8
+
+
+def run_one(workload, baseline: bool, include_late: bool) -> Dict:
+    gen = make_generator(workload, seed=3)
+    aion = AionConfig(block_size=1024)
+    kw = {}
+    if workload.operator == "stock":
+        kw = {"num_keys": workload.num_keys}
+    elif workload.operator == "lrb":
+        kw = {"num_segments": workload.num_keys}
+    elif workload.operator == "bigrams":
+        kw = {"vocab": 64}
+    op = make_operator(workload.operator, aion.block_size, gen.width, **kw)
+    eng = StreamEngine(
+        assigner=TumblingWindows(workload.window_duration),
+        operator=op, aion=aion, value_width=gen.width,
+        device_budget_bytes=512 << 20,       # fits fully in memory (Q2)
+        policy=InMemoryPolicy() if baseline else None,
+        trigger=DeltaTTrigger(executions=1),
+    )
+    wd = workload.window_duration
+    now = 4 * wd
+    ingested = 0
+    # warmup
+    eng.ingest(gen.batch(200, now), now)
+    eng.advance_watermark(now, now)
+    t0 = time.time()
+    for _ in range(N_WATERMARKS):
+        batch = gen.batch(EVENTS_PER_WM, now)
+        if not include_late:
+            batch = batch.select(batch.timestamps >= now - wd)
+        eng.ingest(batch, now)
+        ingested += len(batch)
+        eng.advance_watermark(now, now)
+        eng.poll(now)
+        now += wd
+    eng.io.drain()
+    dt = time.time() - t0
+    eng.close()
+    return {
+        "workload": workload.name,
+        "backend": "baseline" if baseline else "aion",
+        "late_included": include_late,
+        "events_per_sec": ingested / dt,
+        "processed_windows": eng.metrics.live_executions
+        + eng.metrics.late_executions,
+        "fetch_stall_s": round(eng.metrics.fetch_stall_seconds, 4),
+    }
+
+
+def run(workload_names=("average", "bigrams", "stock_market", "lrb")
+        ) -> List[Dict]:
+    rows = []
+    for name in workload_names:
+        for include_late in (False, True):
+            for baseline in (False, True):
+                rows.append(run_one(WORKLOADS[name], baseline, include_late))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

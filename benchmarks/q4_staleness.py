@@ -1,0 +1,73 @@
+"""Q4 (paper Fig. 9): staleness-minimizing trigger vs deltat/deltaev.
+
+Left: max staleness vs number of executions under log-normal lateness.
+Right: minimum executions to reach bounds {0.1, 0.05, 0.01} across the
+four lateness distributions {lnorm, unif, norm, bursts}.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.staleness import (
+    deltaev_times, deltat_times, executions_for_bound, max_staleness_of,
+    minimize_max_staleness,
+)
+from repro.data.generators import lateness_delays
+
+T = 100.0
+N = 20000
+
+
+def staleness_vs_executions(dist: str = "lnorm",
+                            ks=(2, 4, 8, 16, 20)) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    delays = lateness_delays(dist, N, T, rng)
+    rows = []
+    for k in ks:
+        rows.append({
+            "dist": dist, "k": k,
+            "aion": minimize_max_staleness(delays, T, k).max_staleness,
+            "deltat": max_staleness_of(deltat_times(T, k), delays, T),
+            "deltaev": max_staleness_of(deltaev_times(delays, T, k),
+                                        delays, T),
+        })
+    return rows
+
+
+def executions_for_bounds(bounds=(0.1, 0.05, 0.01),
+                          dists=("lnorm", "unif", "norm", "bursts"),
+                          k_max: int = 40) -> List[Dict]:
+    rng = np.random.default_rng(1)
+    rows = []
+    for dist in dists:
+        delays = lateness_delays(dist, N, T, rng)
+        for bound in bounds:
+            rows.append({
+                "dist": dist, "bound": bound,
+                "aion": executions_for_bound(
+                    lambda k: minimize_max_staleness(delays, T, k).times,
+                    delays, T, bound, k_max),
+                "deltat": executions_for_bound(
+                    lambda k: deltat_times(T, k), delays, T, bound, k_max),
+                "deltaev": executions_for_bound(
+                    lambda k: deltaev_times(delays, T, k), delays, T, bound,
+                    k_max),
+            })
+    return rows
+
+
+def run() -> Dict[str, List[Dict]]:
+    return {
+        "staleness_vs_executions": staleness_vs_executions(),
+        "executions_for_bounds": executions_for_bounds(),
+    }
+
+
+if __name__ == "__main__":
+    out = run()
+    for section, rows in out.items():
+        print(f"== {section}")
+        for r in rows:
+            print(r)

@@ -1,0 +1,125 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) cell.
+
+Reads the dry-run records (memory analysis + collective schedule from the
+compiled HLO) and joins them with the analytic cost model
+(``benchmarks.analytic`` — see its docstring for why HLO FLOPs cannot be
+used directly with while-loops). Emits ``experiments/roofline.json`` and a
+markdown table for EXPERIMENTS.md.
+
+Memory-fit note: CPU jax does not implement buffer donation, so decode
+temp double-counts the donated cache; projected TPU usage subtracts the
+two un-aliased cache copies (documented per cell as ``projected_hbm``).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from benchmarks.analytic import (
+    HBM_BW, ICI_BW, ICI_LINKS, PEAK_FLOPS, cell_costs, roofline_terms,
+)
+from repro.configs import ARCHS, SHAPES_BY_NAME
+from repro.configs.base import MULTI_POD_MESH, SINGLE_POD_MESH
+from repro.distributed import sharding as shd
+from repro.train.train_step import choose_microbatches, choose_remat_group
+
+DRYRUN_DIR = Path("experiments/dryrun")
+OUT_JSON = Path("experiments/roofline.json")
+
+HBM_PER_CHIP = 16 << 30
+
+ADVICE = {
+    "compute": ("cut executed FLOPs: recover the 2x causal-masking waste in "
+                "blocked attention, or drop a remat level"),
+    "memory": ("cut HBM traffic: fuse weight streams (larger µbatch), "
+               "quantize the KV cache, or shard the dominant resident "
+               "buffer further"),
+    "collective": ("cut collective bytes: overlap FSDP gathers with compute,"
+                   " compress cross-pod gradients, or move TP psums to "
+                   "reduce-scatter form"),
+}
+
+
+def analyze_cell(rec: Dict) -> Optional[Dict]:
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = ARCHS[arch]
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = MULTI_POD_MESH if "pod" in rec["mesh"]["axes"] else SINGLE_POD_MESH
+    profile = shd.sharding_profile(cfg, mesh, shape.global_batch,
+                                   shape.seq_len, shape.kind)
+    mu = rec.get("profile", {}).get("num_microbatches", 1)
+    rg = rec.get("profile", {}).get("remat_group", 0)
+    costs = cell_costs(cfg, shape, mesh, profile, mu=mu, remat_group=rg,
+                       variant=rec.get("variant") or {})
+    terms = roofline_terms(costs)
+
+    ma = rec.get("memory_analysis", {})
+    args_b = ma.get("argument_size_in_bytes", 0)
+    temp_b = ma.get("temp_size_in_bytes", 0)
+    cache_b = rec.get("cache_bytes_per_device", 0)
+    state_b = rec.get("state_bytes_per_device", 0)
+    if shape.kind == "decode":
+        # donated cache appears twice un-aliased on the CPU backend
+        projected = args_b + temp_b - 2 * cache_b
+    elif shape.kind == "train":
+        # donated TrainState aliases in/out on TPU; CPU counts a copy
+        projected = args_b + temp_b - state_b
+    else:
+        projected = args_b + temp_b
+    model_flops = 6 * cfg.active_param_count() * shape.global_batch * (
+        1 if shape.kind == "decode" else shape.seq_len)
+    hlo_exec = costs.flops_per_device * rec["chips"]
+    return {
+        "cell": f"{rec['mesh']['axes'] and ('multi' if 'pod' in rec['mesh']['axes'] else 'single')}__{arch}__{shape_name}",
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if "pod" in rec["mesh"]["axes"] else "single",
+        "chips": rec["chips"], "kind": shape.kind,
+        "compute_s": terms["compute_s"],
+        "memory_s": terms["memory_s"],
+        "collective_s": terms["collective_s"],
+        "dominant": terms["dominant"],
+        "roofline_fraction": terms["roofline_fraction"],
+        "model_flops": model_flops,
+        "executed_flops": hlo_exec,
+        "model_over_executed": model_flops / hlo_exec if hlo_exec else 0,
+        "projected_hbm_bytes": projected,
+        "fits_hbm": projected <= HBM_PER_CHIP,
+        "hlo_collectives": rec.get("collectives", {}),
+        "analytic_collective_bytes": costs.coll_bytes_per_device,
+        "mu": mu, "remat_group": rg,
+        "profile_notes": rec.get("profile", {}).get("notes", []),
+        "advice": ADVICE[terms["dominant"]],
+    }
+
+
+def main(dryrun_dir: Path = DRYRUN_DIR, out: Path = OUT_JSON,
+         quiet: bool = False) -> List[Dict]:
+    rows = []
+    for f in sorted(dryrun_dir.glob("*.json")):
+        if f.name == "skipped.json":
+            continue
+        rec = json.loads(f.read_text())
+        if "error" in rec:
+            continue
+        row = analyze_cell(rec)
+        if row:
+            rows.append(row)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rows, indent=2))
+    if not quiet:
+        hdr = (f"{'cell':55s} {'dom':10s} {'comp(ms)':>9s} {'mem(ms)':>9s} "
+               f"{'coll(ms)':>9s} {'RL-frac':>8s} {'fits':>5s}")
+        print(hdr)
+        for r in sorted(rows, key=lambda r: (r['mesh'], r['arch'],
+                                             r['shape'])):
+            print(f"{r['mesh']+'__'+r['arch']+'__'+r['shape']:55s} "
+                  f"{r['dominant']:10s} {r['compute_s']*1e3:9.3f} "
+                  f"{r['memory_s']*1e3:9.3f} {r['collective_s']*1e3:9.3f} "
+                  f"{r['roofline_fraction']:8.3f} "
+                  f"{'y' if r['fits_hbm'] else 'N':>5s}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

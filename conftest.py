@@ -1,0 +1,6 @@
+# Ensure the repo root (for `import benchmarks`) is importable regardless
+# of whether tests run via `pytest` or `python -m pytest`.
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

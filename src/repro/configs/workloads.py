@@ -1,0 +1,55 @@
+"""The paper's own evaluation workloads (Table 1) as engine configs.
+
+Four scenarios: two micro-benchmarks (*average*, *bigrams*) and two
+applications (*stock market*, *LRB*). Parameters follow Table 1 verbatim;
+payload bytes become the event value width so memory pressure is comparable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class WorkloadConfig:
+    name: str
+    max_ingestion_rate: int      # events/s (Table 1)
+    window_duration: float       # seconds (Table 1)
+    payload_bytes: int           # Table 1
+    # which windowed operator the engine runs
+    operator: str                # 'average' | 'bigrams' | 'stock' | 'lrb'
+    # value width in float32 lanes derived from payload size
+    value_width: int = 0
+    blocking: bool = False       # §3.3: blocking ops need full window resident
+    num_keys: int = 64           # key cardinality (stocks / road segments)
+
+    def resolved_value_width(self) -> int:
+        if self.value_width:
+            return self.value_width
+        return max(self.payload_bytes // 4, 1)
+
+
+AVERAGE = WorkloadConfig(
+    name="average", max_ingestion_rate=10_000, window_duration=20.0,
+    payload_bytes=2304, operator="average", num_keys=1,
+)
+BIGRAMS = WorkloadConfig(
+    name="bigrams", max_ingestion_rate=5_000, window_duration=30.0,
+    payload_bytes=3584, operator="bigrams", num_keys=1,
+)
+STOCK_MARKET = WorkloadConfig(
+    name="stock_market", max_ingestion_rate=10_000, window_duration=30.0,
+    payload_bytes=1664, operator="stock", num_keys=128,
+)
+LRB = WorkloadConfig(
+    name="lrb", max_ingestion_rate=10_000, window_duration=60.0,
+    payload_bytes=1536, operator="lrb", num_keys=256,
+)
+
+WORKLOADS = {w.name: w for w in (AVERAGE, BIGRAMS, STOCK_MARKET, LRB)}
+
+
+def get_workload(name: str) -> WorkloadConfig:
+    if name not in WORKLOADS:
+        raise KeyError(f"unknown workload {name!r}; known: {sorted(WORKLOADS)}")
+    return WORKLOADS[name]

@@ -1,0 +1,32 @@
+from repro.core.buckets import Block, MemoryBudget, Tier, WindowState
+from repro.core.cleanup import LatenessHistogram, PredictiveCleanup
+from repro.core.engine import StreamEngine
+from repro.core.events import EventBatch
+from repro.core.operators import make_operator
+from repro.core.policies import (
+    EngineOOM, GlobalMemoryPolicy, InMemoryPolicy, LocalRhoMinPolicy,
+    StandardPolicy,
+)
+from repro.core.proactive import PrestageScheduler, StagingCostModel
+from repro.core.staging import IOScheduler
+from repro.core.staleness import (
+    deltaev_times, deltat_times, executions_for_bound,
+    max_staleness_of, minimize_max_staleness,
+)
+from repro.core.time import PeriodicWatermarkGenerator, WatermarkTracker
+from repro.core.triggers import AionStalenessTrigger, DeltaEvTrigger, DeltaTTrigger
+from repro.core.windows import (
+    CountWindows, SessionWindows, SlidingWindows, TumblingWindows, WindowId,
+)
+
+__all__ = [
+    "Block", "MemoryBudget", "Tier", "WindowState",
+    "LatenessHistogram", "PredictiveCleanup", "StreamEngine", "EventBatch",
+    "make_operator", "EngineOOM", "GlobalMemoryPolicy", "InMemoryPolicy",
+    "LocalRhoMinPolicy", "StandardPolicy", "PrestageScheduler",
+    "StagingCostModel", "IOScheduler", "deltaev_times", "deltat_times",
+    "executions_for_bound", "max_staleness_of", "minimize_max_staleness",
+    "PeriodicWatermarkGenerator", "WatermarkTracker", "AionStalenessTrigger",
+    "DeltaEvTrigger", "DeltaTTrigger", "CountWindows", "SessionWindows",
+    "SlidingWindows", "TumblingWindows", "WindowId",
+]

@@ -1,0 +1,206 @@
+"""Two-tier bucket state (paper §3.1): m-bucket in device memory (HBM
+analogue), p-bucket in host memory with spill to storage files.
+
+TPU adaptation: Flink's per-record ListState becomes *block-granular*
+state — events append into fixed-capacity SoA blocks; a window's state is
+an ordered list of blocks, each resident in exactly one tier:
+
+    DEVICE  (m-bucket)  — jax arrays, counted against an HBM budget
+    HOST    (p-bucket)  — pinned numpy arrays
+    STORAGE (p-bucket)  — .npz spill files (HDD/SSD/NAS analogue)
+
+Blocks move between tiers only through ``core.staging`` (the single
+prioritized I/O executor), never synchronously inside operator execution —
+that asynchrony is what lets proactive caching mask transfer latency.
+"""
+from __future__ import annotations
+
+import enum
+import os
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.events import EventBatch
+
+
+class Tier(enum.Enum):
+    DEVICE = "device"
+    HOST = "host"
+    STORAGE = "storage"
+
+
+_BLOCK_IDS = iter(range(1, 1 << 62))
+
+
+@dataclass
+class Block:
+    """Fixed-capacity SoA block. Exactly one of (host_data, device_data,
+    storage_path) is the authoritative copy, per ``tier``."""
+    capacity: int
+    width: int
+    block_id: int = field(default_factory=lambda: next(_BLOCK_IDS))
+    fill: int = 0
+    tier: Tier = Tier.HOST
+    persisted: bool = False      # has touched the persistent tier (p-bucket)
+    host_data: Optional[Dict[str, np.ndarray]] = None
+    device_data: Optional[Dict[str, object]] = None
+    storage_path: Optional[Path] = None
+
+    @staticmethod
+    def new(capacity: int, width: int) -> "Block":
+        b = Block(capacity=capacity, width=width)
+        b.host_data = {
+            "keys": np.zeros((capacity,), np.int32),
+            "timestamps": np.zeros((capacity,), np.float64),
+            "values": np.zeros((capacity, width), np.float32),
+        }
+        return b
+
+    @property
+    def nbytes(self) -> int:
+        per_event = 4 + 8 + 4 * self.width
+        return self.capacity * per_event
+
+    @property
+    def full(self) -> bool:
+        return self.fill >= self.capacity
+
+    def append(self, batch: EventBatch, start: int) -> int:
+        """Copy events from batch[start:] into free space; returns #taken.
+        Only valid on HOST tier (ingest path writes host-side)."""
+        assert self.tier == Tier.HOST and self.host_data is not None
+        take = min(self.capacity - self.fill, len(batch) - start)
+        if take <= 0:
+            return 0
+        sl = slice(self.fill, self.fill + take)
+        self.host_data["keys"][sl] = batch.keys[start:start + take]
+        self.host_data["timestamps"][sl] = batch.timestamps[start:start + take]
+        self.host_data["values"][sl] = batch.values[start:start + take]
+        self.fill += take
+        return take
+
+    def as_event_batch(self) -> EventBatch:
+        """Host view of valid events (host or storage tier)."""
+        if self.tier == Tier.STORAGE:
+            self._load_from_storage()
+        assert self.host_data is not None
+        return EventBatch(self.host_data["keys"][:self.fill],
+                          self.host_data["timestamps"][:self.fill],
+                          self.host_data["values"][:self.fill])
+
+    def _load_from_storage(self) -> None:
+        assert self.storage_path is not None
+        with np.load(self.storage_path) as z:
+            self.host_data = {k: z[k] for k in ("keys", "timestamps", "values")}
+        self.tier = Tier.HOST
+
+    def spill_to_storage(self, directory: Path) -> None:
+        assert self.tier == Tier.HOST and self.host_data is not None
+        directory.mkdir(parents=True, exist_ok=True)
+        path = directory / f"block_{self.block_id}.npz"
+        np.savez(path, **self.host_data)
+        self.storage_path = path
+        self.host_data = None
+        self.tier = Tier.STORAGE
+
+    def drop(self) -> None:
+        """Free all copies (predictive cleanup)."""
+        self.host_data = None
+        self.device_data = None
+        if self.storage_path is not None and self.storage_path.exists():
+            os.unlink(self.storage_path)
+        self.storage_path = None
+
+
+class MemoryBudget:
+    """Byte accounting for the device (m-bucket) tier."""
+
+    def __init__(self, capacity_bytes: int):
+        self.capacity_bytes = int(capacity_bytes)
+        self.used_bytes = 0
+        self._lock = threading.Lock()
+        self.peak_bytes = 0
+
+    def try_reserve(self, n: int) -> bool:
+        with self._lock:
+            if self.used_bytes + n > self.capacity_bytes:
+                return False
+            self.used_bytes += n
+            self.peak_bytes = max(self.peak_bytes, self.used_bytes)
+            return True
+
+    def release(self, n: int) -> None:
+        with self._lock:
+            self.used_bytes = max(self.used_bytes - n, 0)
+
+    @property
+    def utilization(self) -> float:
+        return self.used_bytes / max(self.capacity_bytes, 1)
+
+
+@dataclass
+class WindowState:
+    """State of one window: ordered blocks split across tiers (Figure 1).
+
+    ``m_blocks``/``p_blocks`` partition ``blocks`` by tier; order inside
+    ``blocks`` is append order (event order within a block is arrival
+    order, which event-time operators re-sort as needed)."""
+    window_start: float
+    window_end: float
+    width: int
+    block_capacity: int
+    blocks: List[Block] = field(default_factory=list)
+    total_events: int = 0
+    late_events: int = 0
+    expired: bool = False          # watermark passed window end
+    rho_min_blocks: int = 0        # bootstrap set size (policy §3.2)
+    last_executed_at: float = -np.inf
+    events_at_last_exec: int = 0
+    result: Optional[object] = None
+
+    def m_blocks(self) -> List[Block]:
+        return [b for b in self.blocks if b.tier == Tier.DEVICE]
+
+    def p_blocks(self) -> List[Block]:
+        return [b for b in self.blocks if b.tier != Tier.DEVICE]
+
+    def device_bytes(self) -> int:
+        return sum(b.nbytes for b in self.m_blocks())
+
+    def host_bytes(self) -> int:
+        return sum(b.nbytes for b in self.blocks if b.tier == Tier.HOST)
+
+    def append_events(self, batch: EventBatch, late: bool) -> List[Block]:
+        """Append host-side; returns blocks newly created. Tier placement
+        (device vs host) is decided by the policy/staging layer."""
+        new_blocks: List[Block] = []
+        start = 0
+        # fill the last block if it has room and is host-resident
+        if self.blocks and not self.blocks[-1].full \
+                and self.blocks[-1].tier == Tier.HOST:
+            start += self.blocks[-1].append(batch, start)
+        while start < len(batch):
+            blk = Block.new(self.block_capacity, self.width)
+            taken = blk.append(batch, start)
+            start += taken
+            self.blocks.append(blk)
+            new_blocks.append(blk)
+        self.total_events += len(batch)
+        if late:
+            self.late_events += len(batch)
+        return new_blocks
+
+    def events_since_last_exec(self) -> int:
+        return self.total_events - self.events_at_last_exec
+
+    def drop_all(self) -> int:
+        """Predictive cleanup: free every copy. Returns bytes freed."""
+        freed = sum(b.nbytes for b in self.blocks)
+        for b in self.blocks:
+            b.drop()
+        self.blocks.clear()
+        return freed

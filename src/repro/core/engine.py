@@ -1,0 +1,375 @@
+"""The AION streaming engine (paper §3): event-time windows whose state
+lives across memory tiers, with proactive caching, predictive cleanup, and
+staleness-driven re-execution of past windows.
+
+Control flow (host-side orchestration; operator folds are jit-compiled):
+
+  ingest(batch, now)      assign -> append (policy places blocks) ->
+                          late events feed cleanup histogram + re-exec plans
+  advance_watermark(wm)   expire windows -> live execution -> destage
+  poll(now)               due pre-staging -> due late re-executions (lower
+                          priority than live work) -> predictive cleanup ->
+                          global-policy pressure tick
+
+Live executions always run before late re-executions (the paper's priority
+rule); window re-execution is a pure function of bucket contents, which is
+what makes straggler backup execution idempotent (distributed/fault.py).
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import AionConfig
+from repro.core.buckets import MemoryBudget, Tier, WindowState
+from repro.core.cleanup import PredictiveCleanup
+from repro.core.events import EventBatch
+from repro.core.operators import WindowOperator
+from repro.core.policies import (
+    EngineOOM, InMemoryPolicy, StandardPolicy, TransferPolicy,
+)
+from repro.core.proactive import PrestageScheduler, StagingCostModel
+from repro.core.staging import IOScheduler
+from repro.core.time import PeriodicWatermarkGenerator, WatermarkTracker
+from repro.core.triggers import AionStalenessTrigger, Trigger
+from repro.core.windows import WindowAssigner, WindowId
+
+
+@dataclass
+class EngineMetrics:
+    ingested: int = 0
+    ingested_late: int = 0
+    dropped: int = 0
+    live_executions: int = 0
+    late_executions: int = 0
+    purged_windows: int = 0
+    purged_bytes: int = 0
+    fetch_stall_seconds: float = 0.0
+    exec_seconds: float = 0.0
+    device_bytes_series: List[Tuple[float, int]] = field(default_factory=list)
+    host_bytes_series: List[Tuple[float, int]] = field(default_factory=list)
+
+    def snapshot(self, now: float, device_bytes: int, host_bytes: int):
+        self.device_bytes_series.append((now, device_bytes))
+        self.host_bytes_series.append((now, host_bytes))
+
+
+@dataclass
+class _ReexecPlan:
+    times: List[float]          # absolute processing times
+    next_idx: int = 0
+
+
+class StreamEngine:
+    def __init__(self, *,
+                 assigner: WindowAssigner,
+                 operator: WindowOperator,
+                 aion: Optional[AionConfig] = None,
+                 value_width: int = 1,
+                 policy: Optional[TransferPolicy] = None,
+                 trigger: Optional[Trigger] = None,
+                 cleanup: Optional[PredictiveCleanup] = None,
+                 watermark_gen: Optional[PeriodicWatermarkGenerator] = None,
+                 device_budget_bytes: int = 1 << 30,
+                 spill_dir: Optional[Path] = None,
+                 host_budget_bytes: Optional[int] = None,
+                 prestage_enabled: bool = True,
+                 sequential_io: bool = True,
+                 chunk_blocks: int = 4,
+                 punctuated: bool = False,
+                 simulated_seconds_per_byte: float = 0.0):
+        self.aion = aion or AionConfig()
+        self.assigner = assigner
+        self.operator = operator
+        self.value_width = value_width
+        self.budget = MemoryBudget(device_budget_bytes)
+        self.io = IOScheduler(
+            self.budget, sequential_io=sequential_io,
+            chunk_blocks=chunk_blocks, spill_dir=spill_dir,
+            host_budget_bytes=host_budget_bytes,
+            simulated_seconds_per_byte=simulated_seconds_per_byte)
+        self.policy = policy or StandardPolicy()
+        self.cleanup = cleanup or PredictiveCleanup(
+            coverage=self.aion.cleanup_coverage,
+            confidence=self.aion.cleanup_confidence)
+        self.trigger = trigger or AionStalenessTrigger(
+            cleanup=self.cleanup, max_staleness=self.aion.max_staleness)
+        self.watermark_gen = watermark_gen
+        self.tracker = WatermarkTracker()
+        self.prestage_enabled = prestage_enabled
+        self.prestage = PrestageScheduler(StagingCostModel(),
+                                          punctuated=punctuated)
+        # pre-stage lead time floor: a quarter of the watermark period
+        # (the paper starts the first pre-staging a full window early)
+        self.prestage_margin = 0.25 * (
+            watermark_gen.period if watermark_gen is not None
+            else self.aion.watermark_period)
+        self.windows: Dict[WindowId, WindowState] = {}
+        self.reexec_plans: Dict[WindowId, _ReexecPlan] = {}
+        self.metrics = EngineMetrics()
+        self.results: Dict[WindowId, Any] = {}
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def is_baseline(self) -> bool:
+        return isinstance(self.policy, InMemoryPolicy)
+
+    def _state_for(self, wid: WindowId) -> WindowState:
+        st = self.windows.get(wid)
+        if st is None:
+            st = WindowState(wid.start, wid.end, self.value_width,
+                             self.aion.block_size)
+            self.windows[wid] = st
+        return st
+
+    def device_bytes(self) -> int:
+        return self.budget.used_bytes
+
+    def host_bytes(self) -> int:
+        return sum(s.host_bytes() for s in self.windows.values())
+
+    # -------------------------------------------------------------- ingest
+    def ingest(self, batch: EventBatch, now: float) -> None:
+        if len(batch) == 0:
+            return
+        if self.watermark_gen is not None:
+            self.watermark_gen.observe(batch.timestamps)
+        wm = self.tracker.watermark
+        late_mask = batch.timestamps < wm
+        lateness = wm - batch.timestamps[late_mask]
+        if len(lateness):
+            self.cleanup.observe(lateness)
+        self.metrics.ingested += len(batch)
+        self.metrics.ingested_late += int(late_mask.sum())
+
+        for wid, idx in self.assigner.assign(batch.timestamps):
+            sub = batch.select(np.isin(np.arange(len(batch)), idx)) \
+                if len(idx) != len(batch) else batch
+            state = self._state_for(wid)
+            late = wid.end <= wm
+            if late and state.result is None and state.expired is False \
+                    and wid not in self.windows:
+                pass
+            new_blocks = state.append_events(sub, late)
+            self.policy.on_append(state, new_blocks, self.io, late, now)
+            if late:
+                self.io.request_late_write(state, new_blocks)
+                self._plan_reexecutions(wid, state, now)
+                if self.prestage_enabled:
+                    plan = self.reexec_plans.get(wid)
+                    if plan and plan.next_idx < len(plan.times):
+                        self.prestage.plan(wid, state,
+                                           plan.times[plan.next_idx], now,
+                                           self.prestage_margin)
+
+        if self.watermark_gen is not None:
+            wm_new = self.watermark_gen.maybe_emit(now)
+            if wm_new is not None:
+                self.advance_watermark(wm_new, now)
+
+    def _plan_reexecutions(self, wid: WindowId, state: WindowState,
+                           now: float) -> None:
+        if wid in self.reexec_plans and \
+                self.reexec_plans[wid].next_idx < len(self.reexec_plans[wid].times):
+            return
+        horizon = max(self.cleanup.current_bound(), 1e-6)
+        offsets = np.asarray(self.trigger.plan(horizon), np.float64)
+        expiry_time = state.last_executed_at if np.isfinite(
+            state.last_executed_at) else now
+        times = [max(expiry_time + o, now) for o in offsets if
+                 expiry_time + o > now - 1e-9]
+        if not times:
+            times = [now]
+        self.reexec_plans[wid] = _ReexecPlan(times=times)
+
+    # ----------------------------------------------------------- watermark
+    def advance_watermark(self, wm: float, now: float) -> None:
+        if not self.tracker.advance(wm):
+            return
+        for wid in sorted(self.windows):
+            state = self.windows[wid]
+            if not state.expired and wid.end <= wm:
+                state.expired = True
+                self.execute_window(wid, now, late=False)
+                self.policy.on_expiry(state, self.io, now)
+
+    # ----------------------------------------------------------- execution
+    def execute_window(self, wid: WindowId, now: float, late: bool) -> Any:
+        state = self.windows[wid]
+        t0 = _time.time()
+        stall = 0.0
+
+        # lazy block iteration: consume m-blocks while staging p-blocks.
+        # Snapshot BOTH lists atomically before issuing the staging request
+        # — otherwise the IO thread can move a block device-side between the
+        # two snapshots and it would be folded twice.
+        m_snapshot = state.m_blocks()
+        p_blocks = [b for b in state.blocks
+                    if id(b) not in {id(x) for x in m_snapshot}]
+        stage_done = None
+        stage_t0 = _time.time()
+        staged_events = sum(b.fill for b in p_blocks)
+        if p_blocks:
+            if self.operator.blocking:
+                ev = self.io.request_stage(state, p_blocks, demand=True)
+                w0 = _time.time()
+                ev.wait(timeout=60)
+                stall += _time.time() - w0
+            else:
+                stage_done = self.io.request_stage(state, p_blocks,
+                                                   demand=True)
+
+        acc = self.operator.init_acc()
+        # pass 1: blocks already on device
+        for blk in m_snapshot:
+            if blk.device_data is not None:
+                acc = self.operator.fold(acc, blk.device_data, blk.fill)
+            else:
+                data = blk.as_event_batch()
+                acc = self.operator.fold(
+                    acc, {"keys": data.keys, "timestamps": data.timestamps,
+                          "values": data.values}, blk.fill)
+        # pass 2: blocks arriving from the p-bucket
+        if stage_done is not None:
+            w0 = _time.time()
+            stage_done.wait(timeout=60)
+            stall += max(_time.time() - w0 - 0.0, 0.0)
+        for blk in p_blocks:
+            if blk.device_data is not None:
+                acc = self.operator.fold(acc, blk.device_data, blk.fill)
+            else:
+                # staging could not reserve budget: fold host-side copy
+                data = blk.as_event_batch()
+                acc = self.operator.fold(
+                    acc, {"keys": data.keys, "timestamps": data.timestamps,
+                          "values": data.values}, blk.fill)
+        if p_blocks and staged_events:
+            self.prestage.cost.observe(_time.time() - stage_t0,
+                                       staged_events)
+
+        result = self.operator.finalize(acc)
+        state.result = result
+        self.results[wid] = result
+        state.last_executed_at = now
+        state.events_at_last_exec = state.total_events
+        self.metrics.fetch_stall_seconds += stall
+        self.metrics.exec_seconds += _time.time() - t0
+        if late:
+            self.metrics.late_executions += 1
+        else:
+            self.metrics.live_executions += 1
+        # keep the m-bucket resident if another re-execution is imminent
+        # (avoids destage/restage thrash between planned executions)
+        plan = self.reexec_plans.get(wid)
+        next_soon = (plan is not None
+                     and plan.next_idx + 1 < len(plan.times)
+                     and plan.times[plan.next_idx + 1] - now
+                     <= 2 * self.prestage_margin)
+        if not next_soon:
+            self.policy.on_post_execute(state, self.io, now)
+        return result
+
+    # ----------------------------------------------------------------- poll
+    def poll(self, now: float) -> None:
+        # 1. due late re-executions first (their demand staging outranks the
+        #    speculative pre-staging issued below; live execution in
+        #    advance_watermark always went before either)
+        for wid, plan in list(self.reexec_plans.items()):
+            state = self.windows.get(wid)
+            if state is None:
+                del self.reexec_plans[wid]
+                continue
+            while plan.next_idx < len(plan.times) and \
+                    plan.times[plan.next_idx] <= now:
+                self.execute_window(wid, now, late=True)
+                plan.next_idx += 1
+                if self.prestage_enabled and plan.next_idx < len(plan.times):
+                    self.prestage.plan(wid, state,
+                                       plan.times[plan.next_idx], now,
+                                       self.prestage_margin)
+        # 2. due pre-staging (for future re-executions)
+        if self.prestage_enabled:
+            for wid in self.prestage.due(now):
+                state = self.windows.get(wid)
+                if state is not None and state.p_blocks():
+                    self.io.request_stage(state)
+        # 3. predictive cleanup
+        wm = self.tracker.watermark
+        if np.isfinite(wm):
+            for wid in list(self.windows):
+                state = self.windows[wid]
+                if state.expired and self.cleanup.should_purge(wid.end, wm):
+                    freed = state.drop_all()
+                    for b in state.m_blocks():
+                        self.budget.release(b.nbytes)
+                    self.metrics.purged_windows += 1
+                    self.metrics.purged_bytes += freed
+                    self.prestage.cancel(wid)
+                    self.reexec_plans.pop(wid, None)
+                    del self.windows[wid]
+        # 4. policy tick (idle destaging / memory-pressure handling)
+        self.policy.on_tick(self.windows, self.io, now)
+        self.metrics.snapshot(now, self.device_bytes(), self.host_bytes())
+
+    # ------------------------------------------------------------ shutdown
+    def close(self) -> None:
+        self.io.drain()
+        self.io.shutdown()
+
+    # -------------------------------------------------- engine checkpointing
+    def restore_state(self, snap: Dict[str, Any]) -> None:
+        """Restore from ``checkpoint_state()`` output: watermark, lateness
+        histogram, and window bucket contents (host tier; staging decisions
+        are re-made by the policies after restart)."""
+        import jax.numpy as _jnp
+        self.tracker.watermark = snap["watermark"]
+        self.cleanup.hist.counts = _jnp.asarray(
+            np.asarray(snap["hist_counts"], np.float32))
+        self.cleanup.hist.total = snap["hist_total"]
+        self.windows.clear()
+        for w in snap["windows"]:
+            wid = WindowId(w["start"], w["end"])
+            st = self._state_for(wid)
+            st.expired = w["expired"]
+            for b in w["blocks"]:
+                data = b["data"]
+                if not data or b["fill"] == 0:
+                    continue
+                batch = EventBatch(
+                    np.asarray(data["keys"], np.int32)[:b["fill"]],
+                    np.asarray(data["timestamps"])[:b["fill"]],
+                    np.asarray(data["values"], np.float32)[:b["fill"]])
+                st.append_events(batch, late=False)
+            st.total_events = w["total_events"]
+            st.late_events = w["late_events"]
+
+    def checkpoint_state(self) -> Dict[str, Any]:
+        """Serializable engine state for fault tolerance (bucket manifests,
+        watermark, lateness histogram, re-execution plans)."""
+        return {
+            "watermark": self.tracker.watermark,
+            "hist_counts": np.asarray(self.cleanup.hist.counts).tolist(),
+            "hist_total": self.cleanup.hist.total,
+            "windows": [
+                {
+                    "start": wid.start, "end": wid.end,
+                    "total_events": st.total_events,
+                    "late_events": st.late_events,
+                    "expired": st.expired,
+                    "blocks": [
+                        {"fill": b.fill, "tier": b.tier.value,
+                         "data": {k: v.tolist() for k, v in
+                                  (b.host_data or {}).items()}
+                         if b.tier != Tier.DEVICE else
+                         {k: np.asarray(v).tolist() for k, v in
+                          (b.device_data or {}).items()}}
+                        for b in st.blocks
+                    ],
+                }
+                for wid, st in self.windows.items()
+            ],
+        }

@@ -1,0 +1,241 @@
+"""Windowed operators: the paper's evaluation workloads as block folds.
+
+Operators consume window state *block by block* from the m-bucket (lazy
+iteration): non-blocking operators fold incrementally so compute overlaps
+staging; blocking operators (§3.3) must see the whole window before
+finalizing. Folds are jit-compiled over fixed block shapes.
+
+  average      non-blocking  mean of a stream of numbers
+  bigrams      non-blocking  co-occurrence counts over token payloads
+                             (2-3 orders more compute, like the paper)
+  stock        non-blocking  per-symbol rolling min/max/mean + 5% alerts
+  lrb          non-blocking  Linear Road: per-segment vehicle counts, avg
+                             speed, accident detection -> toll
+  percentile   BLOCKING      exact percentiles (needs the full window)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class WindowOperator:
+    name: str
+    blocking: bool
+    init_acc: Callable[[], Any]
+    fold: Callable[[Any, Dict[str, jnp.ndarray], jnp.ndarray], Any]
+    finalize: Callable[[Any], Any]
+
+    def run(self, blocks, fills) -> Any:
+        """Reference path: fold over (block_data, fill) pairs."""
+        acc = self.init_acc()
+        for data, fill in zip(blocks, fills):
+            acc = self.fold(acc, data, fill)
+        return self.finalize(acc)
+
+
+def _valid_mask(n: int, fill) -> jnp.ndarray:
+    return jnp.arange(n) < fill
+
+
+# ------------------------------------------------------------------ average
+
+def make_average(block_capacity: int, width: int) -> WindowOperator:
+    def init_acc():
+        return {"sum": jnp.zeros((), jnp.float32),
+                "count": jnp.zeros((), jnp.float32)}
+
+    @jax.jit
+    def fold(acc, data, fill):
+        mask = _valid_mask(data["values"].shape[0], fill)
+        v = jnp.where(mask, data["values"][:, 0], 0.0)
+        return {"sum": acc["sum"] + jnp.sum(v, dtype=jnp.float32),
+                "count": acc["count"] + jnp.sum(mask, dtype=jnp.float32)}
+
+    def finalize(acc):
+        return float(acc["sum"] / jnp.maximum(acc["count"], 1.0))
+
+    return WindowOperator("average", False, init_acc, fold, finalize)
+
+
+# ------------------------------------------------------------------ bigrams
+
+def make_bigrams(block_capacity: int, width: int,
+                 vocab: int = 256) -> WindowOperator:
+    """Token payloads: each event's value row is a mini-document of
+    ``width`` token ids; counts a dense [vocab, vocab] co-occurrence —
+    deliberately compute-heavy like the paper's bigrams workload."""
+
+    def init_acc():
+        return jnp.zeros((vocab, vocab), jnp.float32)
+
+    @jax.jit
+    def fold(acc, data, fill):
+        toks = jnp.abs(data["values"]).astype(jnp.int32) % vocab  # [n, w]
+        mask = _valid_mask(toks.shape[0], fill)[:, None]
+        a = jnp.where(mask[:, :1] & jnp.ones_like(toks[:, :-1], bool),
+                      toks[:, :-1], 0)
+        b = jnp.where(mask[:, :1] & jnp.ones_like(toks[:, 1:], bool),
+                      toks[:, 1:], 0)
+        onehot_a = jax.nn.one_hot(a, vocab, dtype=jnp.float32)   # [n,w-1,V]
+        onehot_b = jax.nn.one_hot(b, vocab, dtype=jnp.float32)
+        contrib = jnp.einsum("nwa,nwb->ab", onehot_a, onehot_b)
+        contrib = contrib * (jnp.sum(mask) > 0)
+        return acc + contrib
+
+    def finalize(acc):
+        return np.asarray(acc)
+
+    return WindowOperator("bigrams", False, init_acc, fold, finalize)
+
+
+# -------------------------------------------------------------------- stock
+
+def make_stock(block_capacity: int, width: int,
+               num_keys: int = 128,
+               use_kernel: bool = False) -> WindowOperator:
+    """Rolling per-symbol aggregates + price-warning alerts (>=5% swing).
+
+    ``use_kernel=True`` folds each block through the ``segment_aggregate``
+    Pallas kernel (interpret-mode on CPU, Mosaic on TPU) instead of the
+    jnp scatter path — the engine hot loop on the MXU."""
+
+    def init_acc():
+        return {
+            "min": jnp.full((num_keys,), jnp.inf, jnp.float32),
+            "max": jnp.full((num_keys,), -jnp.inf, jnp.float32),
+            "sum": jnp.zeros((num_keys,), jnp.float32),
+            "count": jnp.zeros((num_keys,), jnp.float32),
+        }
+
+    if use_kernel:
+        from repro.kernels import segment_aggregate
+
+        @jax.jit
+        def fold(acc, data, fill):
+            n = data["values"].shape[0]
+            mask = _valid_mask(n, fill)
+            keys = jnp.asarray(data["keys"], jnp.int32) % num_keys
+            out = segment_aggregate(
+                jnp.asarray(data["values"][:, :1], jnp.float32), keys,
+                num_keys, valid=mask)
+            return {
+                "min": jnp.minimum(acc["min"], out["min"][:, 0]),
+                "max": jnp.maximum(acc["max"], out["max"][:, 0]),
+                "sum": acc["sum"] + out["sum"][:, 0],
+                "count": acc["count"] + out["count"],
+            }
+    else:
+        @jax.jit
+        def fold(acc, data, fill):
+            n = data["values"].shape[0]
+            mask = _valid_mask(n, fill)
+            keys = jnp.where(mask, data["keys"], 0) % num_keys
+            price = data["values"][:, 0]
+            big = jnp.where(mask, price, -jnp.inf)
+            small = jnp.where(mask, price, jnp.inf)
+            return {
+                "min": acc["min"].at[keys].min(jnp.where(mask, small, jnp.inf)),
+                "max": acc["max"].at[keys].max(jnp.where(mask, big, -jnp.inf)),
+                "sum": acc["sum"].at[keys].add(jnp.where(mask, price, 0.0)),
+                "count": acc["count"].at[keys].add(mask.astype(jnp.float32)),
+            }
+
+    def finalize(acc):
+        mean = np.asarray(acc["sum"] / jnp.maximum(acc["count"], 1.0))
+        mx, mn = np.asarray(acc["max"]), np.asarray(acc["min"])
+        with np.errstate(invalid="ignore"):
+            alerts = (mx - mn) / np.where(mn > 0, mn, np.inf) >= 0.05
+        return {"mean": mean, "min": mn, "max": mx, "alerts": alerts}
+
+    return WindowOperator("stock", False, init_acc, fold, finalize)
+
+
+# ---------------------------------------------------------------------- lrb
+
+def make_lrb(block_capacity: int, width: int,
+             num_segments: int = 256) -> WindowOperator:
+    """Linear Road: values[:,0]=speed, values[:,1]=lane; per-segment vehicle
+    count + average speed + accident flag (stopped vehicles) -> toll."""
+
+    def init_acc():
+        return {
+            "count": jnp.zeros((num_segments,), jnp.float32),
+            "speed_sum": jnp.zeros((num_segments,), jnp.float32),
+            "stopped": jnp.zeros((num_segments,), jnp.float32),
+        }
+
+    @jax.jit
+    def fold(acc, data, fill):
+        n = data["values"].shape[0]
+        mask = _valid_mask(n, fill)
+        seg = jnp.where(mask, data["keys"], 0) % num_segments
+        speed = data["values"][:, 0]
+        stopped = mask & (speed <= 1e-3)
+        return {
+            "count": acc["count"].at[seg].add(mask.astype(jnp.float32)),
+            "speed_sum": acc["speed_sum"].at[seg].add(
+                jnp.where(mask, speed, 0.0)),
+            "stopped": acc["stopped"].at[seg].add(stopped.astype(jnp.float32)),
+        }
+
+    def finalize(acc):
+        count = np.asarray(acc["count"])
+        avg_speed = np.asarray(acc["speed_sum"]) / np.maximum(count, 1.0)
+        accident = np.asarray(acc["stopped"]) >= 2
+        base = 2.0
+        congestion = np.maximum(count - 50, 0.0)
+        toll = np.where(accident, 0.0, base * congestion ** 2 * 1e-4)
+        return {"count": count, "avg_speed": avg_speed,
+                "accident": accident, "toll": toll}
+
+    return WindowOperator("lrb", False, init_acc, fold, finalize)
+
+
+# --------------------------------------------------------------- percentile
+
+def make_percentile(block_capacity: int, width: int,
+                    qs=(0.5, 0.95, 0.99)) -> WindowOperator:
+    """BLOCKING operator (paper §3.3): the full window must be resident
+    before the percentiles can be computed."""
+
+    def init_acc():
+        return []
+
+    def fold(acc, data, fill):
+        # blocking: accumulate device blocks; compute happens in finalize
+        acc.append((data["values"][:, 0], fill))
+        return acc
+
+    def finalize(acc):
+        if not acc:
+            return {q: float("nan") for q in qs}
+        vals = jnp.concatenate([
+            jnp.where(_valid_mask(v.shape[0], f), v, jnp.nan)
+            for v, f in acc])
+        vals = vals[~jnp.isnan(vals)]
+        return {q: float(jnp.quantile(vals, q)) for q in qs}
+
+    return WindowOperator("percentile", True, init_acc, fold, finalize)
+
+
+OPERATORS = {
+    "average": make_average,
+    "bigrams": make_bigrams,
+    "stock": make_stock,
+    "lrb": make_lrb,
+    "percentile": make_percentile,
+}
+
+
+def make_operator(name: str, block_capacity: int, width: int,
+                  **kw) -> WindowOperator:
+    if name not in OPERATORS:
+        raise KeyError(f"unknown operator {name!r}")
+    return OPERATORS[name](block_capacity, width, **kw)

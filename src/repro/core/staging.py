@@ -1,0 +1,272 @@
+"""Staging/destaging: the single prioritized I/O executor (paper §4).
+
+All tier transfers flow through one executor thread that serializes and
+prioritizes requests: **staging (p->m) > late-event writes > destaging
+(m->p)** — staging data is needed imminently by an executing operator,
+while destaging is a background memory-saving activity. Destage operations
+are *preemptible at block granularity*: between blocks the executor yields
+to any queued higher-priority work (the paper's "interleaved" operations).
+
+TPU adaptation of the serialization ablations (§5 Q3):
+  * multithreaded JSON serialization  ->  chunked multi-buffer transfers
+    (``chunk_blocks`` blocks per DMA) vs one monolithic transfer
+  * single sequential I/O thread      ->  ``sequential_io=True`` (one
+    executor) vs a thread pool issuing transfers concurrently
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core.buckets import Block, MemoryBudget, Tier, WindowState
+
+PRIO_DEMAND_STAGE = -1    # staging an operator is *blocked on* right now
+PRIO_STAGE = 0            # proactive pre-staging
+PRIO_LATE_WRITE = 1
+PRIO_DESTAGE = 2
+
+
+@dataclass(order=True)
+class _Task:
+    priority: int
+    seq: int
+    fn: Callable = field(compare=False)
+    done: threading.Event = field(compare=False,
+                                  default_factory=threading.Event)
+
+
+class IOScheduler:
+    """Single-threaded prioritized transfer executor.
+
+    ``sequential_io=False`` reproduces the paper's *no-sqntl-io* ablation:
+    transfers are issued on a pool with no global ordering or priorities.
+    ``simulated_seconds_per_byte`` adds virtual I/O cost accounting so
+    benchmarks can model a slow persistent tier deterministically.
+    """
+
+    def __init__(self, budget: MemoryBudget, *, sequential_io: bool = True,
+                 chunk_blocks: int = 4, spill_dir: Optional[Path] = None,
+                 host_budget_bytes: Optional[int] = None,
+                 simulated_seconds_per_byte: float = 0.0):
+        self.budget = budget
+        self.sequential_io = sequential_io
+        self.chunk_blocks = max(chunk_blocks, 1)
+        self.spill_dir = spill_dir
+        self.host_budget_bytes = host_budget_bytes
+        self.sim_spb = simulated_seconds_per_byte
+        self._seq = itertools.count()
+        self._queue: List[_Task] = []
+        self._cv = threading.Condition()
+        self._stop = False
+        self.stats = {
+            "staged_blocks": 0, "destaged_blocks": 0, "late_write_blocks": 0,
+            "stage_seconds": 0.0, "destage_seconds": 0.0,
+            "stage_events": 0, "simulated_io_seconds": 0.0,
+            "preemptions": 0,
+        }
+        self._host_bytes = 0
+        self._host_lru: List[Block] = []      # spill candidates, cold first
+        self._sim_lock = threading.Lock()     # one persistent-tier channel
+        if sequential_io:
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+            self._pool = None
+        else:
+            self._thread = None
+            self._pool = ThreadPoolExecutor(max_workers=4)
+
+    # ------------------------------------------------------------- submit
+    def submit(self, priority: int, fn: Callable) -> threading.Event:
+        if self._pool is not None:                     # no-sqntl-io ablation
+            ev = threading.Event()
+
+            def wrap():
+                fn()
+                ev.set()
+            self._pool.submit(wrap)
+            return ev
+        task = _Task(priority, next(self._seq), fn)
+        with self._cv:
+            heapq.heappush(self._queue, task)
+            self._cv.notify()
+        return task.done
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait(timeout=0.1)
+                if self._stop and not self._queue:
+                    return
+                task = heapq.heappop(self._queue)
+            try:
+                task.fn()
+            except Exception:                      # never kill the executor
+                self.stats["errors"] = self.stats.get("errors", 0) + 1
+            finally:
+                task.done.set()
+
+    def has_higher_priority_pending(self, priority: int) -> bool:
+        with self._cv:
+            return bool(self._queue) and self._queue[0].priority < priority
+
+    def drain(self, timeout: float = 30.0) -> None:
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            with self._cv:
+                if not self._queue:
+                    return
+            time.sleep(0.001)
+
+    def shutdown(self) -> None:
+        self._stop = True
+        with self._cv:
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+    # ------------------------------------------------------------ transfers
+    def _simulate_io(self, nbytes: int) -> None:
+        """Model a slow persistent tier deterministically: the transfer
+        thread really sleeps, so scheduling (priorities, preemption,
+        pre-staging lead time) — not host noise — decides who stalls."""
+        if self.sim_spb > 0:
+            dt = nbytes * self.sim_spb
+            self.stats["simulated_io_seconds"] += dt
+            with self._sim_lock:              # single channel: threads queue
+                time.sleep(dt)
+
+    def stage_block_sync(self, block: Block) -> bool:
+        """p->m: move one block to device. Returns False if budget full."""
+        if block.tier == Tier.DEVICE:
+            return True
+        if not self.budget.try_reserve(block.nbytes):
+            return False
+        t0 = time.time()
+        if block.tier == Tier.STORAGE:
+            block.as_event_batch()                    # load from file
+            self._host_bytes += block.nbytes
+        if block.host_data is None:
+            # block was purged (predictive cleanup) while this stage request
+            # was queued — drop the reservation and skip
+            self.budget.release(block.nbytes)
+            return False
+        block.device_data = {
+            k: jax.device_put(v) for k, v in block.host_data.items()}
+        for v in block.device_data.values():
+            v.block_until_ready()
+        block.tier = Tier.DEVICE
+        if block.persisted:       # reads from the persistent tier pay I/O;
+            self._simulate_io(block.nbytes)   # fresh ingest is memory-direct
+        self.stats["staged_blocks"] += 1
+        self.stats["stage_events"] += block.fill
+        self.stats["stage_seconds"] += time.time() - t0
+        return True
+
+    def destage_block_sync(self, block: Block) -> None:
+        """m->p: move one block back to host (keeping the host copy is the
+        'serialization' step; device buffers are dropped afterwards)."""
+        if block.tier != Tier.DEVICE:
+            return
+        t0 = time.time()
+        if block.host_data is None and block.device_data is not None:
+            block.host_data = {
+                k: np.asarray(v) for k, v in block.device_data.items()}
+        block.device_data = None
+        block.tier = Tier.HOST
+        block.persisted = True
+        self._host_bytes += block.nbytes
+        self.budget.release(block.nbytes)
+        self._simulate_io(block.nbytes)
+        self.stats["destaged_blocks"] += 1
+        self.stats["destage_seconds"] += time.time() - t0
+        self.track_host_block(block)
+        self._maybe_spill()
+
+    def _maybe_spill(self) -> None:
+        """Enforce the host budget by spilling cold host blocks to storage
+        (the persistent-storage tier of the p-bucket). Candidates are
+        registered by ``track_host_block`` in destage order (oldest =
+        coldest first)."""
+        if self.host_budget_bytes is None or self.spill_dir is None:
+            return
+        while self._host_bytes > self.host_budget_bytes and self._host_lru:
+            blk = self._host_lru.pop(0)
+            if blk.tier == Tier.HOST:
+                self.spill_block_sync(blk)
+
+    def track_host_block(self, block: Block) -> None:
+        """Register a host-resident block as a spill candidate."""
+        if self.spill_dir is not None:
+            self._host_lru.append(block)
+
+    def spill_block_sync(self, block: Block) -> None:
+        if block.tier == Tier.HOST and self.spill_dir is not None:
+            nbytes = block.nbytes
+            block.spill_to_storage(self.spill_dir)
+            self._host_bytes = max(self._host_bytes - nbytes, 0)
+            self._simulate_io(nbytes)
+
+    # ------------------------------------------------------- bulk requests
+    def request_stage(self, window: WindowState,
+                      blocks: Optional[List[Block]] = None,
+                      demand: bool = False) -> threading.Event:
+        """Queue staging of a window's p-blocks, in chunks so independent
+        DMAs can overlap (multithread-serialization analog). ``demand``:
+        an executing operator is blocked on these blocks — outranks
+        speculative pre-staging."""
+        blocks = blocks if blocks is not None else window.p_blocks()
+
+        def do():
+            for blk in blocks:
+                self.stage_block_sync(blk)
+        return self.submit(PRIO_DEMAND_STAGE if demand else PRIO_STAGE, do)
+
+    def request_destage(self, window: WindowState,
+                        keep_bootstrap: int = 0) -> threading.Event:
+        """Queue destaging (background, lowest priority). Preemptible: the
+        executor checks for higher-priority work between chunks."""
+        def do():
+            m = window.m_blocks()
+            keep = set(id(b) for b in m[:keep_bootstrap])
+            pending = [b for b in m if id(b) not in keep]
+            i = 0
+            while i < len(pending):
+                chunk = pending[i:i + self.chunk_blocks]
+                for blk in chunk:
+                    self.destage_block_sync(blk)
+                i += len(chunk)
+                if self.sequential_io and \
+                        self.has_higher_priority_pending(PRIO_DESTAGE):
+                    # re-queue the remainder and yield (preemption)
+                    self.stats["preemptions"] += 1
+                    rest = pending[i:]
+                    if rest:
+                        self.submit(PRIO_DESTAGE,
+                                    lambda r=rest: [self.destage_block_sync(b)
+                                                    for b in r])
+                    return
+        return self.submit(PRIO_DESTAGE, do)
+
+    def request_late_write(self, window: WindowState, blocks: List[Block]
+                           ) -> threading.Event:
+        """Late events were appended host-side; this acknowledges/persists
+        them at middle priority (and spills if the host tier is over
+        budget)."""
+        def do():
+            self.stats["late_write_blocks"] += len(blocks)
+            for blk in blocks:
+                blk.persisted = True   # late events land in the p-bucket
+                self._simulate_io(blk.nbytes)
+        return self.submit(PRIO_LATE_WRITE, do)

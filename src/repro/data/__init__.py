@@ -1,0 +1,9 @@
+from repro.data.generators import (
+    WorkloadGenerator,
+    make_generator,
+    lateness_delays,
+)
+from repro.data.pipeline import PrefetchPipeline
+
+__all__ = ["WorkloadGenerator", "make_generator", "lateness_delays",
+           "PrefetchPipeline"]

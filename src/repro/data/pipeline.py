@@ -1,0 +1,69 @@
+"""Host-side prefetch pipeline: produce -> stage -> consume, double-buffered.
+
+The producer thread generates/loads batches into a bounded queue; the
+stager moves them to device ahead of consumption (``jax.device_put``
+without blocking), so step N's compute overlaps step N+1's H2D — the same
+decoupled-transfer principle as the engine's proactive caching, applied to
+input data. Key-hash sharded ingest splits batches per data shard (the
+Flink keyBy analogue).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+
+from repro.core.events import EventBatch
+
+
+class PrefetchPipeline:
+    def __init__(self, source: Iterator[Any], *, depth: int = 2,
+                 to_device: bool = True,
+                 transform: Optional[Callable[[Any], Any]] = None):
+        self.source = source
+        self.depth = depth
+        self.to_device = to_device
+        self.transform = transform
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        try:
+            for item in self.source:
+                if self._stop.is_set():
+                    return
+                if self.transform is not None:
+                    item = self.transform(item)
+                if self.to_device:
+                    item = jax.tree.map(
+                        lambda x: jax.device_put(x)
+                        if hasattr(x, "shape") else x, item)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        finally:
+            self._q.put(StopIteration)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is StopIteration:
+            raise StopIteration
+        return item
+
+    def close(self) -> None:
+        self._stop.set()
+
+
+def sharded_ingest(batch: EventBatch, num_shards: int):
+    """Partition an event batch by key hash for distributed ingest."""
+    return batch.partition_by_shard(num_shards)

@@ -1,0 +1,15 @@
+from repro.distributed.sharding import (
+    ShardCtx,
+    current_ctx,
+    set_ctx,
+    use_ctx,
+    constrain,
+    logical_to_pspec,
+    make_rules,
+    sharding_profile,
+)
+
+__all__ = [
+    "ShardCtx", "current_ctx", "set_ctx", "use_ctx", "constrain",
+    "logical_to_pspec", "make_rules", "sharding_profile",
+]

@@ -1,0 +1,123 @@
+"""Fault tolerance: heartbeats, straggler backup execution, restart.
+
+* ``HeartbeatMonitor`` — worker liveness with configurable timeout; the
+  launcher polls ``dead_workers()`` and triggers checkpoint restart with a
+  shrunken mesh (train/elastic.py) when a pod drops.
+* ``BackupExecutor`` — straggler mitigation for window re-executions and
+  eval tasks: a task slower than ``deadline_factor`` x its EWMA latency
+  gets a backup issued; first result wins. Safe because AION window
+  (re-)execution is a pure function of bucket contents (idempotent).
+* ``RestartManager`` — crash/restore loop glue used by launch/train.py:
+  on failure, restore the latest complete checkpoint and resume at the
+  recorded step (engine state — watermarks, lateness histogram, bucket
+  manifests — restores alongside model state).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout: float = 30.0):
+        self.timeout = timeout
+        self._last: Dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def beat(self, worker: str, now: Optional[float] = None) -> None:
+        with self._lock:
+            self._last[worker] = now if now is not None else time.time()
+
+    def dead_workers(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else time.time()
+        with self._lock:
+            return [w for w, t in self._last.items()
+                    if now - t > self.timeout]
+
+    def alive_workers(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else time.time()
+        with self._lock:
+            return [w for w, t in self._last.items()
+                    if now - t <= self.timeout]
+
+
+@dataclass
+class BackupStats:
+    launched: int = 0
+    backups_issued: int = 0
+    backup_wins: int = 0
+
+
+class BackupExecutor:
+    """Run idempotent tasks with deadline-triggered backup copies."""
+
+    def __init__(self, workers: int = 4, deadline_factor: float = 3.0,
+                 min_deadline: float = 0.05):
+        self._pool = ThreadPoolExecutor(max_workers=workers)
+        self.deadline_factor = deadline_factor
+        self.min_deadline = min_deadline
+        self._ewma: Optional[float] = None
+        self.stats = BackupStats()
+
+    def _observe(self, dt: float) -> None:
+        self._ewma = dt if self._ewma is None else \
+            0.7 * self._ewma + 0.3 * dt
+
+    def run(self, fn: Callable[[], Any]) -> Any:
+        """Execute fn; if it exceeds the deadline, race a backup."""
+        self.stats.launched += 1
+        t0 = time.time()
+        primary = self._pool.submit(fn)
+        deadline = max((self._ewma or 0.0) * self.deadline_factor,
+                       self.min_deadline)
+        done, _ = wait([primary], timeout=deadline)
+        if done:
+            self._observe(time.time() - t0)
+            return primary.result()
+        # straggler: issue a backup, take whichever finishes first
+        self.stats.backups_issued += 1
+        backup = self._pool.submit(fn)
+        done, _ = wait([primary, backup], return_when=FIRST_COMPLETED)
+        winner = done.pop()
+        if winner is backup:
+            self.stats.backup_wins += 1
+        self._observe(time.time() - t0)
+        return winner.result()
+
+    def shutdown(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)
+
+
+class RestartManager:
+    """Run a step loop with crash recovery from the latest checkpoint."""
+
+    def __init__(self, save_every: int = 50, max_restarts: int = 10):
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+        self.restarts = 0
+
+    def run(self, *, init_state: Callable[[], Any],
+            restore: Callable[[], Optional[Any]],
+            step_fn: Callable[[Any, int], Any],
+            save: Callable[[Any, int], None],
+            num_steps: int) -> Any:
+        """Generic loop: restore-or-init, step, periodic save; on exception
+        restart from the last checkpoint (up to max_restarts)."""
+        while True:
+            restored = restore()
+            state, start = (restored if restored is not None
+                            else (init_state(), 0))
+            try:
+                for step in range(start, num_steps):
+                    state = step_fn(state, step)
+                    if (step + 1) % self.save_every == 0 or \
+                            step + 1 == num_steps:
+                        save(state, step + 1)
+                return state
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise

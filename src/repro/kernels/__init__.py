@@ -1,0 +1,12 @@
+from repro.kernels.ops import (
+    decode_attention_paged,
+    flash_attention,
+    flash_attention_vjp,
+    segment_aggregate,
+    ssd_chunk_scan,
+)
+
+__all__ = [
+    "decode_attention_paged", "flash_attention", "flash_attention_vjp",
+    "segment_aggregate", "ssd_chunk_scan",
+]

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: paged decode attention over a tiered KV pool.
+
+This is the kernel-level realization of AION's m-bucket: the KV cache of a
+long-lived session is block-granular (pages); *resident* pages live in the
+HBM pool this kernel reads, cold pages live host-side (serve/kvcache.py
+stages them in ahead of a session's predicted decode — proactive caching).
+The kernel consumes a **block table** (vLLM-style indirection, adapted to
+TPU via scalar prefetch): the table is a scalar-prefetch operand so each
+grid step's BlockSpec ``index_map`` dereferences it to pick the physical
+page to DMA into VMEM — pages are gathered without any host-side copy.
+
+Grid: (batch, kv_head, pages_per_seq); the page axis is innermost so the
+online-softmax state (m, l, acc[G, D]) persists in VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
+            pages_per_seq: int, g: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0]                                     # [G, D]
+    k = k_ref[0][:, 0]                                  # [page, D]
+    v = v_ref[0][:, 0]
+
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # [G, page]
+
+    pos = j * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)[0]
+    valid = (pos < lens_ref[b]) & (table_ref[b, j] >= 0)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == pages_per_seq - 1)
+    def _finish():
+        safe_l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_paged_pallas(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                  v_pages: jnp.ndarray,
+                                  block_table: jnp.ndarray,
+                                  seq_lens: jnp.ndarray,
+                                  interpret: bool = True) -> jnp.ndarray:
+    """q [B, H, D]; k/v_pages [P, page, Hkv, D]; block_table [B, pages_per
+    _seq] i32 (page id or -1); seq_lens [B] i32 -> [B, H, D]."""
+    b, h, d = q.shape
+    p_total, page_size, hkv, _ = k_pages.shape
+    pages_per_seq = block_table.shape[1]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+
+    qf = q.reshape(b, hkv, g, d)
+    table = jnp.maximum(block_table, 0).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, page_size=page_size,
+        pages_per_seq=pages_per_seq, g=g)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bi, hi, j, tbl, lens: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda bi, hi, j, tbl, lens: (tbl[bi, j], 0, hi, 0)),
+            pl.BlockSpec((1, page_size, 1, d),
+                         lambda bi, hi, j, tbl, lens: (tbl[bi, j], 0, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, hi, j, tbl, lens: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(table, seq_lens.astype(jnp.int32),
+      qf, k_pages, v_pages)
+    return out.reshape(b, h, d)

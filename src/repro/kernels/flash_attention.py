@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: flash attention (forward).
+
+IO-aware attention for the prefill path (FlashAttention, arXiv:2205.14135,
+re-tiled for TPU): grid = (batch*kv_heads*groups, q_blocks, kv_blocks) with
+the kv dimension innermost so the [block_q, head_dim] accumulator and the
+running (m, l) statistics stay in VMEM scratch across kv steps. Causal and
+sliding-window masking are applied per tile; fully-masked tiles still run
+(Pallas TPU grids are dense) but cost only a masked matmul.
+
+MXU alignment: block_q/block_k default to 512/512 and head_dim is padded
+to a multiple of 128 by the wrapper (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int,
+            block_q: int, block_k: int, num_kv_blocks: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                       # [block_q, d]
+    k = k_ref[0]                                       # [block_k, d]
+    v = v_ref[0]
+
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale    # [bq, bk]
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_scr[...] + jnp.log(l)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           *, causal: bool = True, window: int = 0,
+                           block_q: int = 512, block_k: int = 512,
+                           interpret: bool = True,
+                           return_lse: bool = False):
+    """q [B, Sq, H, D]; k, v [B, Sk, Hkv, D] -> [B, Sq, H, D].
+
+    H % Hkv == 0 (GQA); Sq % block_q == 0 and Sk % block_k == 0 (the ops.py
+    wrapper pads).
+    """
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    scale = 1.0 / math.sqrt(d)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+
+    # flatten (b, hkv, g) into one grid axis; k/v index ignores g
+    qf = q.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * hkv * g, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, d)
+
+    num_q_blocks = sq // block_q
+    num_kv_blocks = sk // block_k
+    grid = (b * hkv * g, num_q_blocks, num_kv_blocks)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_kv_blocks=num_kv_blocks)
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, kj: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, kj, g=g: (bh // g, kj, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda bh, qi, kj, g=g: (bh // g, kj, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, block_q, d),
+                                lambda bh, qi, kj: (bh, qi, 0)),
+                   pl.BlockSpec((1, block_q),
+                                lambda bh, qi, kj: (bh, qi))),
+        out_shape=(jax.ShapeDtypeStruct((b * hkv * g, sq, d), q.dtype),
+                   jax.ShapeDtypeStruct((b * hkv * g, sq), jnp.float32)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # running max m
+            pltpu.VMEM((block_q,), jnp.float32),       # running sum l
+            pltpu.VMEM((block_q, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    o4 = out.reshape(b, hkv, g, sq, d).transpose(0, 3, 1, 2, 4) \
+        .reshape(b, sq, h, d)
+    if return_lse:
+        return o4, lse                       # lse stays head-flattened
+    return o4

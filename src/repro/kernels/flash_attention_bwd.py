@@ -1,0 +1,174 @@
+"""Pallas TPU kernels: flash attention backward.
+
+Completes the IO-aware attention story (§Perf Cell-A "next lever"): the
+backward recomputes score tiles from (q, k, lse) instead of saving the
+[Sq, Sk] probability matrix, with fp32 accumulators in VMEM scratch.
+
+Standard two-pass decomposition (FlashAttention-2):
+  dq pass : grid (BH, q_blocks, kv_blocks)  — dq[bq] accumulates over kv
+  dkv pass: grid (BH, kv_blocks, q_blocks)  — dk/dv[bk] accumulate over q
+
+with  p  = exp(q·kᵀ·scale − lse)
+      D  = rowsum(do ⊙ o)
+      ds = p ⊙ (do·vᵀ − D)
+      dq = scale · ds·k ;  dk = scale · dsᵀ·q ;  dv = pᵀ·do
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mask(qi, kj, bq, bk, causal, window):
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = jnp.ones((bq, bk), bool)
+    if causal:
+        m &= q_pos >= k_pos
+    if window > 0:
+        m &= q_pos - k_pos < window
+    return m
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_scr, *, scale, causal, window, block_q, block_k,
+               num_kv_blocks):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+    lse = lse_ref[0]                               # [bq]
+    delta = delta_ref[0]                           # [bq]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    m = _mask(qi, kj, block_q, block_k, causal, window)
+    p = jnp.where(m, jnp.exp(s - lse[:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    acc_scr[...] += jax.lax.dot_general(
+        ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _done():
+        dq_ref[0] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *, scale, causal, window,
+                block_q, block_k, num_q_blocks):
+    kj = pl.program_id(1)
+    qi = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    v = v_ref[0]
+    do = do_ref[0]
+    lse = lse_ref[0]
+    delta = delta_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    m = _mask(qi, kj, block_q, block_k, causal, window)
+    p = jnp.where(m, jnp.exp(s - lse[:, None]), 0.0)      # [bq, bk]
+    dv_scr[...] += jax.lax.dot_general(
+        p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # [bk, d]
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    dk_scr[...] += jax.lax.dot_general(
+        ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # [bk, d]
+
+    @pl.when(qi == num_q_blocks - 1)
+    def _done():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_pallas(q, k, v, o, do, lse, *, causal=True,
+                               window=0, block_q=512, block_k=512,
+                               interpret=True
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                          jnp.ndarray]:
+    """Flattened-head backward.
+
+    q, o, do: [BH, Sq, D]; k, v: [BH, Sk, D] (heads pre-broadcast for GQA —
+    the ops.py wrapper folds groups and sums dk/dv over them);
+    lse: [BH, Sq] (fp32, log-sum-exp of scaled scores).
+    """
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(d)
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    nq, nk = sq // bq, sk // bk
+
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1)                                  # [BH, Sq]
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          window=window, block_q=bq, block_k=bk,
+                          num_kv_blocks=nk),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          window=window, block_q=bq, block_k=bk,
+                          num_q_blocks=nq),
+        grid=(bh, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),
+        ],
+        out_specs=(pl.BlockSpec((1, bk, d), lambda b, j, i: (b, j, 0)),
+                   pl.BlockSpec((1, bk, d), lambda b, j, i: (b, j, 0))),
+        out_shape=(jax.ShapeDtypeStruct((bh, sk, d), k.dtype),
+                   jax.ShapeDtypeStruct((bh, sk, d), v.dtype)),
+        scratch_shapes=[pltpu.VMEM((bk, d), jnp.float32),
+                        pltpu.VMEM((bk, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv

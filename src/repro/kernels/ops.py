@@ -1,0 +1,147 @@
+"""Public kernel entry points: jit'd wrappers with backend dispatch.
+
+``backend``:
+  'pallas'     real Mosaic lowering (TPU)
+  'interpret'  Pallas interpreter (CPU validation — this container)
+  'ref'        pure-jnp oracle (numerics baseline)
+  'auto'       pallas on TPU, interpret elsewhere
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.decode_attention import decode_attention_paged_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention_bwd import flash_attention_bwd_pallas
+from repro.kernels.segment_aggregate import segment_aggregate_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+
+def _resolve(backend: str) -> str:
+    if backend != "auto":
+        return backend
+    platform = jax.devices()[0].platform
+    return "pallas" if platform == "tpu" else "interpret"
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "backend",
+                                             "block_n"))
+def segment_aggregate(values, segment_ids, num_segments: int, valid=None,
+                      backend: str = "auto", block_n: int = 512):
+    be = _resolve(backend)
+    if be == "ref":
+        return _ref.ref_segment_aggregate(values, segment_ids, num_segments,
+                                          valid)
+    return segment_aggregate_pallas(values, segment_ids, num_segments,
+                                    valid=valid, block_n=block_n,
+                                    interpret=(be == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "backend",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    backend: str = "auto", block_q: int = 512,
+                    block_k: int = 512):
+    be = _resolve(backend)
+    if be == "ref":
+        return _ref.ref_flash_attention(q, k, v, causal=causal, window=window)
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, sq)
+    while sq % bq:
+        bq //= 2
+    bk = min(block_k, sk)
+    while sk % bk:
+        bk //= 2
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  block_q=max(bq, 1), block_k=max(bk, 1),
+                                  interpret=(be == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def decode_attention_paged(q, k_pages, v_pages, block_table, seq_lens,
+                           backend: str = "auto"):
+    be = _resolve(backend)
+    if be == "ref":
+        return _ref.ref_decode_attention_paged(q, k_pages, v_pages,
+                                               block_table, seq_lens)
+    return decode_attention_paged_pallas(q, k_pages, v_pages, block_table,
+                                         seq_lens,
+                                         interpret=(be == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "head_block",
+                                             "backend"))
+def ssd_chunk_scan(xdt, a, B, C, chunk: int = 256, head_block: int = 8,
+                   backend: str = "auto"):
+    be = _resolve(backend)
+    if be == "ref":
+        y, _ = _ref.ref_ssd_chunk_scan(xdt, a, B, C, chunk)
+        return y
+    h = xdt.shape[2]
+    hb = min(head_block, h)
+    while h % hb:
+        hb //= 2
+    return ssd_scan_pallas(xdt, a, B, C, chunk, head_block=max(hb, 1),
+                           interpret=(be == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# Differentiable flash attention (custom VJP over the fwd + bwd kernels)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_vjp(q, k, v, causal: bool = True, window: int = 0,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool = True):
+    """flash_attention with a flash backward: neither pass materializes the
+    [Sq, Sk] probability matrix. q [B,Sq,H,D]; k,v [B,Sk,Hkv,D]."""
+    o, _ = _fa_fwd(q, k, v, causal, window, block_q, block_k, interpret)
+    return o
+
+
+def _fa_fwd(q, k, v, causal, window, block_q, block_k, interpret):
+    b, sq, h, d = q.shape
+    bq = min(block_q, sq)
+    bk = min(block_k, k.shape[1])
+    o, lse = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                    block_q=bq, block_k=bk,
+                                    interpret=interpret, return_lse=True)
+    return o, (q, k, v, o, lse)
+
+
+def _fa_bwd(causal, window, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    # flatten heads; broadcast kv over the GQA group for the bwd kernels
+    qf = q.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * hkv * g, sq, d)
+    of = o.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * hkv * g, sq, d)
+    dof = do.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * hkv * g, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1) \
+        .reshape(b * hkv * g, sk, d)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1) \
+        .reshape(b * hkv * g, sk, d)
+    dqf, dkf, dvf = flash_attention_bwd_pallas(
+        qf, kf, vf, of, dof, lse, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=interpret)
+    dq = dqf.reshape(b, hkv, g, sq, d).transpose(0, 3, 1, 2, 4) \
+        .reshape(b, sq, h, d)
+    # sum group gradients back onto the shared kv heads
+    dk = dkf.reshape(b, hkv, g, sk, d).sum(axis=2).transpose(0, 2, 1, 3)
+    dv = dvf.reshape(b, hkv, g, sk, d).sum(axis=2).transpose(0, 2, 1, 3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_vjp.defvjp(_fa_fwd, _fa_bwd)

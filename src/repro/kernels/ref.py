@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` is the numerically-trusted reference the kernels are swept
+against in tests (interpret=True on CPU, real Mosaic lowering on TPU).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_segment_aggregate(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                          num_segments: int, valid: Optional[jnp.ndarray] = None
+                          ) -> dict:
+    """values [N, W] f32; segment_ids [N] i32 -> per-segment sum/count/min/max.
+
+    Invalid rows (valid==False) contribute nothing.
+    """
+    n, w = values.shape
+    if valid is None:
+        valid = jnp.ones((n,), bool)
+    sid = jnp.where(valid, segment_ids, num_segments)      # park invalid
+    vsum = jax.ops.segment_sum(jnp.where(valid[:, None], values, 0.0),
+                               sid, num_segments + 1)[:num_segments]
+    cnt = jax.ops.segment_sum(valid.astype(jnp.float32), sid,
+                              num_segments + 1)[:num_segments]
+    vmin = jax.ops.segment_min(jnp.where(valid[:, None], values, jnp.inf),
+                               sid, num_segments + 1)[:num_segments]
+    vmax = jax.ops.segment_max(jnp.where(valid[:, None], values, -jnp.inf),
+                               sid, num_segments + 1)[:num_segments]
+    return {"sum": vsum, "count": cnt, "min": vmin, "max": vmax}
+
+
+def ref_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q [B, Sq, H, D]; k, v [B, Sk, Hkv, D] -> [B, Sq, H, D].
+    Plain materialized softmax attention (fp32 math)."""
+    b, sq, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / math.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def ref_decode_attention_paged(q: jnp.ndarray, kv_pages_k: jnp.ndarray,
+                               kv_pages_v: jnp.ndarray,
+                               block_table: jnp.ndarray,
+                               seq_lens: jnp.ndarray) -> jnp.ndarray:
+    """Paged decode attention oracle.
+
+    q            [B, H, D]
+    kv_pages_*   [P, page, Hkv, D]   (global page pool)
+    block_table  [B, pages_per_seq] i32 (page ids; -1 = unused)
+    seq_lens     [B] i32 (valid tokens per sequence)
+    -> [B, H, D]
+    """
+    b, h, d = q.shape
+    pages, page_size, hkv, _ = kv_pages_k.shape
+    per_seq = block_table.shape[1]
+    g = h // hkv
+
+    def one(qi, table, n):
+        k = kv_pages_k[jnp.maximum(table, 0)]   # [per_seq, page, Hkv, D]
+        v = kv_pages_v[jnp.maximum(table, 0)]
+        k = k.reshape(per_seq * page_size, hkv, d).astype(jnp.float32)
+        v = v.reshape(per_seq * page_size, hkv, d).astype(jnp.float32)
+        pos = jnp.arange(per_seq * page_size)
+        valid = (pos < n) & jnp.repeat(table >= 0, page_size)
+        qg = qi.reshape(hkv, g, d).astype(jnp.float32)
+        s = jnp.einsum("hgd,shd->hgs", qg, k) / math.sqrt(d)
+        s = jnp.where(valid[None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("hgs,shd->hgd", p, v)
+        return o.reshape(h, d)
+
+    return jax.vmap(one)(q, block_table, seq_lens).astype(q.dtype)
+
+
+def ref_ssd_chunk_scan(xdt: jnp.ndarray, a: jnp.ndarray, B: jnp.ndarray,
+                       C: jnp.ndarray, chunk: int,
+                       init_state: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential-exact SSD oracle: step the recurrence token by token.
+
+    xdt [b, s, h, p] (x*dt); a [b, s, h] (dt*A); B, C [b, s, n].
+    Returns (y [b, s, h, p], final_state [b, h, p, n]).
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    state0 = init_state if init_state is not None else \
+        jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, t):
+        xt, at, Bt, Ct = t
+        decay = jnp.exp(at)[:, :, None, None]              # [b,h,1,1]
+        upd = jnp.einsum("bn,bhp->bhpn", Bt.astype(jnp.float32),
+                         xt.astype(jnp.float32))
+        state = decay * state + upd
+        y = jnp.einsum("bn,bhpn->bhp", Ct.astype(jnp.float32), state)
+        return state, y
+
+    xs = (xdt.transpose(1, 0, 2, 3), a.transpose(1, 0, 2),
+          B.transpose(1, 0, 2), C.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(xdt.dtype), final

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: windowed segment aggregation (reduce-by-key).
+
+The streaming engine's hot loop: fold a block batch of events into
+per-key aggregates (sum / count / min / max). TPU adaptation: scatter-by-
+key is hostile to the VPU, so the kernel converts the segment reduction
+into **one-hot matmuls on the MXU** — ``onehot(ids)^T @ values`` — which is
+the TPU-native formulation of reduce-by-key (FeatGraph/GE-SpMM style).
+
+Tiling: grid over event tiles of ``block_n`` rows; each step loads a
+[block_n, W] value tile + [block_n] ids into VMEM, builds the [block_n, S]
+one-hot in registers, and accumulates [S, W] / [S] outputs that stay
+resident in VMEM across the whole grid (output BlockSpecs map every step
+to the same block).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ids_ref, valid_ref, values_ref, sum_ref, cnt_ref, min_ref,
+            max_ref, *, num_segments: int, block_n: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+        min_ref[...] = jnp.full_like(min_ref, jnp.inf)
+        max_ref[...] = jnp.full_like(max_ref, -jnp.inf)
+
+    ids = ids_ref[...]                                  # [block_n]
+    valid = valid_ref[...] != 0                         # [block_n]
+    vals = values_ref[...]                              # [block_n, W]
+
+    seg = jax.lax.broadcasted_iota(jnp.int32, (block_n, num_segments), 1)
+    onehot = (ids[:, None] == seg) & valid[:, None]     # [block_n, S]
+    oh_f = onehot.astype(jnp.float32)
+
+    # MXU path: [S, block_n] @ [block_n, W]
+    sum_ref[...] += jax.lax.dot_general(
+        oh_f, jnp.where(valid[:, None], vals, 0.0),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    cnt_ref[...] += jnp.sum(oh_f, axis=0)
+
+    # min/max: masked broadcast-reduce over the tile (VPU path)
+    big = jnp.where(onehot[:, :, None], vals[:, None, :], jnp.inf)
+    small = jnp.where(onehot[:, :, None], vals[:, None, :], -jnp.inf)
+    min_ref[...] = jnp.minimum(min_ref[...], jnp.min(big, axis=0))
+    max_ref[...] = jnp.maximum(max_ref[...], jnp.max(small, axis=0))
+
+
+def segment_aggregate_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                             num_segments: int,
+                             valid: Optional[jnp.ndarray] = None,
+                             block_n: int = 512,
+                             interpret: bool = True):
+    """values [N, W] f32, segment_ids [N] i32 -> dict of [S, W]/[S] aggs.
+
+    N is padded to a multiple of ``block_n``; padding rows are invalid.
+    """
+    n, w = values.shape
+    if valid is None:
+        valid = jnp.ones((n,), jnp.int32)
+    else:
+        valid = valid.astype(jnp.int32)
+    block_n = min(block_n, max(n, 8))
+    pad = (-n) % block_n
+    if pad:
+        values = jnp.pad(values, ((0, pad), (0, 0)))
+        segment_ids = jnp.pad(segment_ids, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    n_pad = n + pad
+    grid = (n_pad // block_n,)
+
+    kernel = functools.partial(_kernel, num_segments=num_segments,
+                               block_n=block_n)
+    out_shapes = (
+        jax.ShapeDtypeStruct((num_segments, w), jnp.float32),   # sum
+        jax.ShapeDtypeStruct((num_segments,), jnp.float32),     # count
+        jax.ShapeDtypeStruct((num_segments, w), jnp.float32),   # min
+        jax.ShapeDtypeStruct((num_segments, w), jnp.float32),   # max
+    )
+    full2 = pl.BlockSpec((num_segments, w), lambda i: (0, 0))
+    full1 = pl.BlockSpec((num_segments,), lambda i: (0,))
+    s, c, mn, mx = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n, w), lambda i: (i, 0)),
+        ],
+        out_specs=(full2, full1, full2, full2),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(segment_ids.astype(jnp.int32), valid, values.astype(jnp.float32))
+    return {"sum": s, "count": c, "min": mn, "max": mx}

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunk scan (forward).
+
+The quadratic intra-chunk term runs on the MXU ([Q, Q] score tiles per
+head block); the inter-chunk SSM state [hb, P, N] persists in VMEM scratch
+across the (sequential, innermost) chunk grid axis — the recurrence never
+round-trips to HBM.
+
+Grid: (batch, head_blocks, n_chunks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xdt_ref, a_ref, b_in_ref, c_in_ref, y_ref, state_scr, *,
+            chunk: int, hb: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xdt = xdt_ref[0].astype(jnp.float32)        # [Q, hb, P]
+    a = a_ref[0].astype(jnp.float32)            # [Q, hb]
+    Bc = b_in_ref[0].astype(jnp.float32)        # [Q, N]
+    Cc = c_in_ref[0].astype(jnp.float32)        # [Q, N]
+
+    cum = jnp.cumsum(a, axis=0)                 # [Q, hb]
+    total = cum[-1]                             # [hb]
+
+    # intra-chunk: scores [Q, Q] on the MXU, decay per head
+    scores = jax.lax.dot_general(
+        Cc, Bc, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # [Qi, Qj]
+    ldecay = cum[:, None, :] - cum[None, :, :]  # [Qi, Qj, hb]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    qj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    mask = qi >= qj
+    L = jnp.where(mask[:, :, None], jnp.exp(ldecay), 0.0)
+    w_intra = scores[:, :, None] * L            # [Qi, Qj, hb]
+    # y_intra[i,h,p] = sum_j w_intra[i,j,h] * xdt[j,h,p]
+    y_intra = jnp.einsum("ijh,jhp->ihp", w_intra, xdt,
+                         preferred_element_type=jnp.float32)
+
+    # inter-chunk from carried state
+    state = state_scr[...]                      # [hb, P, N]
+    y_inter = jnp.einsum("in,hpn->ihp", Cc, state,
+                         preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, :, None]
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update
+    w = jnp.exp(total[None, :] - cum)           # [Q, hb]
+    xw = xdt * w[:, :, None]                    # [Q, hb, P]
+    chunk_state = jnp.einsum("jhp,jn->hpn", xw, Bc,
+                             preferred_element_type=jnp.float32)
+    state_scr[...] = jnp.exp(total)[:, None, None] * state + chunk_state
+
+
+def ssd_scan_pallas(xdt: jnp.ndarray, a: jnp.ndarray, B: jnp.ndarray,
+                    C: jnp.ndarray, chunk: int, head_block: int = 8,
+                    interpret: bool = True) -> jnp.ndarray:
+    """xdt [b, s, h, p] (x*dt); a [b, s, h] (dt*A); B, C [b, s, n].
+    Returns y [b, s, h, p] (the final state stays device-side in scratch;
+    the ops.py wrapper recomputes it via the ref when needed)."""
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, "seq must be a multiple of the chunk"
+    hb = min(head_block, h)
+    assert h % hb == 0
+    nc = s // q
+    grid = (b, h // hb, nc)
+
+    kernel = functools.partial(_kernel, chunk=q, hb=hb)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q, hb, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, hb), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, hb, p),
+                               lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((hb, p, n), jnp.float32)],
+        interpret=interpret,
+    )(xdt, a, B, C)
+    return y

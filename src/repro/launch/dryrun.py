@@ -1,0 +1,365 @@
+import os
+_N_DEV = os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_N_DEV}"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` must
+succeed on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, and we
+record ``memory_analysis()`` / ``cost_analysis()`` / per-collective bytes
+(parsed from the post-SPMD optimized HLO) for the roofline analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-780m \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --mesh multi --skip-existing
+"""
+import argparse
+import collections
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ARCHS, SHAPES_BY_NAME, applicable_shapes, get_config, skipped_cells,
+)
+from repro.configs.base import MeshConfig, ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh_from_config, mesh_config
+from repro.models import build_model
+from repro.models.model import input_specs
+from repro.serve import make_decode_step, make_prefill_step
+from repro.train import make_train_step, make_train_state_specs
+from repro.train.train_step import (
+    TrainState, choose_microbatches, choose_remat_group, init_train_state,
+)
+
+DEFAULT_OUT = Path("experiments/dryrun")
+_VARIANT: Dict[str, Any] = {}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# one HLO op definition line: "%name = TYPE[shape]{layout} opcode(...)"
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Sum output-shape bytes per collective op kind over the optimized HLO.
+
+    Output bytes are per-participating-device tensor sizes in the SPMD
+    module (HLO shapes are already per-device after partitioning)."""
+    stats: Dict[str, Dict[str, float]] = collections.defaultdict(
+        lambda: {"count": 0, "bytes": 0})
+    for m in _COLLECTIVE_RE.finditer(hlo):
+        op = m.group("op")
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += _shape_bytes(m.group("out"))
+    return dict(stats)
+
+
+def _tree_bytes_per_device(sds_tree, sharding_tree) -> int:
+    """Exact per-device bytes from shard shapes."""
+    total = 0
+    for sds, sh in zip(jax.tree.leaves(sds_tree), jax.tree.leaves(
+            sharding_tree, is_leaf=lambda x: x is None or hasattr(x, "shard_shape"))):
+        if sh is None or not hasattr(sh, "shard_shape"):
+            total += sds.size * sds.dtype.itemsize
+        else:
+            shp = sh.shard_shape(sds.shape)
+            n = 1
+            for d in shp:
+                n *= d
+            total += n * sds.dtype.itemsize
+    return total
+
+
+def _shardings_from_logical(mesh, logical_tree, rules):
+    def leaf(spec):
+        return jax.sharding.NamedSharding(
+            mesh, shd.logical_to_pspec(spec, rules))
+    return jax.tree.map(leaf, logical_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh_cfg: MeshConfig,
+               mesh, variant: Optional[Dict[str, Any]] = None
+               ) -> Dict[str, Any]:
+    """Lower + compile one cell, return the dry-run record.
+
+    ``variant``: §Perf knobs — {causal_skip, kv_bits, compress_grads,
+    remat, mu} override the baseline program for hillclimb measurements."""
+    variant = variant or {}
+    rec: Dict[str, Any] = {
+        "arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+        "mesh": {"shape": list(mesh_cfg.shape), "axes": list(mesh_cfg.axes)},
+        "chips": mesh_cfg.num_devices, "variant": variant,
+    }
+    profile = shd.sharding_profile(cfg, mesh_cfg, shape.global_batch,
+                                   shape.seq_len, shape.kind)
+    rules = shd.make_rules(cfg, mesh_cfg, shape.global_batch,
+                           shape.seq_len, shape.kind)
+    rec["profile"] = {
+        "attn_tp": profile.attn_tp, "mlp_tp": profile.mlp_tp,
+        "vocab_tp": profile.vocab_tp, "expert_tp": profile.expert_tp,
+        "ssd_tp": profile.ssd_tp, "kv_repeat": profile.kv_repeat,
+        "kv_seq_shard": profile.kv_seq_shard,
+        "batch_axes": list(profile.batch_axes), "notes": list(profile.notes),
+    }
+    remat_group = 0
+    if shape.kind == "train":
+        mu_probe = choose_microbatches(cfg, shape, mesh_cfg, profile)
+        remat_group = variant.get("remat_group") or choose_remat_group(
+            cfg, shape, mesh_cfg, profile, mu_probe)
+    import dataclasses as _dc
+    if "remat" in variant:
+        cfg = _dc.replace(cfg, remat=variant["remat"])
+    if "param_dtype" in variant:
+        cfg = _dc.replace(cfg, param_dtype=variant["param_dtype"])
+    model = build_model(cfg, kv_repeat=profile.kv_repeat,
+                        remat_group=remat_group,
+                        causal_skip=variant.get("causal_skip", False),
+                        kv_cache_bits=variant.get("kv_bits", 16),
+                        kv_dus_write=variant.get("kv_dus", False))
+    rec["profile"]["remat_group"] = remat_group
+    ctx = shd.ShardCtx(mesh=mesh, rules=rules, profile=profile)
+
+    batch_sds, batch_logical = input_specs(cfg, shape, model)
+    with shd.use_ctx(ctx):
+        batch_sh = _shardings_from_logical(mesh, batch_logical, rules)
+        t0 = time.time()
+        if shape.kind == "train":
+            mu = variant.get("mu") or choose_microbatches(
+                cfg, shape, mesh_cfg, profile)
+            rec["profile"]["num_microbatches"] = mu
+            grad_transform = None
+            if variant.get("compress_grads"):
+                from repro.train.compression import _int8_roundtrip
+                import jax as _jax
+                grad_transform = lambda g: _jax.tree.map(_int8_roundtrip, g)
+            step = make_train_step(model, num_microbatches=mu,
+                                   grad_transform=grad_transform)
+            state_sds = jax.eval_shape(
+                lambda: init_train_state(model, jax.random.PRNGKey(0)))
+            state_logical = make_train_state_specs(model)
+            state_sh = _shardings_from_logical(mesh, state_logical, rules)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, batch_sds)
+            rec["state_bytes_per_device"] = _tree_bytes_per_device(
+                state_sds, state_sh)
+        elif shape.kind == "prefill":
+            pstep = make_prefill_step(model, max_len=shape.seq_len)
+            params_sds = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0)))
+            params_sh = _shardings_from_logical(mesh, model.specs(), rules)
+            jitted = jax.jit(pstep, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_sds, batch_sds)
+            rec["state_bytes_per_device"] = _tree_bytes_per_device(
+                params_sds, params_sh)
+        else:  # decode
+            dstep = make_decode_step(model)
+            params_sds = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0)))
+            params_sh = _shardings_from_logical(mesh, model.specs(), rules)
+            cache_sds = batch_sds["cache"]
+            cache_sh = batch_sh["cache"]
+            tok_sds = batch_sds["tokens"]
+            tok_sh = batch_sh["tokens"]
+            jitted = jax.jit(dstep,
+                             in_shardings=(params_sh, tok_sh, cache_sh),
+                             out_shardings=(tok_sh, cache_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(params_sds, tok_sds, cache_sds)
+            rec["state_bytes_per_device"] = _tree_bytes_per_device(
+                params_sds, params_sh)
+            rec["cache_bytes_per_device"] = _tree_bytes_per_device(
+                cache_sds, cache_sh)
+        rec["lower_s"] = round(time.time() - t0, 2)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # pragma: no cover - backend dependent
+        rec["memory_analysis"] = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        rec["cost_analysis"] = {
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "optimal_seconds")
+                or k.startswith("bytes accessed"))
+        }
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    rec["collectives"] = collective_stats(hlo)
+    rec["hlo_bytes"] = len(hlo)
+    del hlo
+    rec["model_params"] = cfg.param_count()
+    rec["model_active_params"] = cfg.active_param_count()
+    return rec
+
+
+def run(archs, shapes, meshes, out_dir: Path, skip_existing: bool = False
+        ) -> Tuple[int, int]:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    ok = failed = 0
+    from repro.configs.base import MeshConfig as _MC
+    extra = {
+        "quad": _MC((4, 16, 16), ("pod", "data", "model")),
+        "degraded": _MC((8, 16), ("data", "model")),
+    }
+    for mesh_name in meshes:
+        if mesh_name in extra:
+            mcfg = extra[mesh_name]
+        else:
+            mcfg = mesh_config(multi_pod=(mesh_name == "multi"))
+        mesh = make_mesh_from_config(mcfg)
+        for arch in archs:
+            cfg = get_config(arch)
+            valid = {s.name for s in applicable_shapes(cfg)}
+            for shape_name in shapes:
+                if shape_name not in valid:
+                    continue
+                shape = SHAPES_BY_NAME[shape_name]
+                tag = f"{mesh_name}__{arch}__{shape_name}"
+                path = out_dir / f"{tag}.json"
+                if skip_existing and path.exists():
+                    existing = json.loads(path.read_text())
+                    if "error" not in existing:
+                        print(f"[skip] {tag}")
+                        ok += 1
+                        continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                t0 = time.time()
+                try:
+                    rec = lower_cell(cfg, shape, mcfg, mesh,
+                                     variant=_VARIANT)
+                    rec["total_s"] = round(time.time() - t0, 2)
+                    path.write_text(json.dumps(rec, indent=2))
+                    ma = rec.get("memory_analysis", {})
+                    print(f"  ok in {rec['total_s']}s  "
+                          f"flops={rec['cost_analysis'].get('flops', 0):.3e} "
+                          f"temp={ma.get('temp_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"colls={ {k: v['count'] for k, v in rec['collectives'].items()} }",
+                          flush=True)
+                    ok += 1
+                except Exception as e:
+                    failed += 1
+                    err = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "error": str(e),
+                           "traceback": traceback.format_exc()}
+                    path.write_text(json.dumps(err, indent=2))
+                    print(f"  FAILED: {e}", flush=True)
+    # record assigned-but-skipped cells for the report
+    (out_dir / "skipped.json").write_text(
+        json.dumps([{"arch": a, "shape": s, "reason": r}
+                    for a, s, r in skipped_cells()], indent=2))
+    return ok, failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="arch id (repeatable; default all)")
+    ap.add_argument("--shape", action="append", default=None,
+                    help="shape name (repeatable; default all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both",
+                                       "quad", "degraded"],
+                    default="both",
+                    help="quad: 4x16x16=1024 chips (needs "
+                         "REPRO_DRYRUN_DEVICES=1024); degraded: 8x16 "
+                         "(half-pod elastic-restart mesh)")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--causal-skip", action="store_true")
+    ap.add_argument("--kv-bits", type=int, default=16)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--remat", choices=["full", "dots"], default=None)
+    ap.add_argument("--mu", type=int, default=None)
+    ap.add_argument("--param-dtype", default=None,
+                    help="serve in bf16: --param-dtype bfloat16")
+    ap.add_argument("--remat-group", type=int, default=None)
+    ap.add_argument("--kv-dus", action="store_true",
+                    help="per-shard DUS cache write (SPerf C3)")
+    args = ap.parse_args()
+    variant = {}
+    if args.causal_skip:
+        variant["causal_skip"] = True
+    if args.kv_bits != 16:
+        variant["kv_bits"] = args.kv_bits
+    if args.compress_grads:
+        variant["compress_grads"] = True
+    if args.remat:
+        variant["remat"] = args.remat
+    if args.mu:
+        variant["mu"] = args.mu
+    if args.param_dtype:
+        variant["param_dtype"] = args.param_dtype
+    if args.remat_group:
+        variant["remat_group"] = args.remat_group
+    if args.kv_dus:
+        variant["kv_dus"] = True
+    global _VARIANT
+    _VARIANT = variant
+
+    need = {"quad": 1024, "degraded": 128}.get(args.mesh, 512)
+    assert len(jax.devices()) >= need, (
+        f"dry-run requires >= {need} placeholder devices; set "
+        f"REPRO_DRYRUN_DEVICES and re-run (XLA_FLAGS is read before "
+        f"jax import)")
+    archs = args.arch or sorted(ARCHS)
+    shapes = args.shape or list(SHAPES_BY_NAME)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    ok, failed = run(archs, shapes, meshes, args.out,
+                     skip_existing=args.skip_existing)
+    print(f"\ndry-run complete: {ok} ok, {failed} failed")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

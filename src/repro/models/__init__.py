@@ -1,0 +1,7 @@
+from repro.models.model import (
+    build_model,
+    Model,
+    input_specs,
+)
+
+__all__ = ["build_model", "Model", "input_specs"]

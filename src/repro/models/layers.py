@@ -1,0 +1,172 @@
+"""Model building blocks: norms, RoPE, MLPs, embeddings.
+
+Conventions
+-----------
+* Every ``init_*`` returns ``(params, specs)`` — two pytrees with identical
+  structure. ``specs`` leaves are tuples of *logical* axis names
+  (``repro.distributed.sharding``); ``None`` entries are unsharded dims.
+* Params are stored in ``param_dtype`` (fp32), compute casts to
+  ``compute_dtype`` (bf16) at use sites.
+* Activation tensors are ``[batch, seq, d_model]``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, in_dim: int, out_dims: Tuple[int, ...],
+               logical: Tuple[Optional[str], ...], dtype,
+               scale: Optional[float] = None, use_bias: bool = False):
+    """Dense weight [in_dim, *out_dims] with fan-in normal init."""
+    fan_out = 1
+    for d in out_dims:
+        fan_out *= d
+    if scale is None:
+        scale = 1.0 / math.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, *out_dims), dtype=dtype) * scale
+    params: Dict[str, Any] = {"w": w}
+    specs: Dict[str, Any] = {"w": logical}
+    if use_bias:
+        params["b"] = jnp.zeros(out_dims, dtype=dtype)
+        specs["b"] = logical[1:]
+    return params, specs
+
+
+def dense_apply(params, x, compute_dtype, contract_dims: int = 1):
+    """x [..., in] @ w [in, *out] (+ b). ``contract_dims`` leading w dims
+    are contracted against trailing x dims."""
+    w = params["w"].astype(compute_dtype)
+    nd = w.ndim
+    x_axes = tuple(range(x.ndim - contract_dims, x.ndim))
+    w_axes = tuple(range(contract_dims))
+    y = jax.lax.dot_general(
+        x, w, dimension_numbers=((x_axes, w_axes), ((), ())),
+        preferred_element_type=compute_dtype)
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype):
+    return {"scale": jnp.ones((dim,), dtype=dtype)}, {"scale": (None,)}
+
+
+def rmsnorm_apply(params, x, eps: float, compute_dtype):
+    # normalize in fp32 for stability, return compute dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)              # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or 2-matrix GELU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_variant == "swiglu":
+        gate_p, gate_s = dense_init(ks[0], d, (f,), (shd.FSDP, shd.MLP), dtype,
+                                    use_bias=cfg.use_bias)
+        up_p, up_s = dense_init(ks[1], d, (f,), (shd.FSDP, shd.MLP), dtype,
+                                use_bias=cfg.use_bias)
+        down_p, down_s = dense_init(ks[2], f, (d,), (shd.MLP, shd.FSDP), dtype,
+                                    use_bias=cfg.use_bias)
+        return ({"gate": gate_p, "up": up_p, "down": down_p},
+                {"gate": gate_s, "up": up_s, "down": down_s})
+    up_p, up_s = dense_init(ks[0], d, (f,), (shd.FSDP, shd.MLP), dtype,
+                            use_bias=cfg.use_bias)
+    down_p, down_s = dense_init(ks[1], f, (d,), (shd.MLP, shd.FSDP), dtype,
+                                use_bias=cfg.use_bias)
+    return {"up": up_p, "down": down_p}, {"up": up_s, "down": down_s}
+
+
+def mlp_apply(params, x, cfg: ModelConfig, compute_dtype):
+    if cfg.mlp_variant == "swiglu":
+        g = dense_apply(params["gate"], x, compute_dtype)
+        u = dense_apply(params["up"], x, compute_dtype)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(dense_apply(params["up"], x, compute_dtype))
+    h = shd.constrain(h, shd.BATCH, None, shd.MLP)
+    return dense_apply(params["down"], h, compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding (padded, vocab-sharded)
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg: ModelConfig, dtype):
+    vp = shd.pad_vocab(cfg.vocab_size)
+    table = jax.random.normal(key, (vp, cfg.d_model), dtype=dtype)
+    params = {"table": table}
+    specs = {"table": (shd.VOCAB, shd.FSDP)}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        unembed = jax.random.normal(k2, (cfg.d_model, vp), dtype=dtype)
+        unembed = unembed / math.sqrt(cfg.d_model)
+        params["unembed"] = unembed
+        specs["unembed"] = (shd.FSDP, shd.VOCAB)
+    return params, specs
+
+
+def embed_apply(params, tokens, compute_dtype):
+    """tokens [B, S] int32 -> [B, S, D]."""
+    table = params["table"].astype(compute_dtype)
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed_apply(params, x, cfg: ModelConfig):
+    """x [B, S, D] -> fp32 logits [B, S, V_padded] with pad positions
+    masked to a large negative value (so CE over padded vocab is exact)."""
+    if cfg.tie_embeddings:
+        w = params["table"].astype(x.dtype).T / math.sqrt(cfg.d_model)
+    else:
+        w = params["unembed"].astype(x.dtype)
+    logits = jax.lax.dot_general(
+        x, w, dimension_numbers=(((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    logits = shd.constrain(logits, shd.BATCH, None, shd.VOCAB)
+    vp = logits.shape[-1]
+    pad = vp - cfg.vocab_size
+    if pad:
+        mask = jnp.arange(vp) < cfg.vocab_size
+        logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    return logits

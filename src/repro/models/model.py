@@ -1,0 +1,77 @@
+"""build_model + input_specs: the public model-construction API.
+
+``input_specs(cfg, shape)`` returns ``(batch_shapes, batch_logical_specs)``
+— ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+shardable, no device allocation), as required by the multi-pod dry-run.
+Modality frontends (vlm/audio) are STUBS: precomputed patch/frame
+embeddings appear directly in the batch.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    FAMILY_AUDIO, FAMILY_ENCDEC, FAMILY_VLM, ModelConfig, ShapeConfig,
+)
+from repro.distributed import sharding as shd
+from repro.models.transformer import Model
+
+
+def build_model(cfg: ModelConfig, kv_repeat: int = 1,
+                remat_group: int = 0, causal_skip: bool = False,
+                kv_cache_bits: int = 16,
+                kv_dus_write: bool = False) -> Model:
+    return Model(cfg=cfg, kv_repeat=kv_repeat, remat_group=remat_group,
+                 causal_skip=causal_skip, kv_cache_bits=kv_cache_bits,
+                 kv_dus_write=kv_dus_write)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                model: Optional[Model] = None
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """ShapeDtypeStructs + logical axis specs for one (arch, shape) cell.
+
+    train  : full batch with targets
+    prefill: prompt batch (no targets)
+    decode : single token + zeroed cache of seq_len capacity
+    """
+    model = model or build_model(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+
+    def add_frontend():
+        f = cfg.frontend_tokens
+        if cfg.family == FAMILY_VLM:
+            batch["patch_embeds"] = _sds((b, f, cfg.d_model), cfg.compute_dtype)
+            specs["patch_embeds"] = (shd.BATCH, None, None)
+        elif cfg.family in (FAMILY_AUDIO, FAMILY_ENCDEC):
+            batch["frame_embeds"] = _sds((b, f, cfg.d_model), cfg.compute_dtype)
+            specs["frame_embeds"] = (shd.BATCH, None, None)
+
+    if shape.kind in ("train", "prefill"):
+        text_len = s
+        if cfg.family == FAMILY_VLM:
+            text_len = s - cfg.frontend_tokens
+        add_frontend()
+        batch["tokens"] = _sds((b, text_len), jnp.int32)
+        specs["tokens"] = (shd.BATCH, None)
+        if shape.kind == "train":
+            batch["targets"] = _sds((b, text_len), jnp.int32)
+            specs["targets"] = (shd.BATCH, None)
+        return batch, specs
+
+    # decode: one new token against a cache of capacity seq_len
+    batch["tokens"] = _sds((b, 1), jnp.int32)
+    specs["tokens"] = (shd.BATCH, None)
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(b, s))
+    batch["cache"] = cache_shapes
+    specs["cache"] = model.cache_specs()
+    return batch, specs

@@ -1,0 +1,235 @@
+"""Mamba-2 / SSD block (state-space duality, arXiv:2405.21060).
+
+Chunked SSD: the sequence is split into chunks of ``Q`` tokens; a single
+``lax.scan`` carries the inter-chunk SSM state while each step computes the
+intra-chunk (quadratic, attention-like) term — O(S·Q) compute, O(1) state.
+
+Recurrence (per head h, state dim n, head dim p):
+    h_t = exp(dt_t·A) h_{t-1} + B_t (dt_t x_t)
+    y_t = C_t · h_t + D x_t
+with A negative scalar per head, B/C shared across heads (n_groups=1 — the
+multi-value-attention analog in the SSD paper).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.models.layers import dense_apply, dense_init, rmsnorm_apply, rmsnorm_init
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(d_inner, nheads, head_dim, state)."""
+    d_inner = cfg.ssm.expand * cfg.d_model
+    nheads = d_inner // cfg.ssm.head_dim
+    return d_inner, nheads, cfg.ssm.head_dim, cfg.ssm.state_size
+
+
+def ssd_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_inner, nh, p, n = ssm_dims(cfg)
+    cw = cfg.ssm.conv_width
+    ks = jax.random.split(key, 8)
+    z_p, z_s = dense_init(ks[0], d, (nh, p), (shd.FSDP, shd.SSD_HEADS, None), dtype)
+    x_p, x_s = dense_init(ks[1], d, (nh, p), (shd.FSDP, shd.SSD_HEADS, None), dtype)
+    b_p, b_s = dense_init(ks[2], d, (n,), (shd.FSDP, None), dtype)
+    c_p, c_s = dense_init(ks[3], d, (n,), (shd.FSDP, None), dtype)
+    dt_p, dt_s = dense_init(ks[4], d, (nh,), (shd.FSDP, shd.SSD_HEADS), dtype)
+    o_p, o_s = dense_init(ks[5], nh * p, (d,), (shd.SSD_HEADS, shd.FSDP), dtype,
+                          scale=1.0 / math.sqrt(d_inner))
+    o_p = {"w": o_p["w"].reshape(nh, p, d)}
+    o_s = {"w": (shd.SSD_HEADS, None, shd.FSDP)}
+    # A_log: A = -exp(A_log) in [-16, -1]
+    a_log = jnp.log(jax.random.uniform(ks[6], (nh,), dtype=jnp.float32,
+                                       minval=1.0, maxval=16.0))
+    # dt bias: softplus^{-1}(u), u ~ logU[1e-3, 1e-1]
+    u = jnp.exp(jax.random.uniform(ks[7], (nh,), dtype=jnp.float32,
+                                   minval=math.log(1e-3), maxval=math.log(1e-1)))
+    dt_bias = u + jnp.log(-jnp.expm1(-u))
+    # depthwise causal convs on x / B / C streams
+    conv_x = jnp.zeros((cw, nh, p), dtype=dtype).at[cw - 1].set(1.0)
+    conv_b = jnp.zeros((cw, n), dtype=dtype).at[cw - 1].set(1.0)
+    conv_c = jnp.zeros((cw, n), dtype=dtype).at[cw - 1].set(1.0)
+    norm_p, norm_s = rmsnorm_init(nh * p, dtype)
+    params = {
+        "z": z_p, "x": x_p, "B": b_p, "C": c_p, "dt": dt_p, "o": o_p,
+        "A_log": a_log.astype(dtype), "D": jnp.ones((nh,), dtype=dtype),
+        "dt_bias": dt_bias.astype(dtype),
+        "conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c,
+        "norm": norm_p,
+    }
+    specs = {
+        "z": z_s, "x": x_s, "B": b_s, "C": c_s, "dt": dt_s, "o": o_s,
+        "A_log": (shd.SSD_HEADS,), "D": (shd.SSD_HEADS,),
+        "dt_bias": (shd.SSD_HEADS,),
+        "conv_x": (None, shd.SSD_HEADS, None), "conv_b": (None, None),
+        "conv_c": (None, None),
+        "norm": norm_s,
+    }
+    return params, specs
+
+
+def _causal_depthwise_conv(u: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """u: [B, S, ...chan], w: [cw, ...chan] -> same shape as u (causal)."""
+    cw = w.shape[0]
+    pad = [(0, 0), (cw - 1, 0)] + [(0, 0)] * (u.ndim - 2)
+    up = jnp.pad(u, pad)
+    out = jnp.zeros_like(u)
+    s = u.shape[1]
+    for i in range(cw):
+        out = out + w[i] * jax.lax.dynamic_slice_in_dim(up, i, s, axis=1)
+    return out
+
+
+def ssd_scan(xdt: jnp.ndarray, a: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+             chunk: int, init_state: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.
+
+    xdt: [b, s, h, p] (x pre-multiplied by dt); a: [b, s, h] (dt*A, negative);
+    B, C: [b, s, n]. Returns (y [b, s, h, p], final_state [b, h, p, n]).
+    """
+    b, s, h, p = xdt.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q //= 2
+    nc = s // q
+
+    xdt_c = xdt.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    a_c = a.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    B_c = B.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    C_c = C.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), dtype=jnp.float32)
+
+    mask = jnp.tril(jnp.ones((q, q), dtype=bool))
+
+    def step(state, inp):
+        xc, ac, Bc, Cc = inp                      # [b,q,h,p], [b,q,h], [b,q,n]
+        cum = jnp.cumsum(ac, axis=1)              # [b,q,h]
+        total = cum[:, -1]                        # [b,h]
+        # intra-chunk (attention-like) term
+        scores = jnp.einsum("bin,bjn->bij", Cc, Bc,
+                            preferred_element_type=jnp.float32)  # [b,q,q]
+        ldecay = cum[:, :, None, :] - cum[:, None, :, :]          # [b,qi,qj,h]
+        ldecay = jnp.where(mask[None, :, :, None], ldecay, -jnp.inf)
+        L = jnp.exp(ldecay)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", scores, L,
+                             xc.astype(jnp.float32))
+        # inter-chunk term from carried state
+        y_inter = jnp.einsum("bin,bhpn->bihp", Cc, state) \
+            * jnp.exp(cum)[..., None]
+        # state update
+        w = jnp.exp(total[:, None, :] - cum)       # [b,q,h]
+        chunk_state = jnp.einsum("bjn,bjh,bjhp->bhpn", Bc, w,
+                                 xc.astype(jnp.float32))
+        new_state = jnp.exp(total)[:, :, None, None] * state + chunk_state
+        return new_state, (y_intra + y_inter)
+
+    # checkpoint per chunk: backward recomputes the [b,q,q,h] decay tile
+    # instead of saving it for every chunk
+    final_state, ys = jax.lax.scan(jax.checkpoint(step), init_state,
+                                   (xdt_c, a_c, B_c, C_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y.astype(xdt.dtype), final_state
+
+
+def ssd_forward(params, x, cfg: ModelConfig, *,
+                init_state=None, conv_state=None, return_state: bool = False):
+    """Full mamba2 block over a sequence. x: [B, S, D].
+
+    Returns (y, state_dict or None) where state_dict carries the SSM state
+    and conv tail for streaming/decode continuation.
+    """
+    cd = x.dtype
+    d_inner, nh, p, n = ssm_dims(cfg)
+    cw = cfg.ssm.conv_width
+    b, s, _ = x.shape
+
+    z = dense_apply(params["z"], x, cd)                       # [B,S,H,P]
+    xs = dense_apply(params["x"], x, cd)
+    Bp = dense_apply(params["B"], x, cd)                      # [B,S,N]
+    Cp = dense_apply(params["C"], x, cd)
+    dt = dense_apply(params["dt"], x, jnp.float32)            # [B,S,H]
+
+    if conv_state is not None:
+        # prepend cached tail so the causal conv continues the stream
+        xs = jnp.concatenate([conv_state["x"].astype(cd), xs], axis=1)
+        Bp = jnp.concatenate([conv_state["B"].astype(cd), Bp], axis=1)
+        Cp = jnp.concatenate([conv_state["C"].astype(cd), Cp], axis=1)
+    xs_c = jax.nn.silu(_causal_depthwise_conv(xs, params["conv_x"].astype(cd)))
+    Bp_c = jax.nn.silu(_causal_depthwise_conv(Bp, params["conv_b"].astype(cd)))
+    Cp_c = jax.nn.silu(_causal_depthwise_conv(Cp, params["conv_c"].astype(cd)))
+    if conv_state is not None:
+        xs_c, Bp_c, Cp_c = (t[:, -s:] for t in (xs_c, Bp_c, Cp_c))
+    new_conv = None
+    if return_state:
+        tail = cw - 1
+        src_x = xs if conv_state is None else xs
+        new_conv = {"x": src_x[:, -tail:], "B": Bp[:, -tail:], "C": Cp[:, -tail:]}
+
+    xs_c = shd.constrain(xs_c, shd.BATCH, None, shd.SSD_HEADS, None)
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))         # [H]
+    a = dt * A                                                # [B,S,H]
+    xdt = xs_c * dt.astype(cd)[..., None]
+
+    y, state = ssd_scan(xdt, a, Bp_c, Cp_c, cfg.ssm.chunk_size,
+                        init_state=init_state)
+    y = y + params["D"].astype(cd)[None, None, :, None] * xs_c
+    y = y * jax.nn.silu(z)
+    y = shd.constrain(y, shd.BATCH, None, shd.SSD_HEADS, None)
+    y = rmsnorm_apply(params["norm"], y.reshape(b, s, nh * p),
+                      cfg.norm_eps, cd).reshape(b, s, nh, p)
+    out = dense_apply(params["o"], y, cd, contract_dims=2)
+    out = shd.constrain(out, shd.BATCH, None, None)
+    if return_state:
+        return out, {"ssm": state, "conv": new_conv}
+    return out, None
+
+
+def ssd_decode(params, x, cfg: ModelConfig, *, state):
+    """Single-token step. x: [B, 1, D]; state: {'ssm': [B,H,P,N],
+    'conv': {'x': [B,cw-1,H,P], 'B': [B,cw-1,N], 'C': [B,cw-1,N]}}.
+    Returns (y [B,1,D], new_state)."""
+    cd = x.dtype
+    d_inner, nh, p, n = ssm_dims(cfg)
+    cw = cfg.ssm.conv_width
+
+    z = dense_apply(params["z"], x, cd)[:, 0]                 # [B,H,P]
+    xs = dense_apply(params["x"], x, cd)                      # [B,1,H,P]
+    Bp = dense_apply(params["B"], x, cd)
+    Cp = dense_apply(params["C"], x, cd)
+    dt = dense_apply(params["dt"], x, jnp.float32)[:, 0]      # [B,H]
+
+    conv = state["conv"]
+    x_win = jnp.concatenate([conv["x"].astype(cd), xs], axis=1)   # [B,cw,H,P]
+    B_win = jnp.concatenate([conv["B"].astype(cd), Bp], axis=1)
+    C_win = jnp.concatenate([conv["C"].astype(cd), Cp], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bwhp,whp->bhp", x_win, params["conv_x"].astype(cd)))
+    Bc = jax.nn.silu(jnp.einsum("bwn,wn->bn", B_win, params["conv_b"].astype(cd)))
+    Cc = jax.nn.silu(jnp.einsum("bwn,wn->bn", C_win, params["conv_c"].astype(cd)))
+    new_conv = {"x": x_win[:, 1:], "B": B_win[:, 1:], "C": C_win[:, 1:]}
+
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                   # [B,H]
+    h = state["ssm"]                                          # [B,H,P,N] fp32
+    upd = jnp.einsum("bn,bhp,bh->bhpn", Bc.astype(jnp.float32),
+                     xc.astype(jnp.float32), dt)
+    h_new = decay[:, :, None, None] * h + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cc.astype(jnp.float32), h_new)
+    y = y.astype(cd) + params["D"].astype(cd)[None, :, None] * xc
+    y = y * jax.nn.silu(z)
+    b = x.shape[0]
+    y = rmsnorm_apply(params["norm"], y.reshape(b, nh * p), cfg.norm_eps, cd)
+    y = y.reshape(b, 1, nh, p)
+    out = dense_apply(params["o"], y, cd, contract_dims=2)
+    return out, {"ssm": h_new, "conv": new_conv}

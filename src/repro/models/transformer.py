@@ -1,0 +1,583 @@
+"""Model assembly: scan-over-layers transformer for all assigned families.
+
+The per-layer parameter trees are stacked along a leading ``layers`` axis and
+driven by ``lax.scan`` — one layer is traced once, keeping the HLO compact
+for the 512-device dry-run compiles and enabling per-layer remat.
+
+Families:
+  dense / vlm       : attn + MLP          (vlm prepends stub patch embeddings)
+  moe               : attn + MoE FFN
+  ssm               : mamba2 SSD block only
+  hybrid            : parallel 0.5*(attn + SSD) then MLP  (hymba)
+  encdec / audio    : bidirectional encoder + causal decoder w/ cross-attn
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    FAMILY_AUDIO, FAMILY_DENSE, FAMILY_ENCDEC, FAMILY_HYBRID, FAMILY_MOE,
+    FAMILY_SSM, FAMILY_VLM, ModelConfig,
+)
+from repro.distributed import sharding as shd
+from repro.models import attention as attn_mod
+from repro.models import layers as lyr
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+
+def _remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _stack_layer_init(init_one, key, num_layers: int):
+    keys = jax.random.split(key, num_layers)
+    params = jax.vmap(init_one)(keys)
+    return params
+
+
+def _stack_specs(specs):
+    """Prepend the (unsharded) layers axis to every spec leaf."""
+    return jax.tree.map(lambda s: (shd.LAYERS, *s), specs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# Per-family layer init / apply
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, dtype, cross: bool = False):
+    """One decoder layer's (params, specs) for cfg.family."""
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    fam = cfg.family
+
+    params["ln1"], specs["ln1"] = lyr.rmsnorm_init(cfg.d_model, dtype)
+    if fam in (FAMILY_DENSE, FAMILY_MOE, FAMILY_VLM, FAMILY_HYBRID,
+               FAMILY_ENCDEC, FAMILY_AUDIO):
+        params["attn"], specs["attn"] = attn_mod.attn_init(ks[0], cfg, dtype)
+    if fam in (FAMILY_SSM, FAMILY_HYBRID):
+        params["ssd"], specs["ssd"] = ssm_mod.ssd_init(ks[1], cfg, dtype)
+    if cross:
+        params["ln_x"], specs["ln_x"] = lyr.rmsnorm_init(cfg.d_model, dtype)
+        params["xattn"], specs["xattn"] = attn_mod.attn_init(ks[2], cfg, dtype)
+    if fam == FAMILY_MOE:
+        params["ln2"], specs["ln2"] = lyr.rmsnorm_init(cfg.d_model, dtype)
+        params["moe"], specs["moe"] = moe_mod.moe_init(ks[3], cfg, dtype)
+    elif cfg.d_ff > 0:
+        params["ln2"], specs["ln2"] = lyr.rmsnorm_init(cfg.d_model, dtype)
+        params["mlp"], specs["mlp"] = lyr.mlp_init(ks[4], cfg, dtype)
+    return params, specs
+
+
+def _layer_forward(lp, x, cfg: ModelConfig, *, positions, kv_repeat, causal,
+                   window, cross_kv=None, xattn_len=None, kv_valid_len=None,
+                   collect_kv=False, collect_state=False,
+                   causal_skip=False):
+    """Full-sequence layer. Returns (x, aux, collected)."""
+    cd = x.dtype
+    fam = cfg.family
+    aux = jnp.float32(0.0)
+    collected: Dict[str, Any] = {}
+
+    h = lyr.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps, cd)
+    delta = jnp.zeros_like(x)
+    if "attn" in lp:
+        a_out, kv = attn_mod.attn_forward(
+            lp["attn"], h, cfg, positions=positions, kv_repeat=kv_repeat,
+            causal=causal, window=window, return_kv=collect_kv,
+            kv_valid_len=kv_valid_len, causal_skip=causal_skip)
+        if collect_kv and kv is not None:
+            collected["k"], collected["v"] = kv
+        delta = delta + a_out
+    if "ssd" in lp:
+        s_out, state = ssm_mod.ssd_forward(
+            lp["ssd"], h, cfg, return_state=collect_state)
+        if collect_state and state is not None:
+            collected["ssm"] = state["ssm"]
+            collected["conv_x"] = state["conv"]["x"]
+            collected["conv_b"] = state["conv"]["B"]
+            collected["conv_c"] = state["conv"]["C"]
+        delta = delta + s_out
+    if "attn" in lp and "ssd" in lp:
+        delta = delta * 0.5                     # hymba: mean of parallel heads
+    x = x + delta
+
+    if cross_kv is not None:
+        hx = lyr.rmsnorm_apply(lp["ln_x"], x, cfg.norm_eps, cd)
+        x_out, _ = attn_mod.attn_forward(
+            lp["xattn"], hx, cfg, positions=positions, causal=False,
+            xattn_kv=cross_kv, kv_valid_len=xattn_len)
+        x = x + x_out
+
+    if "moe" in lp:
+        h2 = lyr.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps, cd)
+        m_out, m_aux = moe_mod.moe_forward(lp["moe"], h2, cfg)
+        x = x + m_out
+        aux = aux + m_aux
+    elif "mlp" in lp:
+        h2 = lyr.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps, cd)
+        x = x + lyr.mlp_apply(lp["mlp"], h2, cfg, cd)
+    x = shd.constrain(x, shd.BATCH, None, None)
+    return x, aux, collected
+
+
+def _layer_decode(lp, x, cfg: ModelConfig, *, cache_layer, cache_pos,
+                  kv_repeat, window, xattn_len=None, dus_write=False):
+    """Single-token layer step. Returns (x, new_cache_layer)."""
+    cd = x.dtype
+    new_cache: Dict[str, Any] = {}
+    h = lyr.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps, cd)
+    delta = jnp.zeros_like(x)
+    if "attn" in lp:
+        scales = None
+        if "k_scale" in cache_layer:
+            scales = (cache_layer["k_scale"], cache_layer["v_scale"])
+        a_out, ck, cv, new_scales = attn_mod.attn_decode(
+            lp["attn"], h, cfg, cache_k=cache_layer["k"],
+            cache_v=cache_layer["v"], cache_pos=cache_pos,
+            kv_repeat=kv_repeat, window=window, kv_scales=scales,
+            dus_write=dus_write)
+        new_cache["k"], new_cache["v"] = ck, cv
+        if new_scales is not None:
+            new_cache["k_scale"], new_cache["v_scale"] = new_scales
+        delta = delta + a_out
+    if "ssd" in lp:
+        state = {"ssm": cache_layer["ssm"],
+                 "conv": {"x": cache_layer["conv_x"],
+                          "B": cache_layer["conv_b"],
+                          "C": cache_layer["conv_c"]}}
+        s_out, new_state = ssm_mod.ssd_decode(lp["ssd"], h, cfg, state=state)
+        new_cache["ssm"] = new_state["ssm"]
+        new_cache["conv_x"] = new_state["conv"]["x"]
+        new_cache["conv_b"] = new_state["conv"]["B"]
+        new_cache["conv_c"] = new_state["conv"]["C"]
+        delta = delta + s_out
+    if "attn" in lp and "ssd" in lp:
+        delta = delta * 0.5
+    x = x + delta
+
+    if "xattn" in lp:
+        hx = lyr.rmsnorm_apply(lp["ln_x"], x, cfg.norm_eps, cd)
+        x_out, _, _, _ = attn_mod.attn_decode(
+            lp["xattn"], hx, cfg, cache_k=None, cache_v=None,
+            cache_pos=cache_pos,
+            xattn_kv=(cache_layer["cross_k"], cache_layer["cross_v"]),
+            xattn_len=xattn_len)
+        new_cache["cross_k"] = cache_layer["cross_k"]
+        new_cache["cross_v"] = cache_layer["cross_v"]
+        x = x + x_out
+
+    if "moe" in lp:
+        h2 = lyr.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps, cd)
+        m_out, _ = moe_mod.moe_forward(lp["moe"], h2, cfg)
+        x = x + m_out
+    elif "mlp" in lp:
+        h2 = lyr.rmsnorm_apply(lp["ln2"], x, cfg.norm_eps, cd)
+        x = x + lyr.mlp_apply(lp["mlp"], h2, cfg, cd)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Model:
+    """Pure-function bundle for one architecture.
+
+    ``kv_repeat`` is a build-time constant (from the sharding profile) since
+    it determines cache shapes. ``remat_group > 1`` enables two-level
+    (sqrt-L) remat: the layer scan is regrouped as
+    ``[n_groups, group, ...]`` with a checkpoint at the group level, cutting
+    saved residual carries from L to (L/group + group) at the cost of one
+    extra in-group forward during backward.
+    """
+    cfg: ModelConfig
+    kv_repeat: int = 1
+    remat_group: int = 0
+    causal_skip: bool = False    # §Perf: skip fully-masked causal kv tiles
+    kv_cache_bits: int = 16      # §Perf: 8 -> int8 KV cache + bf16 scales
+    kv_dus_write: bool = False   # §Perf: per-shard DUS cache write
+
+    # -------------------------------------------------- init
+    def init(self, key):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        k_embed, k_layers, k_enc, k_final = jax.random.split(key, 4)
+        params: Dict[str, Any] = {}
+        params["embed"], _ = lyr.embed_init(k_embed, cfg, dtype)
+
+        cross = cfg.family in (FAMILY_ENCDEC, FAMILY_AUDIO)
+        init_one = lambda k: _layer_init(k, cfg, dtype, cross=cross)[0]
+        params["layers"] = _stack_layer_init(init_one, k_layers, cfg.num_layers)
+
+        if cfg.encoder_layers:
+            enc_cfg = cfg
+            init_enc = lambda k: _layer_init(k, enc_cfg, dtype, cross=False)[0]
+            params["encoder"] = _stack_layer_init(init_enc, k_enc,
+                                                  cfg.encoder_layers)
+            params["enc_norm"], _ = lyr.rmsnorm_init(cfg.d_model, dtype)
+        params["final_norm"], _ = lyr.rmsnorm_init(cfg.d_model, dtype)
+        return params
+
+    def specs(self):
+        """Logical-axis spec tree matching init()'s structure (static —
+        derived via eval_shape so nothing is allocated)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        cross = cfg.family in (FAMILY_ENCDEC, FAMILY_AUDIO)
+        specs: Dict[str, Any] = {}
+        _, e_specs = _eval_specs(lambda k: lyr.embed_init(k, cfg, dtype))
+        specs["embed"] = e_specs
+        _, l_specs = _eval_specs(lambda k: _layer_init(k, cfg, dtype, cross=cross))
+        specs["layers"] = _stack_specs(l_specs)
+        if cfg.encoder_layers:
+            _, enc_specs = _eval_specs(
+                lambda k: _layer_init(k, cfg, dtype, cross=False))
+            specs["encoder"] = _stack_specs(enc_specs)
+            specs["enc_norm"] = {"scale": (None,)}
+        specs["final_norm"] = {"scale": (None,)}
+        return specs
+
+    # -------------------------------------------------- embedding helpers
+    def _embed_inputs(self, params, batch):
+        """Returns (embeds [B,S,D], positions [B,S])."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        tok_emb = lyr.embed_apply(params["embed"], batch["tokens"], cd)
+        if cfg.family == FAMILY_VLM and "patch_embeds" in batch:
+            emb = jnp.concatenate(
+                [batch["patch_embeds"].astype(cd), tok_emb], axis=1)
+        else:
+            emb = tok_emb
+        b, s = emb.shape[0], emb.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        return emb, positions
+
+    def _encode(self, params, batch):
+        """Encoder stack over stub frame embeddings (audio/encdec)."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = batch["frame_embeds"].astype(cd)
+        b, f = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+
+        def enc_layer(carry, lp):
+            h, _ = carry
+            h2, aux, _ = _layer_forward(
+                lp, h, cfg, positions=positions, kv_repeat=self.kv_repeat,
+                causal=False, window=0)
+            return (h2, aux), None
+
+        fn = _remat_wrap(enc_layer, cfg.remat)
+        (x, _), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), params["encoder"])
+        return lyr.rmsnorm_apply(params["enc_norm"], x, cfg.norm_eps, cd)
+
+    def _cross_kv(self, params, enc_out):
+        """Per-decoder-layer cross K/V from encoder output (stacked [L,...])."""
+        cfg = self.cfg
+        cd = enc_out.dtype
+        b, f = enc_out.shape[0], enc_out.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(f, dtype=jnp.int32), (b, f))
+
+        def one_layer(lp):
+            k = lyr.dense_apply(lp["xattn"]["k"], enc_out, cd)
+            v = lyr.dense_apply(lp["xattn"]["v"], enc_out, cd)
+            if cfg.rope_theta > 0:
+                k = attn_mod.apply_rope(k, positions, cfg.rope_theta)
+            k = attn_mod._repeat_kv(k, self.kv_repeat)
+            v = attn_mod._repeat_kv(v, self.kv_repeat)
+            return k, v
+
+        return jax.lax.map(one_layer, params["layers"])
+
+    # -------------------------------------------------- train forward
+    def train_logits(self, params, batch):
+        """Teacher-forced forward. Returns (logits fp32 [B,S,Vp], aux)."""
+        cfg = self.cfg
+        emb, positions = self._embed_inputs(params, batch)
+        cross_kv = None
+        xattn_len = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch)
+            cross_kv_all = self._cross_kv(params, enc_out)  # ([L,..], [L,..])
+        window = cfg.attn_window
+
+        def layer(carry, lp_and_kv):
+            x, aux = carry
+            if cfg.encoder_layers:
+                lp, ckv = lp_and_kv
+            else:
+                lp, ckv = lp_and_kv, None
+            x, a, _ = _layer_forward(
+                lp, x, cfg, positions=positions, kv_repeat=self.kv_repeat,
+                causal=True, window=window, cross_kv=ckv,
+                xattn_len=xattn_len, causal_skip=self.causal_skip)
+            return (x, aux + a), None
+
+        fn = _remat_wrap(layer, cfg.remat)
+        xs = (params["layers"], cross_kv_all) if cfg.encoder_layers \
+            else params["layers"]
+        g = self.remat_group
+        if g > 1 and cfg.num_layers % g == 0:
+            n_groups = cfg.num_layers // g
+
+            def regroup(a):
+                return a.reshape(n_groups, g, *a.shape[1:])
+
+            xs_g = jax.tree.map(regroup, xs)
+
+            def group_body(carry, gxs):
+                carry, _ = jax.lax.scan(fn, carry, gxs)
+                return carry, None
+
+            (x, aux), _ = jax.lax.scan(jax.checkpoint(group_body),
+                                       (emb, jnp.float32(0.0)), xs_g)
+        else:
+            (x, aux), _ = jax.lax.scan(fn, (emb, jnp.float32(0.0)), xs)
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = lyr.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps, cd)
+        logits = lyr.unembed_apply(params["embed"], x, cfg)
+        return logits, aux
+
+    def loss(self, params, batch):
+        """Mean CE over targets >= 0 (+ MoE aux). Returns (loss, metrics)."""
+        logits, aux = self.train_logits(params, batch)
+        targets = batch["targets"]
+        if logits.shape[1] != targets.shape[1]:
+            # vlm: logits cover patch positions too; score text tail only
+            logits = logits[:, logits.shape[1] - targets.shape[1]:]
+        mask = (targets >= 0).astype(jnp.float32)
+        tgt = jnp.maximum(targets, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        ce = (logz - gold) * mask
+        ntok = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(ce) / ntok + aux
+        return loss, {"ce": jnp.sum(ce) / ntok, "aux": aux, "ntok": ntok}
+
+    # -------------------------------------------------- serving
+    def cache_len_for(self, seq_len: int) -> int:
+        if self.cfg.attn_window:
+            return min(seq_len, self.cfg.attn_window)
+        return seq_len
+
+    def init_cache(self, batch_size: int, cache_len: int):
+        """Zeroed decode cache (also used via eval_shape by the dry-run)."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        L, b = cfg.num_layers, batch_size
+        layers: Dict[str, Any] = {}
+        if cfg.has_attention:
+            hs = cfg.num_kv_heads * self.kv_repeat
+            dh = cfg.resolved_head_dim
+            s_c = self.cache_len_for(cache_len)
+            kv_dtype = jnp.int8 if self.kv_cache_bits == 8 else cd
+            layers["k"] = jnp.zeros((L, b, s_c, hs, dh), dtype=kv_dtype)
+            layers["v"] = jnp.zeros((L, b, s_c, hs, dh), dtype=kv_dtype)
+            if self.kv_cache_bits == 8:
+                layers["k_scale"] = jnp.zeros((L, b, s_c, hs), dtype=cd)
+                layers["v_scale"] = jnp.zeros((L, b, s_c, hs), dtype=cd)
+        if cfg.ssm.enabled:
+            d_inner, nh, p, n = ssm_mod.ssm_dims(cfg)
+            cw = cfg.ssm.conv_width
+            layers["ssm"] = jnp.zeros((L, b, nh, p, n), dtype=jnp.float32)
+            layers["conv_x"] = jnp.zeros((L, b, cw - 1, nh, p), dtype=cd)
+            layers["conv_b"] = jnp.zeros((L, b, cw - 1, cfg.ssm.state_size), dtype=cd)
+            layers["conv_c"] = jnp.zeros((L, b, cw - 1, cfg.ssm.state_size), dtype=cd)
+        if cfg.encoder_layers:
+            hs = cfg.num_kv_heads * self.kv_repeat
+            dh = cfg.resolved_head_dim
+            f = cfg.frontend_tokens
+            layers["cross_k"] = jnp.zeros((L, b, f, hs, dh), dtype=cd)
+            layers["cross_v"] = jnp.zeros((L, b, f, hs, dh), dtype=cd)
+        return {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+
+    def cache_specs(self):
+        """Logical shardings for the decode cache."""
+        cfg = self.cfg
+        layers: Dict[str, Any] = {}
+        if cfg.has_attention:
+            layers["k"] = (shd.LAYERS, shd.BATCH, shd.KV_SEQ, shd.KV_HEADS, None)
+            layers["v"] = (shd.LAYERS, shd.BATCH, shd.KV_SEQ, shd.KV_HEADS, None)
+            if self.kv_cache_bits == 8:
+                layers["k_scale"] = (shd.LAYERS, shd.BATCH, shd.KV_SEQ,
+                                     shd.KV_HEADS)
+                layers["v_scale"] = (shd.LAYERS, shd.BATCH, shd.KV_SEQ,
+                                     shd.KV_HEADS)
+        if cfg.ssm.enabled:
+            layers["ssm"] = (shd.LAYERS, shd.BATCH, shd.SSD_HEADS, None, None)
+            layers["conv_x"] = (shd.LAYERS, shd.BATCH, None, shd.SSD_HEADS, None)
+            layers["conv_b"] = (shd.LAYERS, shd.BATCH, None, None)
+            layers["conv_c"] = (shd.LAYERS, shd.BATCH, None, None)
+        if cfg.encoder_layers:
+            layers["cross_k"] = (shd.LAYERS, shd.BATCH, None, shd.KV_HEADS, None)
+            layers["cross_v"] = (shd.LAYERS, shd.BATCH, None, shd.KV_HEADS, None)
+        return {"pos": (), "layers": layers}
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Process a prompt, return (last-token logits, filled cache).
+
+        ``max_len``: cache capacity to allocate (>= prompt length) so
+        subsequent ``decode_step`` calls have room; defaults to prompt
+        length + 1.
+        """
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        emb, positions = self._embed_inputs(params, batch)
+        b, s = emb.shape[0], emb.shape[1]
+        window = cfg.attn_window
+        collect_kv = cfg.has_attention
+        collect_state = cfg.ssm.enabled
+
+        cross_kv_all = None
+        if cfg.encoder_layers:
+            enc_out = self._encode(params, batch)
+            cross_kv_all = self._cross_kv(params, enc_out)
+
+        def layer(x, lp_and_kv):
+            if cfg.encoder_layers:
+                lp, ckv = lp_and_kv
+            else:
+                lp, ckv = lp_and_kv, None
+            x, _, coll = _layer_forward(
+                lp, x, cfg, positions=positions, kv_repeat=self.kv_repeat,
+                causal=True, window=window, cross_kv=ckv,
+                collect_kv=collect_kv, collect_state=collect_state)
+            return x, coll
+
+        xs = (params["layers"], cross_kv_all) if cfg.encoder_layers \
+            else params["layers"]
+        x, collected = jax.lax.scan(layer, emb, xs)
+        x = lyr.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps, cd)
+        logits = lyr.unembed_apply(params["embed"], x[:, -1:], cfg)
+
+        cap = max_len if max_len is not None else s + 1
+        if cap < s and not cfg.attn_window:
+            raise ValueError(f"prefill cache capacity {cap} < prompt "
+                             f"embedding length {s}")
+        cache = self.init_cache(b, cap)
+        layers = dict(cache["layers"])
+        if collect_kv:
+            k_full, v_full = collected["k"], collected["v"]   # [L,B,S,hs,dh]
+            s_c = layers["k"].shape[2]
+            if self.kv_cache_bits == 8:
+                k_full, k_sc = attn_mod._quantize_kv(k_full)
+                v_full, v_sc = attn_mod._quantize_kv(v_full)
+                if s_c < s:
+                    layers["k_scale"] = k_sc[:, :, s - s_c:].astype(cd)
+                    layers["v_scale"] = v_sc[:, :, s - s_c:].astype(cd)
+                else:
+                    layers["k_scale"] = layers["k_scale"].at[:, :, :s].set(
+                        k_sc.astype(cd))
+                    layers["v_scale"] = layers["v_scale"].at[:, :, :s].set(
+                        v_sc.astype(cd))
+            kv_dt = layers["k"].dtype
+            if s_c < s:
+                # sliding window: keep the ring-aligned tail (s % window == 0)
+                layers["k"] = k_full[:, :, s - s_c:].astype(kv_dt)
+                layers["v"] = v_full[:, :, s - s_c:].astype(kv_dt)
+            else:
+                layers["k"] = layers["k"].at[:, :, :s].set(k_full.astype(kv_dt))
+                layers["v"] = layers["v"].at[:, :, :s].set(v_full.astype(kv_dt))
+        if collect_state:
+            layers["ssm"] = collected["ssm"]
+            layers["conv_x"] = collected["conv_x"].astype(cd)
+            layers["conv_b"] = collected["conv_b"].astype(cd)
+            layers["conv_c"] = collected["conv_c"].astype(cd)
+        if cfg.encoder_layers and cross_kv_all is not None:
+            layers["cross_k"] = cross_kv_all[0].astype(cd)
+            layers["cross_v"] = cross_kv_all[1].astype(cd)
+        return logits, {"pos": jnp.asarray(s, jnp.int32), "layers": layers}
+
+    def prefill_streaming(self, params, batch, chunk: int = 4096):
+        """SSM-family chunked prefill: process an arbitrarily long prompt in
+        fixed-size chunks carrying the SSM/conv state between them — peak
+        activation memory is O(chunk), which is what makes the ``long_500k``
+        shape *ingestable*, not just decodable. Returns (last-token logits,
+        decode-ready cache)."""
+        cfg = self.cfg
+        assert cfg.family == FAMILY_SSM, "streaming prefill is SSM-only"
+        cd = jnp.dtype(cfg.compute_dtype)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        assert s % chunk == 0 or s < chunk, \
+            "prompt length must be a multiple of the chunk"
+        chunk = min(chunk, s)
+        cache = self.init_cache(b, 1)
+        layers = cache["layers"]
+        logits = None
+        for c0 in range(0, s, chunk):
+            tok_c = tokens[:, c0:c0 + chunk]
+            x = lyr.embed_apply(params["embed"], tok_c, cd)
+
+            def layer(x, lp_and_cl):
+                lp, cl = lp_and_cl
+                h = lyr.rmsnorm_apply(lp["ln1"], x, cfg.norm_eps, cd)
+                out, st = ssm_mod.ssd_forward(
+                    lp["ssd"], h, cfg,
+                    init_state=cl["ssm"],
+                    conv_state={"x": cl["conv_x"], "B": cl["conv_b"],
+                                "C": cl["conv_c"]},
+                    return_state=True)
+                x = x + out
+                new_cl = {"ssm": st["ssm"],
+                          "conv_x": st["conv"]["x"].astype(cd),
+                          "conv_b": st["conv"]["B"].astype(cd),
+                          "conv_c": st["conv"]["C"].astype(cd)}
+                return x, new_cl
+
+            x, layers = jax.lax.scan(layer, x, (params["layers"], layers))
+            x = lyr.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps, cd)
+            logits = lyr.unembed_apply(params["embed"], x[:, -1:], cfg)
+        return logits, {"pos": jnp.asarray(s, jnp.int32), "layers": layers}
+
+    def decode_step(self, params, tokens, cache):
+        """tokens [B, 1] -> (logits [B,1,Vp], new cache)."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        x = lyr.embed_apply(params["embed"], tokens, cd)
+        pos = cache["pos"]
+        window = cfg.attn_window
+
+        def layer(x, lp_and_cache):
+            lp, cl = lp_and_cache
+            x, new_cl = _layer_decode(
+                lp, x, cfg, cache_layer=cl, cache_pos=pos,
+                kv_repeat=self.kv_repeat, window=window,
+                dus_write=self.kv_dus_write)
+            return x, new_cl
+
+        x, new_layers = jax.lax.scan(layer, x, (params["layers"],
+                                                cache["layers"]))
+        x = lyr.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps, cd)
+        logits = lyr.unembed_apply(params["embed"], x, cfg)
+        return logits, {"pos": pos + 1, "layers": new_layers}
+
+
+def _eval_specs(init_fn):
+    """Run an init that returns (params, specs) under eval_shape and return
+    (param ShapeDtypeStructs, concrete specs). Specs are static tuples, so we
+    call the fn once abstractly and once for specs via closure capture."""
+    captured = {}
+
+    def wrapper(k):
+        p, s = init_fn(k)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(wrapper, jax.random.PRNGKey(0))
+    return shapes, captured["specs"]

@@ -1,0 +1,216 @@
+"""Tiered paged KV cache: AION's m-bucket/p-bucket applied to serving.
+
+Long-lived decode sessions are exactly "window state that must outlive the
+memory horizon": each session's KV is block-granular **pages**; hot pages
+live in the device pool (m-bucket) read by the ``decode_attention_paged``
+kernel via the block table; cold pages are offloaded to a host pool
+(p-bucket). The three paper mechanisms map one-to-one:
+
+* proactive caching   — sessions predicted to decode soon (inter-arrival
+                        EWMA per session) get their pages staged ahead of
+                        the predicted time; staging > late-writes >
+                        destaging priority via the same IOScheduler.
+* predictive cleanup  — the distribution of session inter-arrival gaps
+                        yields an adaptive idle bound (coverage quantile
+                        with a DKW band); sessions idle past it are evicted
+                        entirely.
+* staleness trigger   — (engine-side) governs re-scoring of session
+                        aggregates; not needed per token.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cleanup import PredictiveCleanup
+
+
+@dataclass
+class Session:
+    session_id: int
+    length: int = 0                       # valid tokens
+    pages: List[int] = field(default_factory=list)      # device page ids
+    host_pages: Dict[int, Tuple[np.ndarray, np.ndarray]] = \
+        field(default_factory=dict)       # logical page -> (k, v) host copies
+    last_arrival: float = 0.0
+    gap_ewma: float = 1.0
+    finished: bool = False
+
+    def predicted_next(self) -> float:
+        return self.last_arrival + self.gap_ewma
+
+
+class TieredKVCache:
+    """Page pool: device tier (fixed pages) + host tier (unbounded)."""
+
+    def __init__(self, *, num_device_pages: int, page_size: int,
+                 num_kv_heads: int, head_dim: int, num_layers: int,
+                 dtype=jnp.bfloat16, cleanup: Optional[PredictiveCleanup] = None):
+        self.page_size = page_size
+        self.num_device_pages = num_device_pages
+        self.shape = (num_layers, num_device_pages, page_size,
+                      num_kv_heads, head_dim)
+        self.k_pool = jnp.zeros(self.shape, dtype)
+        self.v_pool = jnp.zeros(self.shape, dtype)
+        self.free_pages: List[int] = list(range(num_device_pages))
+        self.sessions: Dict[int, Session] = {}
+        # page ownership: device page -> (session, logical page idx)
+        self.owner: Dict[int, Tuple[int, int]] = {}
+        self.cleanup = cleanup or PredictiveCleanup(
+            coverage=0.95, confidence=0.9, initial_bound=600.0,
+            min_history=50)
+        self.stats = {"staged": 0, "destaged": 0, "evicted_sessions": 0,
+                      "alloc_fail": 0}
+
+    # ------------------------------------------------------------ sessions
+    def open_session(self, session_id: int, now: float) -> Session:
+        s = Session(session_id=session_id, last_arrival=now)
+        self.sessions[session_id] = s
+        return s
+
+    def observe_arrival(self, session_id: int, now: float) -> None:
+        s = self.sessions[session_id]
+        gap = max(now - s.last_arrival, 1e-6)
+        if s.length:
+            s.gap_ewma = 0.7 * s.gap_ewma + 0.3 * gap
+            self.cleanup.observe(np.asarray([gap]))
+        s.last_arrival = now
+
+    # --------------------------------------------------------------- pages
+    def _alloc_page(self, now: float) -> Optional[int]:
+        if self.free_pages:
+            return self.free_pages.pop()
+        victim = self._pick_victim(now)
+        if victim is None:
+            self.stats["alloc_fail"] += 1
+            return None
+        self._destage_page(*victim)
+        return self.free_pages.pop()
+
+    def _pick_victim(self, now: float) -> Optional[Tuple[int, int]]:
+        """Evict from the session with the largest predicted time until
+        next decode (proactive: keep imminent sessions resident)."""
+        best, best_score = None, -np.inf
+        for sid, s in self.sessions.items():
+            if not s.pages or s.finished:
+                continue
+            score = s.predicted_next() - now
+            if s.finished:
+                score = np.inf
+            if score > best_score:
+                # prefer the session's oldest page (front of the context)
+                for li, pg in enumerate(s.pages):
+                    if pg >= 0:
+                        best, best_score = (sid, li), score
+                        break
+        return best
+
+    def _destage_page(self, session_id: int, logical_idx: int) -> None:
+        s = self.sessions[session_id]
+        pg = s.pages[logical_idx]
+        k = np.asarray(self.k_pool[:, pg])
+        v = np.asarray(self.v_pool[:, pg])
+        s.host_pages[logical_idx] = (k, v)
+        s.pages[logical_idx] = -1
+        self.owner.pop(pg, None)
+        self.free_pages.append(pg)
+        self.stats["destaged"] += 1
+
+    def _stage_page(self, session_id: int, logical_idx: int,
+                    now: float) -> bool:
+        s = self.sessions[session_id]
+        if s.pages[logical_idx] >= 0:
+            return True
+        pg = self._alloc_page(now)
+        if pg is None:
+            return False
+        k, v = s.host_pages.pop(logical_idx)
+        self.k_pool = self.k_pool.at[:, pg].set(jnp.asarray(k))
+        self.v_pool = self.v_pool.at[:, pg].set(jnp.asarray(v))
+        s.pages[logical_idx] = pg
+        self.owner[pg] = (session_id, logical_idx)
+        self.stats["staged"] += 1
+        return True
+
+    # ------------------------------------------------------------- appends
+    def append_token_kv(self, session_id: int, k_token: np.ndarray,
+                        v_token: np.ndarray, now: float) -> bool:
+        """k/v_token: [num_layers, num_kv_heads, head_dim]."""
+        s = self.sessions[session_id]
+        slot = s.length % self.page_size
+        logical = s.length // self.page_size
+        if logical >= len(s.pages):
+            pg = self._alloc_page(now)
+            if pg is None:
+                return False
+            s.pages.append(pg)
+            self.owner[pg] = (session_id, logical)
+        elif s.pages[logical] < 0:
+            if not self._stage_page(session_id, logical, now):
+                return False
+        pg = s.pages[logical]
+        self.k_pool = self.k_pool.at[:, pg, slot].set(jnp.asarray(k_token))
+        self.v_pool = self.v_pool.at[:, pg, slot].set(jnp.asarray(v_token))
+        s.length += 1
+        return True
+
+    # ----------------------------------------------------------- proactive
+    def prestage_due(self, now: float, horizon: float = 0.5) -> int:
+        """Stage pages of sessions predicted to decode within ``horizon``
+        seconds (proactive caching). Returns pages staged."""
+        staged = 0
+        order = sorted(self.sessions.values(),
+                       key=lambda s: s.predicted_next())
+        for s in order:
+            if s.finished or s.predicted_next() - now > horizon:
+                continue
+            for li in list(s.host_pages.keys()):
+                if self._stage_page(s.session_id, li, now):
+                    staged += 1
+        return staged
+
+    # ------------------------------------------------------------- cleanup
+    def cleanup_idle(self, now: float) -> int:
+        """Predictive cleanup: evict sessions idle past the adaptive bound."""
+        bound = self.cleanup.current_bound()
+        evicted = 0
+        for sid in list(self.sessions):
+            s = self.sessions[sid]
+            if s.finished or now - s.last_arrival > bound:
+                for li, pg in enumerate(s.pages):
+                    if pg >= 0:
+                        self.owner.pop(pg, None)
+                        self.free_pages.append(pg)
+                s.pages.clear()
+                s.host_pages.clear()
+                del self.sessions[sid]
+                evicted += 1
+        self.stats["evicted_sessions"] += evicted
+        return evicted
+
+    # -------------------------------------------------------------- lookup
+    def block_table(self, session_ids: List[int], pages_per_seq: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, List[int]]:
+        """(block_table [B, pages_per_seq], seq_lens [B], missing_pages).
+        Missing pages (host-resident) are reported so the caller can stage
+        them before launching the kernel (staging has max priority)."""
+        table = np.full((len(session_ids), pages_per_seq), -1, np.int32)
+        lens = np.zeros((len(session_ids),), np.int32)
+        missing = []
+        for i, sid in enumerate(session_ids):
+            s = self.sessions[sid]
+            lens[i] = s.length
+            for li, pg in enumerate(s.pages[:pages_per_seq]):
+                if pg < 0:
+                    missing.append((sid, li))
+                else:
+                    table[i, li] = pg
+        return jnp.asarray(table), jnp.asarray(lens), missing
+
+    def device_pages_used(self) -> int:
+        return self.num_device_pages - len(self.free_pages)

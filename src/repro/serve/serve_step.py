@@ -1,0 +1,32 @@
+"""Serving step factories.
+
+``decode_step``: one new token against an existing KV/SSM cache (the shape
+cells ``decode_32k`` / ``long_500k`` lower exactly this). Greedy sampling
+keeps the step closed over integer tokens (tokens in -> tokens out), which
+is what a production decode loop ships between hosts.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, tokens, cache):
+        logits, cache = model.decode_step(params, tokens, cache)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, cache
+    return decode_step
+
+
+def make_prefill_step(model: Model, max_len: int = 0):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(
+            params, batch, max_len=max_len or None)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, cache
+    return prefill_step

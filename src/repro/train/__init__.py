@@ -1,0 +1,7 @@
+from repro.train.optimizer import adamw_init, adamw_update, OptConfig
+from repro.train.train_step import TrainState, make_train_step, make_train_state_specs
+
+__all__ = [
+    "adamw_init", "adamw_update", "OptConfig",
+    "TrainState", "make_train_step", "make_train_state_specs",
+]

@@ -1,0 +1,48 @@
+"""Elastic scaling: reshard a train state onto a different mesh.
+
+A checkpoint is mesh-agnostic (full arrays + manifest); growing or
+shrinking the fleet is restore-with-new-shardings. ``elastic_reshard``
+also handles live resharding (device arrays in, device arrays out) for
+in-flight topology changes, and ``adjust_batch_schedule`` keeps the global
+batch contract when the data-parallel degree changes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.configs.base import MeshConfig
+from repro.distributed import sharding as shd
+from repro.models.transformer import Model
+from repro.train.train_step import TrainState, make_train_state_specs
+
+
+def state_shardings(model: Model, mesh, mesh_cfg: MeshConfig,
+                    global_batch: int):
+    rules = shd.make_rules(model.cfg, mesh_cfg, global_batch)
+    logical = make_train_state_specs(model)
+    return jax.tree.map(
+        lambda spec: jax.sharding.NamedSharding(
+            mesh, shd.logical_to_pspec(spec, rules)),
+        logical, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def elastic_reshard(state: TrainState, model: Model, new_mesh,
+                    new_mesh_cfg: MeshConfig,
+                    global_batch: int) -> TrainState:
+    """Move a live train state onto a new mesh (gather + re-place)."""
+    sh = state_shardings(model, new_mesh, new_mesh_cfg, global_batch)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)
+
+
+def adjust_batch_schedule(global_batch: int, old_dp: int, new_dp: int,
+                          step: int) -> Tuple[int, int]:
+    """Keep the *global* batch invariant across a data-parallel resize.
+    Returns (per_shard_batch, equivalent_step) — the sample counter
+    (step * global_batch) is what must be preserved, so the step index
+    carries over unchanged while per-shard batch rescales."""
+    if global_batch % new_dp:
+        raise ValueError(f"global_batch {global_batch} not divisible by "
+                         f"new dp degree {new_dp}")
+    return global_batch // new_dp, step

@@ -1,0 +1,156 @@
+"""Train step factory: loss -> grad -> (optional compression) -> AdamW.
+
+The returned ``train_step(state, batch)`` is a pure jittable function; the
+dry-run lowers it with NamedShardings derived from the model's logical spec
+tree. Gradients are averaged over the batch axes implicitly by pjit (the
+loss is a global mean); cross-pod gradient all-reduce appears on the ``pod``
+axis of the multi-pod mesh via the parameter shardings being pod-replicated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.transformer import Model
+from repro.train.optimizer import OptConfig, adamw_init, adamw_update
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+    def tree_flatten(self):
+        return (self.params, self.opt), None
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda _, c: TrainState(params=c[0], opt=c[1]),
+)
+
+
+def init_train_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def make_train_state_specs(model: Model):
+    """Logical-axis spec tree matching TrainState structure."""
+    pspecs = model.specs()
+    return TrainState(
+        params=pspecs,
+        opt={"m": pspecs, "v": pspecs, "step": ()},
+    )
+
+
+def choose_microbatches(cfg, shape, mesh_cfg, profile,
+                        act_budget_bytes: float = 2 << 30) -> int:
+    """Pick gradient-accumulation depth so per-device live activations fit
+    the budget. Two dominant terms per unit batch:
+      * remat-scan residual carries: L x S x D x 2B
+      * fp32 logits + grad + softmax workspace: S x Vp_loc x 4B x 3
+    """
+    from repro.distributed.sharding import pad_vocab
+    axes = dict(zip(mesh_cfg.axes, mesh_cfg.shape))
+    n_batch = 1
+    for ax in profile.batch_axes:
+        n_batch *= axes[ax]
+    b_shard = max(shape.global_batch // max(n_batch, 1), 1)
+    vp_loc = pad_vocab(cfg.vocab_size) // (
+        axes.get("model", 1) if profile.vocab_tp else 1)
+    per_unit = (cfg.num_layers * shape.seq_len * cfg.d_model * 2
+                + shape.seq_len * vp_loc * 4 * 3)
+    mu = 1
+    while mu < b_shard and per_unit * (b_shard // mu) > act_budget_bytes:
+        mu *= 2
+    return mu
+
+
+def choose_remat_group(cfg, shape, mesh_cfg, profile, mu,
+                       carry_budget_bytes: float = 1 << 31) -> int:
+    """If the flat per-layer carries still exceed the budget at the chosen
+    microbatch depth, pick a sqrt-L remat group size (a divisor of L)."""
+    import math
+    axes = dict(zip(mesh_cfg.axes, mesh_cfg.shape))
+    n_batch = 1
+    for ax in profile.batch_axes:
+        n_batch *= axes[ax]
+    b_mu = max(shape.global_batch // max(n_batch, 1) // mu, 1)
+    carry = b_mu * shape.seq_len * cfg.d_model * 2
+    if cfg.num_layers * carry <= carry_budget_bytes:
+        return 0
+    L = cfg.num_layers
+    target = max(int(math.sqrt(L)), 2)
+    best = 1
+    for g in range(2, L + 1):
+        if L % g == 0 and abs(g - target) < abs(best - target):
+            best = g
+    return best if best > 1 else 0
+
+
+def make_train_step(model: Model, opt_cfg: Optional[OptConfig] = None,
+                    grad_transform: Optional[Callable] = None,
+                    num_microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``num_microbatches > 1``: the global batch is split on the leading axis
+    and gradients are accumulated in fp32 (sharded like the params) across a
+    ``lax.scan`` — bounding live activations at B/mu while keeping one
+    optimizer step per call.
+
+    ``grad_transform(grads) -> grads`` hook is where gradient compression
+    (train/compression.py) plugs in.
+    """
+    opt_cfg = opt_cfg or OptConfig()
+
+    def grads_and_metrics(params, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return grads, metrics
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if num_microbatches <= 1:
+            grads, metrics = grads_and_metrics(state.params, batch)
+        else:
+            mu = num_microbatches
+
+            def split(x):
+                return x.reshape(mu, x.shape[0] // mu, *x.shape[1:])
+
+            batch_mu = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                g_acc, m_acc = carry
+                g, m = grads_and_metrics(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            m0 = {"ce": jnp.float32(0), "aux": jnp.float32(0),
+                  "ntok": jnp.float32(0), "loss": jnp.float32(0)}
+            (grads, metrics), _ = jax.lax.scan(accum, (g0, m0), batch_mu)
+            grads = jax.tree.map(lambda g: g / mu, grads)
+            metrics = jax.tree.map(lambda m: m / mu, metrics)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, stats = adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step

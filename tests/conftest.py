@@ -1,0 +1,9 @@
+# NOTE: no XLA_FLAGS here — tests and benches run on the single real CPU
+# device; only launch/dryrun.py forces the 512-device placeholder platform.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

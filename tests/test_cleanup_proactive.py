@@ -1,0 +1,80 @@
+import numpy as np
+import pytest
+
+from repro.core.buckets import WindowState
+from repro.core.cleanup import LatenessHistogram, PredictiveCleanup
+from repro.core.proactive import PrestageScheduler, StagingCostModel
+from repro.core.windows import WindowId
+
+
+def test_histogram_cdf_quantiles(rng):
+    h = LatenessHistogram(min_delay=1e-3, max_delay=1e4)
+    delays = rng.lognormal(0, 1, 20000) * 10
+    h.update(delays)
+    assert h.total == 20000
+    # log-spaced histogram quantiles within a bin width of the truth
+    for q in (0.5, 0.9, 0.99):
+        est = h.quantile(q)
+        true = np.quantile(delays, q)
+        assert 0.8 * true <= est <= 1.3 * true
+
+
+def test_cleanup_bound_covers_target(rng):
+    c = PredictiveCleanup(coverage=0.99, confidence=0.95, min_history=100)
+    delays = rng.lognormal(0, 1, 50000) * 10
+    c.observe(delays)
+    bound = c.current_bound()
+    actual_coverage = np.mean(delays <= bound)
+    assert actual_coverage >= 0.99      # DKW band makes this conservative
+
+
+def test_cleanup_conservative_until_history():
+    c = PredictiveCleanup(initial_bound=1234.0, min_history=200)
+    c.observe(np.array([1.0, 2.0]))
+    assert c.current_bound() == 1234.0  # not enough history yet
+
+
+def test_cleanup_bound_tightens_with_data(rng):
+    c = PredictiveCleanup(coverage=0.9, confidence=0.95, min_history=50,
+                          initial_bound=1e6)
+    c.observe(rng.uniform(0, 10, 10000))
+    b1 = c.current_bound()
+    assert b1 < 1e6 and b1 >= np.quantile(np.linspace(0, 10, 100), 0.9) * 0.8
+
+
+def test_should_purge_threshold(rng):
+    c = PredictiveCleanup(coverage=0.9, confidence=0.9, min_history=10)
+    c.observe(rng.uniform(0, 10, 1000))
+    bound = c.current_bound()
+    assert not c.should_purge(window_end=100.0, watermark=100.0 + bound / 2)
+    assert c.should_purge(window_end=100.0, watermark=100.0 + bound * 2)
+
+
+def test_staging_cost_model_ewma():
+    m = StagingCostModel(alpha=0.5)
+    m.observe(1.0, 1000)      # 1ms/event
+    assert m.seconds_per_event == pytest.approx(1e-3)
+    m.observe(3.0, 1000)
+    assert m.seconds_per_event == pytest.approx(2e-3)
+    assert m.delta_t(500) == pytest.approx(1.0)
+
+
+def test_prestage_scheduler_plans_delta_t_ahead():
+    sched = PrestageScheduler(StagingCostModel(seconds_per_event=1e-3))
+    st = WindowState(0, 10, width=1, block_capacity=8)
+    from repro.core.events import EventBatch
+    st.append_events(EventBatch(np.zeros(80, np.int32),
+                                np.zeros(80), np.zeros((80, 1))), late=True)
+    wid = WindowId(0, 10)
+    sched.plan(wid, st, exec_time=100.0, now=0.0)
+    # 80 p-events * 1ms = 0.08s ahead of exec
+    assert sched.due(99.0) == []
+    assert sched.due(99.95) == [wid]
+
+
+def test_prestage_punctuated_immediate():
+    sched = PrestageScheduler(punctuated=True)
+    st = WindowState(0, 10, width=1, block_capacity=8)
+    wid = WindowId(0, 10)
+    sched.plan(wid, st, exec_time=100.0, now=5.0)
+    assert sched.due(5.0) == [wid]        # stages as soon as late event seen

@@ -1,0 +1,267 @@
+import numpy as np
+import pytest
+
+from repro.configs.base import AionConfig
+from repro.configs.workloads import AVERAGE, STOCK_MARKET
+from repro.core import (
+    EngineOOM, InMemoryPolicy, PeriodicWatermarkGenerator, StreamEngine,
+    TumblingWindows,
+)
+from repro.core.operators import make_operator
+from repro.core.triggers import DeltaTTrigger
+from repro.data.generators import make_generator
+
+
+def _engine(op_name="average", budget=64 << 20, policy=None, width=4,
+            num_keys=8, trigger=None, wm_slack=0.0, block=128):
+    aion = AionConfig(block_size=block)
+    kw = {}
+    if op_name in ("stock", "lrb"):
+        kw = {"num_keys": num_keys} if op_name == "stock" else \
+            {"num_segments": num_keys}
+    op = make_operator(op_name, aion.block_size, width, **kw)
+    return StreamEngine(
+        assigner=TumblingWindows(10.0), operator=op, aion=aion,
+        value_width=width,
+        watermark_gen=PeriodicWatermarkGenerator(10.0, slack=wm_slack),
+        device_budget_bytes=budget, policy=policy, trigger=trigger,
+    )
+
+
+def _uniform_batch(n, t0, t1, width=4, seed=0, keys=8):
+    rng = np.random.default_rng(seed)
+    from repro.core.events import EventBatch
+    return EventBatch(rng.integers(0, keys, n),
+                      rng.uniform(t0, t1, n),
+                      rng.normal(size=(n, width)).astype(np.float32))
+
+
+def test_live_window_average_correct():
+    eng = _engine()
+    b = _uniform_batch(500, 0, 10)
+    eng.ingest(b, now=0.0)
+    eng.ingest(_uniform_batch(10, 10, 20, seed=1), now=11.0)  # push watermark
+    eng.advance_watermark(10.0, now=11.0)
+    from repro.core.windows import WindowId
+    res = eng.results[WindowId(0.0, 10.0)]
+    assert res == pytest.approx(float(np.mean(b.values[:, 0])), rel=1e-4,
+                                abs=1e-5)
+    eng.close()
+
+
+def test_late_events_update_result():
+    """The headline semantic: a late event re-execution folds ALL events
+    (on-time + late) into the amended result."""
+    eng = _engine(trigger=DeltaTTrigger(executions=2))
+    on_time = _uniform_batch(300, 0, 10, seed=2)
+    eng.ingest(on_time, now=0.0)
+    eng.advance_watermark(10.0, now=10.0)
+    late = _uniform_batch(200, 0, 10, seed=3)
+    eng.ingest(late, now=12.0)            # late: window [0,10) expired
+    # fire all planned re-executions
+    for t in np.linspace(12, 12 + 2 * eng.cleanup.current_bound(), 50):
+        eng.poll(t)
+    from repro.core.windows import WindowId
+    res = eng.results[WindowId(0.0, 10.0)]
+    allv = np.concatenate([on_time.values[:, 0], late.values[:, 0]])
+    assert res == pytest.approx(float(np.mean(allv)), rel=1e-4, abs=1e-5)
+    assert eng.metrics.late_executions >= 1
+    eng.close()
+
+
+def test_memory_stays_bounded_with_many_past_windows():
+    eng = _engine(budget=8 << 20)
+    now = 0.0
+    for i in range(30):
+        eng.ingest(_uniform_batch(400, now, now + 10, seed=i), now)
+        eng.advance_watermark(now + 10, now + 10)
+        # sprinkle late events into old windows
+        if i > 2:
+            eng.ingest(_uniform_batch(100, 0, 10, seed=100 + i), now + 10)
+        eng.poll(now + 10)
+        now += 10
+        assert eng.device_bytes() <= eng.budget.capacity_bytes
+    eng.close()
+
+
+def test_baseline_backend_ooms():
+    eng = _engine(budget=1 << 20, policy=InMemoryPolicy())
+    now = 0.0
+    with pytest.raises(EngineOOM):
+        for i in range(50):
+            eng.ingest(_uniform_batch(2000, now, now + 10, seed=i), now)
+            eng.advance_watermark(now + 10, now + 10)
+            now += 10
+    eng.close()
+
+
+def test_predictive_cleanup_purges_old_windows():
+    eng = _engine()
+    eng.cleanup.min_history = 10
+    # 5000 samples can't DKW-certify 99% coverage (needs ~15k); use 90%
+    eng.cleanup.coverage = 0.9
+    now = 0.0
+    for i in range(5):
+        eng.ingest(_uniform_batch(200, now, now + 10, seed=i), now)
+        eng.advance_watermark(now + 10, now + 10)
+        now += 10
+    # teach the estimator that lateness is short (~1s)
+    eng.cleanup.observe(np.random.default_rng(0).uniform(0.1, 1.0, 5000))
+    bound = eng.cleanup.current_bound()
+    assert bound < 10.0
+    eng.advance_watermark(now + 100, now + 100)
+    eng.poll(now + 100)
+    assert eng.metrics.purged_windows >= 4
+    eng.close()
+
+
+def test_stock_operator_per_key_aggregates():
+    eng = _engine(op_name="stock", num_keys=8)
+    b = _uniform_batch(1000, 0, 10, seed=5, keys=8)
+    eng.ingest(b, now=0.0)
+    eng.advance_watermark(10.0, 10.0)
+    from repro.core.windows import WindowId
+    res = eng.results[WindowId(0.0, 10.0)]
+    for k in range(8):
+        mask = b.keys == k
+        if mask.any():
+            assert res["mean"][k] == pytest.approx(
+                float(np.mean(b.values[mask, 0])), rel=1e-4)
+            assert res["min"][k] == pytest.approx(
+                float(np.min(b.values[mask, 0])), rel=1e-4)
+    eng.close()
+
+
+def test_blocking_operator_stages_everything_first():
+    eng = _engine(op_name="percentile", budget=256 << 20)
+    b = _uniform_batch(2000, 0, 10, seed=6)
+    eng.ingest(b, now=0.0)
+    eng.advance_watermark(10.0, 10.0)
+    from repro.core.windows import WindowId
+    res = eng.results[WindowId(0.0, 10.0)]
+    assert res[0.5] == pytest.approx(float(np.quantile(b.values[:, 0], 0.5)),
+                                     abs=0.05)
+    eng.close()
+
+
+def test_checkpoint_state_roundtrippable():
+    eng = _engine()
+    eng.ingest(_uniform_batch(100, 0, 10), now=0.0)
+    eng.advance_watermark(10.0, 10.0)
+    snap = eng.checkpoint_state()
+    assert snap["watermark"] == 10.0
+    assert len(snap["windows"]) >= 1
+    assert snap["windows"][0]["total_events"] == 100
+    eng.close()
+
+
+def test_engine_checkpoint_restore_roundtrip():
+    """Fault tolerance: a restored engine recomputes identical results."""
+    eng = _engine()
+    b = _uniform_batch(400, 0, 10, seed=11)
+    eng.ingest(b, now=0.0)
+    eng.advance_watermark(10.0, 10.0)
+    snap = eng.checkpoint_state()
+    from repro.core.windows import WindowId
+    want = eng.results[WindowId(0.0, 10.0)]
+    eng.close()
+
+    eng2 = _engine()
+    eng2.restore_state(snap)
+    assert eng2.tracker.watermark == 10.0
+    wid = WindowId(0.0, 10.0)
+    assert eng2.windows[wid].total_events == 400
+    got = eng2.execute_window(wid, now=11.0, late=True)
+    assert got == pytest.approx(want, rel=1e-5, abs=1e-6)
+    eng2.close()
+
+
+def test_host_budget_spills_to_storage(tmp_path):
+    """Third tier: past-window state beyond the host budget lands in
+    storage files and restages losslessly at re-execution."""
+    from repro.core.buckets import Tier
+    aion = AionConfig(block_size=128)
+    op = make_operator("average", aion.block_size, 4)
+    eng = StreamEngine(
+        assigner=TumblingWindows(10.0), operator=op, aion=aion,
+        value_width=4,
+        device_budget_bytes=2 << 20,
+        spill_dir=tmp_path, host_budget_bytes=64 << 10,
+        trigger=DeltaTTrigger(executions=1),
+    )
+    b = _uniform_batch(3000, 0, 10, seed=21)
+    eng.ingest(b, now=0.0)
+    eng.advance_watermark(10.0, 10.0)
+    eng.io.drain()
+    tiers = [blk.tier for st in eng.windows.values() for blk in st.blocks]
+    assert any(t == Tier.STORAGE for t in tiers)
+    assert len(list(tmp_path.glob("block_*.npz"))) > 0
+    # late re-execution reads back through all three tiers
+    late = _uniform_batch(100, 0, 10, seed=22)
+    eng.ingest(late, now=12.0)
+    for t in np.linspace(12, 12 + 2 * eng.cleanup.current_bound(), 30):
+        eng.poll(t)
+    from repro.core.windows import WindowId
+    allv = np.concatenate([b.values[:, 0], late.values[:, 0]])
+    assert eng.results[WindowId(0.0, 10.0)] == pytest.approx(
+        float(np.mean(allv)), rel=1e-4, abs=1e-5)
+    eng.close()
+
+
+def test_stock_kernel_backend_matches_jnp():
+    """The segment_aggregate Pallas kernel as the engine fold."""
+    eng_j = _engine(op_name="stock", num_keys=8)
+    op_k = make_operator("stock", 128, 4, num_keys=8, use_kernel=True)
+    eng_k = StreamEngine(
+        assigner=TumblingWindows(10.0), operator=op_k,
+        aion=AionConfig(block_size=128), value_width=4,
+        device_budget_bytes=64 << 20,
+    )
+    b = _uniform_batch(800, 0, 10, seed=30, keys=8)
+    for eng in (eng_j, eng_k):
+        eng.ingest(b, now=0.0)
+        eng.advance_watermark(10.0, 10.0)
+    from repro.core.windows import WindowId
+    rj = eng_j.results[WindowId(0.0, 10.0)]
+    rk = eng_k.results[WindowId(0.0, 10.0)]
+    np.testing.assert_allclose(rj["mean"], rk["mean"], rtol=1e-4)
+    np.testing.assert_allclose(rj["min"], rk["min"], rtol=1e-5)
+    np.testing.assert_allclose(rj["max"], rk["max"], rtol=1e-5)
+    eng_j.close()
+    eng_k.close()
+
+
+def test_sliding_windows_end_to_end():
+    """Every event contributes to size/slide overlapping windows."""
+    from repro.core.windows import SlidingWindows, WindowId
+    aion = AionConfig(block_size=128)
+    op = make_operator("average", aion.block_size, 4)
+    eng = StreamEngine(
+        assigner=SlidingWindows(20.0, 10.0), operator=op, aion=aion,
+        value_width=4, device_budget_bytes=64 << 20,
+    )
+    b = _uniform_batch(500, 25, 30, seed=40)     # all inside [25, 30)
+    eng.ingest(b, now=0.0)
+    eng.advance_watermark(40.0, 40.0)
+    want = float(np.mean(b.values[:, 0]))
+    got = [eng.results[w] for w in (WindowId(10.0, 30.0),
+                                    WindowId(20.0, 40.0))]
+    for g in got:
+        assert g == pytest.approx(want, rel=1e-4, abs=1e-5)
+    eng.close()
+
+
+def test_punctuated_mode_stages_on_late_event():
+    """Punctuated watermarks: a late event immediately plans staging."""
+    eng = StreamEngine(
+        assigner=TumblingWindows(10.0),
+        operator=make_operator("average", 128, 4),
+        aion=AionConfig(block_size=128), value_width=4,
+        device_budget_bytes=64 << 20, punctuated=True,
+        trigger=DeltaTTrigger(executions=1),
+    )
+    eng.ingest(_uniform_batch(200, 0, 10, seed=50), now=0.0)
+    eng.advance_watermark(10.0, 10.0)
+    eng.ingest(_uniform_batch(50, 0, 10, seed=51), now=12.0)
+    assert eng.prestage.stats["immediate"] >= 1
+    eng.close()

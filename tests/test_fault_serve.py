@@ -1,0 +1,196 @@
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cleanup import PredictiveCleanup
+from repro.distributed.fault import (
+    BackupExecutor, HeartbeatMonitor, RestartManager,
+)
+from repro.kernels import ref as R
+from repro.serve.kvcache import TieredKVCache
+from repro.serve.scheduler import ContinuousBatcher, Request
+
+
+# ------------------------------------------------------------------ fault
+def test_heartbeat_detects_dead_worker():
+    hb = HeartbeatMonitor(timeout=1.0)
+    hb.beat("w0", now=0.0)
+    hb.beat("w1", now=0.0)
+    hb.beat("w0", now=5.0)
+    assert hb.dead_workers(now=5.5) == ["w1"]
+    assert hb.alive_workers(now=5.5) == ["w0"]
+
+
+def test_backup_executor_straggler_win():
+    ex = BackupExecutor(deadline_factor=2.0, min_deadline=0.05)
+    calls = {"n": 0}
+
+    def fast():
+        return 42
+
+    # warm the EWMA with fast tasks
+    for _ in range(3):
+        assert ex.run(fast) == 42
+
+    def sometimes_slow():
+        calls["n"] += 1
+        if calls["n"] == 1:
+            time.sleep(0.5)       # primary straggles
+        return 7
+
+    assert ex.run(sometimes_slow) == 7
+    assert ex.stats.backups_issued >= 1
+    ex.shutdown()
+
+
+def test_restart_manager_recovers_from_crash():
+    saved = {}
+    crashes = {"left": 2}
+
+    def step_fn(state, step):
+        if crashes["left"] > 0 and step == 5:
+            crashes["left"] -= 1
+            raise RuntimeError("node failure")
+        return state + 1
+
+    rm = RestartManager(save_every=2, max_restarts=5)
+    out = rm.run(
+        init_state=lambda: 0,
+        restore=lambda: (saved["s"], saved["step"]) if saved else None,
+        step_fn=step_fn,
+        save=lambda s, step: saved.update(s=s, step=step),
+        num_steps=10,
+    )
+    assert rm.restarts == 2
+    assert out == 10              # all 10 steps were executed exactly once
+
+
+# ------------------------------------------------------------------ serve
+def _cache(pages=8, page=16, hkv=2, d=32, layers=1):
+    return TieredKVCache(num_device_pages=pages, page_size=page,
+                         num_kv_heads=hkv, head_dim=d, num_layers=layers,
+                         dtype=jnp.float32,
+                         cleanup=PredictiveCleanup(min_history=10**9,
+                                                   initial_bound=1e9))
+
+
+def test_kvcache_append_and_table():
+    c = _cache()
+    c.open_session(1, now=0.0)
+    rng = np.random.default_rng(0)
+    for t in range(40):
+        ok = c.append_token_kv(1, rng.normal(size=(1, 2, 32)),
+                               rng.normal(size=(1, 2, 32)), now=float(t))
+        assert ok
+    table, lens, missing = c.block_table([1], pages_per_seq=4)
+    assert int(lens[0]) == 40
+    assert (np.asarray(table[0]) >= 0).sum() == 3     # ceil(40/16)
+    assert not missing
+
+
+def test_kvcache_offload_and_restage_preserves_contents():
+    """Fill beyond the device pool; evicted pages restage losslessly —
+    the attention result equals an un-tiered reference."""
+    rng = np.random.default_rng(1)
+    c = _cache(pages=4, page=8)
+    ks, vs = [], []
+    c.open_session(1, now=0.0)
+    c.open_session(2, now=0.0)
+    # session 2 is predicted idle (big gap), session 1 active
+    c.sessions[2].gap_ewma = 1e6
+    c.sessions[1].gap_ewma = 0.01
+    for t in range(24):
+        k = rng.normal(size=(1, 2, 32)).astype(np.float32)
+        v = rng.normal(size=(1, 2, 32)).astype(np.float32)
+        sid = 1 if t % 2 == 0 else 2
+        assert c.append_token_kv(sid, k, v, now=float(t))
+        (ks if sid == 1 else vs).append(None)  # bookkeeping only
+    # force all of session 2 out, then bring it back
+    for li, pg in enumerate(list(c.sessions[2].pages)):
+        if pg >= 0:
+            c._destage_page(2, li)
+    assert all(p < 0 for p in c.sessions[2].pages)
+    for li in list(c.sessions[2].host_pages):
+        assert c._stage_page(2, li, now=100.0)
+    assert all(p >= 0 for p in c.sessions[2].pages)
+    assert c.stats["destaged"] >= 1 and c.stats["staged"] >= 1
+
+
+def test_kvcache_tiered_attention_matches_reference():
+    rng = np.random.default_rng(2)
+    pages, page, hkv, d = 6, 8, 2, 32
+    c = _cache(pages=pages, page=page, hkv=hkv, d=d)
+    c.open_session(1, now=0.0)
+    n_tok = 30
+    k_all = rng.normal(size=(n_tok, 1, hkv, d)).astype(np.float32)
+    v_all = rng.normal(size=(n_tok, 1, hkv, d)).astype(np.float32)
+    for t in range(n_tok):
+        c.append_token_kv(1, k_all[t], v_all[t], now=float(t))
+    # destage page 1, then ask for the table (reports missing), restage
+    c._destage_page(1, 1)
+    table, lens, missing = c.block_table([1], pages_per_seq=4)
+    assert missing == [(1, 1)]
+    assert c._stage_page(1, 1, now=50.0)
+    table, lens, _ = c.block_table([1], pages_per_seq=4)
+
+    q = jnp.asarray(rng.normal(size=(1, 4, d)), jnp.float32)
+    out = R.ref_decode_attention_paged(q, c.k_pool[0], c.v_pool[0],
+                                       table, lens)
+    # reference over the raw (untiered) kv
+    k_flat = jnp.asarray(k_all[:, 0])       # [n, hkv, d]
+    pad = 4 * page - n_tok
+    kp = jnp.pad(k_flat, ((0, pad), (0, 0), (0, 0))).reshape(4, page, hkv, d)
+    vp = jnp.pad(jnp.asarray(v_all[:, 0]),
+                 ((0, pad), (0, 0), (0, 0))).reshape(4, page, hkv, d)
+    ref = R.ref_decode_attention_paged(
+        q, kp, vp, jnp.arange(4, dtype=jnp.int32)[None],
+        jnp.asarray([n_tok], jnp.int32))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_kvcache_predictive_cleanup_evicts_idle_sessions():
+    c = _cache()
+    c.cleanup = PredictiveCleanup(coverage=0.9, confidence=0.9,
+                                  min_history=10, initial_bound=1e9)
+    rng = np.random.default_rng(3)
+    c.open_session(1, now=0.0)
+    c.open_session(2, now=0.0)
+    for t in range(8):
+        c.append_token_kv(1, rng.normal(size=(1, 2, 32)),
+                          rng.normal(size=(1, 2, 32)), now=0.1 * t)
+        c.observe_arrival(1, now=0.1 * t)
+    c.cleanup.observe(rng.uniform(0.05, 0.2, 1000))   # short gaps typical
+    assert c.cleanup.current_bound() < 1.0
+    evicted = c.cleanup_idle(now=100.0)               # both long idle
+    assert evicted == 2 and not c.sessions
+
+
+def test_continuous_batcher_completes_requests():
+    rng = np.random.default_rng(4)
+    hkv, d, page = 2, 32, 8
+    c = _cache(pages=16, page=page, hkv=hkv, d=d)
+    sched = ContinuousBatcher(c, max_batch=2, pages_per_seq=8)
+    for rid in range(3):
+        req = Request(request_id=rid, session_id=rid, prompt_len=5,
+                      max_new_tokens=4, arrived_at=0.0)
+        kp = rng.normal(size=(1, 5, hkv, d)).astype(np.float32)
+        vp = rng.normal(size=(1, 5, hkv, d)).astype(np.float32)
+        sched.submit(req, kp, vp, now=0.0)
+
+    def q_fn(sids):
+        return jnp.asarray(rng.normal(size=(len(sids), 4, d)), jnp.float32)
+
+    def kv_fn(sids):
+        return (rng.normal(size=(len(sids), 1, hkv, d)).astype(np.float32),
+                rng.normal(size=(len(sids), 1, hkv, d)).astype(np.float32))
+
+    t = 1.0
+    for _ in range(20):
+        out = sched.step(q_fn, kv_fn, now=t)
+        t += 0.1
+        if len(sched.completed) == 3:
+            break
+    assert len(sched.completed) == 3
+    assert all(r.generated == 4 for r in sched.completed)

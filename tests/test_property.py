@@ -1,0 +1,113 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import AionConfig
+from repro.core import (
+    PeriodicWatermarkGenerator, StreamEngine, TumblingWindows,
+)
+from repro.core.buckets import WindowState
+from repro.core.events import EventBatch
+from repro.core.operators import make_operator
+from repro.core.staleness import (
+    deltaev_times, max_staleness_of, minimize_max_staleness,
+)
+from repro.core.windows import SlidingWindows, TumblingWindows as TW
+
+
+@given(st.lists(st.floats(0, 1e4, allow_nan=False), min_size=1,
+                max_size=300),
+       st.floats(0.5, 50))
+@settings(max_examples=50, deadline=None)
+def test_tumbling_partition_property(ts, size):
+    """Every event lands in exactly one tumbling window that contains it."""
+    ts = np.asarray(ts)
+    out = TW(size).assign(ts)
+    counts = np.zeros(len(ts), int)
+    for w, idx in out:
+        for i in idx:
+            assert w.start <= ts[i] < w.end + 1e-9
+            counts[i] += 1
+    assert (counts == 1).all()
+
+
+@given(st.integers(1, 400), st.integers(1, 64), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_bucket_block_accounting(n, cap, width):
+    """total_events equals the sum of block fills; no block over capacity."""
+    st_ = WindowState(0, 10, width=width, block_capacity=cap)
+    rng = np.random.default_rng(0)
+    st_.append_events(EventBatch(
+        rng.integers(0, 4, n), rng.uniform(0, 10, n),
+        rng.normal(size=(n, width)).astype(np.float32)), late=False)
+    assert st_.total_events == n
+    assert sum(b.fill for b in st_.blocks) == n
+    assert all(b.fill <= b.capacity for b in st_.blocks)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 40))
+@settings(max_examples=30, deadline=None)
+def test_engine_result_invariant_to_arrival_order(seed, nlate):
+    """The amended window result equals the mean over ALL events, no
+    matter how they are split between on-time and late arrivals."""
+    rng = np.random.default_rng(seed)
+    n = 60
+    vals = rng.normal(size=(n, 1)).astype(np.float32)
+    ts = rng.uniform(0, 10, n)
+    split = n - nlate
+
+    from repro.core.triggers import DeltaTTrigger
+    aion = AionConfig(block_size=16)
+    eng = StreamEngine(
+        assigner=TumblingWindows(10.0),
+        operator=make_operator("average", 16, 1),
+        aion=aion, value_width=1,
+        device_budget_bytes=8 << 20,
+        trigger=DeltaTTrigger(executions=1),
+    )
+    eng.ingest(EventBatch(np.zeros(split, np.int32), ts[:split],
+                          vals[:split]), now=0.0)
+    eng.advance_watermark(10.0, now=10.0)
+    if nlate:
+        eng.ingest(EventBatch(np.zeros(n - split, np.int32), ts[split:],
+                              vals[split:]), now=11.0)
+        for t in np.linspace(11, 11 + 2 * eng.cleanup.current_bound(), 20):
+            eng.poll(t)
+    from repro.core.windows import WindowId
+    res = eng.results[WindowId(0.0, 10.0)]
+    assert res == pytest.approx(float(np.mean(vals)), rel=1e-4, abs=1e-5)
+    eng.close()
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 12))
+@settings(max_examples=20, deadline=None)
+def test_aion_trigger_never_worse_than_deltaev(seed, k):
+    """The optimizer is seeded at the deltaev placement, so it can only
+    improve on it — for any lateness distribution."""
+    rng = np.random.default_rng(seed)
+    T = 50.0
+    mix = rng.random()
+    delays = np.concatenate([
+        rng.lognormal(0, 1, 500) * (T / 20),
+        rng.uniform(0, T, int(500 * mix) + 1),
+    ])
+    delays = np.clip(delays, 0, T)
+    aion = minimize_max_staleness(delays, T, k).max_staleness
+    de = max_staleness_of(deltaev_times(delays, T, k), delays, T)
+    assert aion <= de + 1e-7
+
+
+@given(st.integers(1, 1000))
+@settings(max_examples=20, deadline=None)
+def test_key_partition_is_a_partition(n):
+    rng = np.random.default_rng(n)
+    b = EventBatch(rng.integers(0, 1000, n), rng.uniform(0, 10, n),
+                   rng.normal(size=(n, 1)).astype(np.float32))
+    shards = b.partition_by_shard(8)
+    assert sum(len(s) for s in shards) == n
+    # same key always goes to the same shard
+    for s in shards:
+        for other in shards:
+            if s is not other and len(s) and len(other):
+                assert not (set(s.keys.tolist()) & set(other.keys.tolist()))

@@ -1,0 +1,140 @@
+"""Validate the analytic FLOPs model against XLA cost_analysis on
+loop-free programs (the reason the model exists: cost_analysis cannot see
+through while-loop trip counts, so we check the per-component constants on
+programs without loops)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.analytic import layer_flops_per_token
+from repro.configs import ARCHS, reduced
+
+
+def _hlo_flops(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return float(cost["flops"])
+
+
+def test_mlp_flops_formula():
+    cfg = reduced(ARCHS["mistral-large-123b"])
+    d, f = cfg.d_model, cfg.d_ff
+    b, s = 2, 64
+    w1 = jnp.zeros((d, f), jnp.bfloat16)
+    w2 = jnp.zeros((d, f), jnp.bfloat16)
+    w3 = jnp.zeros((f, d), jnp.bfloat16)
+    x = jnp.zeros((b, s, d), jnp.bfloat16)
+
+    def mlp(x, w1, w2, w3):
+        return jax.nn.silu(x @ w1) * (x @ w2) @ w3
+
+    measured = _hlo_flops(mlp, x, w1, w2, w3)
+    analytic = 2 * 3 * d * f * b * s          # the model's 'mlp' term
+    assert measured == pytest.approx(analytic, rel=0.05)
+
+
+def test_attention_proj_flops_formula():
+    cfg = reduced(ARCHS["mistral-large-123b"])
+    d, h, hkv, dh = (cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                     cfg.resolved_head_dim)
+    b, s = 2, 64
+    x = jnp.zeros((b, s, d), jnp.bfloat16)
+    wq = jnp.zeros((d, h * dh), jnp.bfloat16)
+    wk = jnp.zeros((d, hkv * dh), jnp.bfloat16)
+    wv = jnp.zeros((d, hkv * dh), jnp.bfloat16)
+    wo = jnp.zeros((h * dh, d), jnp.bfloat16)
+
+    def proj(x, wq, wk, wv, wo):
+        return (x @ wq) @ wo.T @ wo + (x @ wk).sum() + (x @ wv).sum()
+
+    # simpler: measure the four projections separately
+    def qkvo(x, wq, wk, wv, wo):
+        q = x @ wq
+        k = x @ wk
+        v = x @ wv
+        o = q @ wo
+        return q.sum() + k.sum() + v.sum() + o.sum()
+
+    measured = _hlo_flops(qkvo, x, wq, wk, wv, wo)
+    comp = layer_flops_per_token(cfg, s, causal_full=True, kind="train")
+    analytic = comp["attn_proj"] * b * s
+    assert measured == pytest.approx(analytic, rel=0.05)
+
+
+def test_attention_score_flops_formula():
+    cfg = reduced(ARCHS["mistral-large-123b"])
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    b, s = 2, 128
+    q = jnp.zeros((b, h, s, dh), jnp.bfloat16)
+    k = jnp.zeros((b, h, s, dh), jnp.bfloat16)
+    v = jnp.zeros((b, h, s, dh), jnp.bfloat16)
+
+    def attn(q, k, v):
+        p = jnp.einsum("bhqd,bhkd->bhqk", q, k)
+        return jnp.einsum("bhqk,bhkd->bhqd", jax.nn.softmax(p, -1), v)
+
+    measured = _hlo_flops(attn, q, k, v)
+    comp = layer_flops_per_token(cfg, s, causal_full=True, kind="train")
+    # model counts 4*h*dh*S per token = both einsums, full (unmasked) tiles
+    analytic = comp["attn_score_computed"] * b * s \
+        * (h / cfg.num_heads)                     # same head count here
+    # softmax flops are extra in HLO; allow 15% slack
+    assert measured == pytest.approx(analytic, rel=0.15)
+
+
+def test_unembed_flops_formula():
+    from repro.distributed.sharding import pad_vocab
+    cfg = reduced(ARCHS["mamba2-780m"])
+    d, vp = cfg.d_model, pad_vocab(cfg.vocab_size)
+    b, s = 2, 64
+    x = jnp.zeros((b, s, d), jnp.bfloat16)
+    w = jnp.zeros((d, vp), jnp.bfloat16)
+    measured = _hlo_flops(lambda x, w: x @ w, x, w)
+    analytic = 2 * d * vp * b * s
+    assert measured == pytest.approx(analytic, rel=0.02)
+
+
+def test_cell_costs_monotonic_in_shape():
+    """Sanity: executed FLOPs grow with seq and batch; decode << train."""
+    from benchmarks.analytic import cell_costs
+    from repro.configs import SHAPES_BY_NAME
+    from repro.configs.base import SINGLE_POD_MESH
+    from repro.distributed import sharding as shd
+    cfg = ARCHS["granite-34b"]
+    prof_t = shd.sharding_profile(cfg, SINGLE_POD_MESH, 256, 4096, "train")
+    prof_d = shd.sharding_profile(cfg, SINGLE_POD_MESH, 128, 32768, "decode")
+    train = cell_costs(cfg, SHAPES_BY_NAME["train_4k"], SINGLE_POD_MESH,
+                       prof_t, mu=8)
+    dec = cell_costs(cfg, SHAPES_BY_NAME["decode_32k"], SINGLE_POD_MESH,
+                     prof_d)
+    assert train.flops_per_device > 100 * dec.flops_per_device
+    assert train.useful_flops_per_device < train.flops_per_device
+    assert dec.hbm_bytes_per_device > 0
+
+
+def test_variant_knobs_move_terms():
+    from benchmarks.analytic import cell_costs
+    from repro.configs import SHAPES_BY_NAME
+    from repro.configs.base import SINGLE_POD_MESH
+    from repro.distributed import sharding as shd
+    cfg = ARCHS["mistral-large-123b"]
+    shape = SHAPES_BY_NAME["decode_32k"]
+    prof = shd.sharding_profile(cfg, SINGLE_POD_MESH, 128, 32768, "decode")
+    base = cell_costs(cfg, shape, SINGLE_POD_MESH, prof)
+    kv8 = cell_costs(cfg, shape, SINGLE_POD_MESH, prof,
+                     variant={"kv_bits": 8})
+    bf16 = cell_costs(cfg, shape, SINGLE_POD_MESH, prof,
+                      variant={"kv_bits": 8, "param_dtype": "bfloat16"})
+    assert kv8.hbm_bytes_per_device < base.hbm_bytes_per_device
+    assert bf16.hbm_bytes_per_device < kv8.hbm_bytes_per_device
+
+    shape_t = SHAPES_BY_NAME["train_4k"]
+    prof_t = shd.sharding_profile(cfg, SINGLE_POD_MESH, 256, 4096, "train")
+    base_t = cell_costs(cfg, shape_t, SINGLE_POD_MESH, prof_t, mu=16,
+                        remat_group=11)
+    cskip = cell_costs(cfg, shape_t, SINGLE_POD_MESH, prof_t, mu=16,
+                       remat_group=11, variant={"causal_skip": True})
+    assert cskip.flops_per_device < base_t.flops_per_device

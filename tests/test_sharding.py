@@ -1,0 +1,130 @@
+"""Sharding-profile unit tests: divisibility-driven TP decisions for every
+(arch x shape x mesh) cell, without touching device state."""
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ALL_SHAPES, ARCHS, applicable_shapes, skipped_cells
+from repro.configs.base import MULTI_POD_MESH, SINGLE_POD_MESH
+from repro.distributed import sharding as shd
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh", [SINGLE_POD_MESH, MULTI_POD_MESH],
+                         ids=["single", "multi"])
+def test_profiles_well_formed(arch, mesh):
+    cfg = ARCHS[arch]
+    for shape in applicable_shapes(cfg):
+        prof = shd.sharding_profile(cfg, mesh, shape.global_batch,
+                                    shape.seq_len, shape.kind)
+        model_axis = dict(zip(mesh.axes, mesh.shape)).get("model", 1)
+        if prof.attn_tp:
+            assert cfg.num_heads % model_axis == 0
+            stored = cfg.num_kv_heads * prof.kv_repeat
+            if shape.kind != "decode":
+                assert stored % model_axis == 0
+        if prof.mlp_tp:
+            assert cfg.d_ff % model_axis == 0
+        if prof.expert_tp:
+            assert cfg.moe.num_experts % model_axis == 0
+        # batch axes always divide the global batch
+        n = 1
+        for ax in prof.batch_axes:
+            n *= dict(zip(mesh.axes, mesh.shape))[ax]
+        if prof.batch_axes:
+            assert shape.global_batch % n == 0
+        if shape.kind == "decode" and prof.kv_seq_shard:
+            assert shape.seq_len % model_axis == 0
+
+
+def test_known_fallbacks():
+    """hymba (25H) and starcoder2 (36H) can't head-TP on a 16-wide axis."""
+    for arch in ("hymba-1.5b", "starcoder2-7b"):
+        prof = shd.sharding_profile(ARCHS[arch], SINGLE_POD_MESH, 256,
+                                    4096, "train")
+        assert not prof.attn_tp
+        assert prof.mlp_tp               # TP-MLP hybrid fallback
+    prof = shd.sharding_profile(ARCHS["granite-34b"], SINGLE_POD_MESH, 256,
+                                4096, "train")
+    assert prof.attn_tp and prof.kv_repeat == 16     # MQA: 1 -> 16
+
+
+def test_decode_uses_seq_sharding_not_repeat():
+    prof = shd.sharding_profile(ARCHS["mistral-large-123b"],
+                                SINGLE_POD_MESH, 128, 32768, "decode")
+    assert prof.kv_seq_shard and prof.kv_repeat == 1
+
+
+def test_logical_to_pspec_trims_trailing_nones():
+    rules = {"batch": ("data",), "mlp": "model"}
+    spec = shd.logical_to_pspec(("batch", None, "mlp"), rules)
+    assert spec == P(("data",), None, "model")
+    spec = shd.logical_to_pspec(("batch", None, None), rules)
+    assert spec == P(("data",))
+
+
+def test_skip_list_is_exactly_full_attention_long_500k():
+    skips = skipped_cells()
+    assert all(s[1] == "long_500k" for s in skips)
+    skipped_archs = {s[0] for s in skips}
+    assert "mamba2-780m" not in skipped_archs
+    assert "hymba-1.5b" not in skipped_archs
+    assert len(skips) == 8
+
+
+def test_vocab_padding():
+    assert shd.pad_vocab(50280) % 256 == 0
+    assert shd.pad_vocab(50280) >= 50280
+    assert shd.pad_vocab(256) == 256
+
+
+def test_cell_count_is_32():
+    from repro.configs import all_cells
+    assert len(all_cells()) == 32
+
+
+def test_kv_repeat_preserves_attention_semantics():
+    """Repeating stored KV heads for TP divisibility must not change the
+    attention output (group mapping stays aligned)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models.attention import _repeat_kv, blocked_attention
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 64, 8, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 64, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 64, 2, 32)), jnp.float32)
+    base = blocked_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    rep = blocked_attention(q, _repeat_kv(k, 2), _repeat_kv(v, 2),
+                            causal=True, block_q=32, block_k=32)
+    np.testing.assert_allclose(base, rep, rtol=1e-5, atol=1e-5)
+
+
+def test_moe_shard_map_path_matches_local():
+    """The expert-parallel shard_map path (psum-combine) equals the local
+    dispatch on a trivial 1x1 mesh — the code path the 512-chip dry-run
+    lowers, validated numerically."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs import ARCHS, reduced
+    from repro.configs.base import MeshConfig
+    from repro.models.moe import moe_init, moe_forward
+
+    cfg = reduced(ARCHS["qwen3-moe-30b-a3b"])
+    params, _ = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(2, 16, cfg.d_model)) * 0.1, jnp.float32)
+
+    y_local, aux_local = moe_forward(params, x, cfg)
+
+    mesh_cfg = MeshConfig((1, 1), ("data", "model"))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    rules = shd.make_rules(cfg, mesh_cfg, 2)
+    prof = shd.sharding_profile(cfg, mesh_cfg, 2)
+    assert prof.expert_tp                 # 8 experts % 1 == 0
+    with shd.use_ctx(shd.ShardCtx(mesh=mesh, rules=rules, profile=prof)):
+        y_sharded, aux_sharded = moe_forward(params, x, cfg)
+
+    np.testing.assert_allclose(np.asarray(y_local), np.asarray(y_sharded),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(aux_local), float(aux_sharded),
+                               rtol=1e-5)

@@ -1,0 +1,183 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import build_model
+from repro.train import OptConfig, adamw_init, adamw_update, make_train_step
+from repro.train.checkpoint import (
+    AsyncCheckpointer, latest_checkpoint, read_manifest, restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.compression import (
+    CompressorConfig, compress_grads, compression_ratio, init_error_feedback,
+)
+from repro.train.optimizer import global_norm, schedule
+from repro.train.train_step import TrainState, init_train_state
+
+
+def _tiny_state(seed=0):
+    cfg = reduced(ARCHS["mamba2-780m"])
+    model = build_model(cfg)
+    return model, init_train_state(model, jax.random.PRNGKey(seed))
+
+
+# ------------------------------------------------------------- optimizer
+def test_schedule_warmup_and_decay():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_frac=0.1)
+    assert float(schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0, rel=1e-2)
+    assert float(schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1, rel=1e-2)
+
+
+def test_adamw_clips_gradients():
+    params = {"w": jnp.ones((4, 4))}
+    opt = adamw_init(params)
+    grads = {"w": jnp.full((4, 4), 100.0)}
+    _, _, stats = adamw_update(OptConfig(clip_norm=1.0), params, grads, opt)
+    assert float(stats["grad_norm"]) == pytest.approx(400.0)
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = OptConfig(lr=0.3, warmup_steps=1, weight_decay=0.0,
+                    total_steps=200)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(cfg, params, grads, opt)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    model, state = _tiny_state()
+    path = save_checkpoint(tmp_path, state, step=7, metadata={"arch": "x"})
+    assert latest_checkpoint(tmp_path) == path
+    assert read_manifest(path)["step"] == 7
+    restored = restore_checkpoint(path, jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_over_existing(tmp_path):
+    model, state = _tiny_state()
+    save_checkpoint(tmp_path, state, step=1)
+    model2, state2 = _tiny_state(seed=9)
+    save_checkpoint(tmp_path, state2, step=2)
+    latest = latest_checkpoint(tmp_path)
+    restored = restore_checkpoint(latest, jax.eval_shape(lambda: state2))
+    a = jax.tree.leaves(state2)[0]
+    b = jax.tree.leaves(restored)[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpointer_gc(tmp_path):
+    model, state = _tiny_state()
+    ck = AsyncCheckpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(state, s, block=True)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_00000003", "step_00000004"]
+    assert ck.last_saved_step == 4
+
+
+def test_restore_after_simulated_crash(tmp_path):
+    """Train, 'crash', restore, resume: state matches where it left off."""
+    model, state = _tiny_state()
+    step_fn = jax.jit(make_train_step(model, OptConfig(warmup_steps=1)))
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, 512, (2, 16)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, 512, (2, 16)), jnp.int32),
+    }
+    for i in range(3):
+        state, _ = step_fn(state, batch)
+    save_checkpoint(tmp_path, state, step=3)
+    state_after, _ = step_fn(state, batch)       # step 4, then crash
+
+    restored = restore_checkpoint(latest_checkpoint(tmp_path),
+                                  jax.eval_shape(lambda: state))
+    assert int(restored.opt["step"]) == 3
+    resumed, _ = step_fn(restored, batch)
+    for a, b in zip(jax.tree.leaves(resumed), jax.tree.leaves(state_after)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), rtol=1e-5,
+                                   atol=1e-6)
+
+
+# ----------------------------------------------------------- compression
+def test_int8_compression_bounded_error():
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(256,)),
+                          jnp.float32)}
+    ef = init_error_feedback(g)
+    sent, ef2 = compress_grads(CompressorConfig("int8"), g, ef)
+    err = float(jnp.max(jnp.abs(sent["w"] - g["w"])))
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127
+    assert err <= scale * 0.5 + 1e-7
+    # error feedback holds the residual
+    np.testing.assert_allclose(np.asarray(ef2["w"]),
+                               np.asarray(g["w"] - sent["w"]), atol=1e-7)
+
+
+def test_error_feedback_preserves_long_run_average():
+    """Sum of transmitted grads converges to the sum of true grads."""
+    rng = np.random.default_rng(1)
+    cfg = CompressorConfig("topk", topk_frac=0.2)
+    g_true = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    ef = {"w": jnp.zeros((64,), jnp.float32)}
+    total_sent = jnp.zeros((64,))
+    n = 60
+    for _ in range(n):
+        sent, ef = compress_grads(cfg, {"w": g_true}, ef)
+        total_sent = total_sent + sent["w"]
+    np.testing.assert_allclose(np.asarray(total_sent / n),
+                               np.asarray(g_true), atol=0.05)
+
+
+def test_compression_ratio_values():
+    assert compression_ratio(CompressorConfig("int8")) == 0.25
+    assert compression_ratio(CompressorConfig("none")) == 1.0
+    assert compression_ratio(CompressorConfig("topk", topk_frac=0.01)) \
+        == pytest.approx(0.02)
+
+
+def test_train_step_with_compression_runs():
+    model, state = _tiny_state()
+    ef = init_error_feedback(state.params)
+    holder = {"ef": ef}
+
+    def transform(grads):
+        sent, holder["ef"] = compress_grads(CompressorConfig("int8"), grads,
+                                            holder["ef"])
+        return sent
+
+    step = make_train_step(model, grad_transform=transform)
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, 512, (2, 16)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, 512, (2, 16)), jnp.int32),
+    }
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+
+
+def test_elastic_reshard_roundtrip():
+    """A train state moves onto a (trivial 1x1) mesh and values survive."""
+    import jax
+    from repro.configs.base import MeshConfig
+    from repro.train.elastic import adjust_batch_schedule, elastic_reshard
+
+    model, state = _tiny_state()
+    mesh_cfg = MeshConfig((1, 1), ("data", "model"))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    new_state = elastic_reshard(state, model, mesh, mesh_cfg,
+                                global_batch=8)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(new_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    per_shard, step = adjust_batch_schedule(256, old_dp=16, new_dp=8, step=7)
+    assert per_shard == 32 and step == 7
+    with pytest.raises(ValueError):
+        adjust_batch_schedule(256, 16, 7, 0)

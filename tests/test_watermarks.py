@@ -1,0 +1,27 @@
+import numpy as np
+
+from repro.core.time import PeriodicWatermarkGenerator, WatermarkTracker
+
+
+def test_tracker_monotonic():
+    t = WatermarkTracker()
+    assert t.advance(10.0)
+    assert not t.advance(5.0)             # never regresses
+    assert t.watermark == 10.0
+
+
+def test_lateness_classification():
+    t = WatermarkTracker()
+    t.advance(100.0)
+    ts = np.array([50.0, 99.9, 100.0, 150.0])
+    assert t.is_late(ts).tolist() == [True, True, False, False]
+    np.testing.assert_allclose(t.lateness_of(ts)[:2], [50.0, 0.1])
+
+
+def test_periodic_emission():
+    g = PeriodicWatermarkGenerator(period=5.0, slack=1.0)
+    g.observe(np.array([10.0, 20.0]))
+    assert g.maybe_emit(0.0) == 19.0      # max_ts - slack
+    assert g.maybe_emit(2.0) is None      # period not elapsed
+    g.observe(np.array([30.0]))
+    assert g.maybe_emit(5.0) == 29.0

@@ -1,0 +1,60 @@
+import numpy as np
+import pytest
+
+from repro.core.windows import (
+    CountWindows, SessionWindows, SlidingWindows, TumblingWindows, WindowId,
+)
+
+
+def test_tumbling_assignment():
+    ts = np.array([0.5, 9.9, 10.0, 19.9, 20.1])
+    out = TumblingWindows(10.0).assign(ts)
+    windows = {w: set(i.tolist()) for w, i in out}
+    assert windows[WindowId(0.0, 10.0)] == {0, 1}
+    assert windows[WindowId(10.0, 20.0)] == {2, 3}
+    assert windows[WindowId(20.0, 30.0)] == {4}
+
+
+def test_tumbling_covers_all_events():
+    ts = np.random.default_rng(0).uniform(0, 1000, 5000)
+    out = TumblingWindows(7.0).assign(ts)
+    seen = np.concatenate([i for _, i in out])
+    assert sorted(seen.tolist()) == list(range(5000))
+
+
+def test_sliding_overlap():
+    ts = np.array([12.0])
+    out = SlidingWindows(10.0, 5.0).assign(ts)
+    starts = sorted(w.start for w, _ in out)
+    assert starts == [5.0, 10.0]          # event at 12 in [5,15) and [10,20)
+    for w, idx in out:
+        assert idx.tolist() == [0]
+
+
+def test_sliding_event_in_size_over_slide_windows():
+    ts = np.random.default_rng(1).uniform(100, 200, 300)
+    out = SlidingWindows(30.0, 10.0).assign(ts)
+    counts = np.zeros(300, int)
+    for w, idx in out:
+        for i in idx:
+            assert w.start <= ts[i] < w.end
+            counts[i] += 1
+    assert (counts == 3).all()            # size/slide = 3 windows per event
+
+
+def test_session_windows_split_on_gap():
+    ts = np.array([0.0, 1.0, 2.0, 50.0, 51.0])
+    out = SessionWindows(gap=10.0).assign(ts)
+    assert len(out) == 2
+    sizes = sorted(len(i) for _, i in out)
+    assert sizes == [2, 3]
+
+
+def test_count_windows_running_offset():
+    cw = CountWindows(count=4)
+    out1 = cw.assign(np.zeros(6))
+    out2 = cw.assign(np.zeros(6))
+    sizes1 = [len(i) for _, i in out1]
+    sizes2 = [len(i) for _, i in out2]
+    assert sizes1 == [4, 2]
+    assert sizes2 == [2, 4]               # continues the partial window
