@@ -1,0 +1,10 @@
+# Tier-1 verification: the exact ROADMAP.md command, verbatim. Keep in
+# sync with ROADMAP.md "Tier-1 verify".
+verify:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+# Benchmark entry point (CSV rows, one per paper table/figure).
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py
+
+.PHONY: verify bench

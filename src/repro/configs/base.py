@@ -239,6 +239,11 @@ class AionConfig:
     pressure_severe: float = 0.90
     # watermark period (processing-time seconds) for periodic watermarks
     watermark_period: float = 1.0
+    # batched multi-window execution (core/batch_exec.py): fold every due
+    # window of one priority class in a single device pass when the
+    # operator implements the batch contract; the per-window path remains
+    # the reference and the fallback
+    batched_execution: bool = True
 
 
 def to_json(cfg: Any) -> str:

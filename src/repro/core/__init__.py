@@ -1,3 +1,4 @@
+from repro.core.batch_exec import BatchExecutor, BatchWorkItem
 from repro.core.buckets import Block, MemoryBudget, Tier, WindowState
 from repro.core.cleanup import LatenessHistogram, PredictiveCleanup
 from repro.core.engine import StreamEngine
@@ -20,6 +21,7 @@ from repro.core.windows import (
 )
 
 __all__ = [
+    "BatchExecutor", "BatchWorkItem",
     "Block", "MemoryBudget", "Tier", "WindowState",
     "LatenessHistogram", "PredictiveCleanup", "StreamEngine", "EventBatch",
     "make_operator", "EngineOOM", "GlobalMemoryPolicy", "InMemoryPolicy",

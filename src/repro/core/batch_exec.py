@@ -1,0 +1,188 @@
+"""Batched multi-window execution: one device pass per poll/watermark.
+
+Paper §3 orders work by a strict priority rule — live window executions
+first, then late re-executions, with demand staging outranking speculative
+pre-staging. The per-window reference path (``StreamEngine.
+execute_window``) honors that rule one window at a time, paying a jit
+dispatch per block per window; with many concurrent due windows (long
+lateness horizons keep many past windows re-executing) the dispatch
+overhead — not the fold FLOPs — dominates.
+
+This module keeps the priority rule but batches *within* a priority
+class: each ``advance_watermark`` gathers every newly-expired window into
+one live batch, and each ``poll`` gathers every due late re-execution
+into one late batch — live batches always run before late batches because
+the engine calls them in that order, so the rule is preserved at batch
+granularity. A batch stacks the windows' fixed-capacity blocks into
+``[rows, block_capacity, W]`` tensors (rows may be blocks of different
+windows; a slot vector maps rows back to windows) and folds everything in
+a single call of the operator's ``fold_batch`` — which reduces over
+composite ``(window_slot, key)`` segment ids through the batched
+segment-aggregate Pallas kernel. Re-execution stays a pure function of
+bucket contents, so folding N windows in one pass is bitwise-equivalent
+to N independent folds up to float associativity (parity-tested in
+``tests/test_batch_exec.py``).
+
+Unlike the per-window path — which demand-stages p-blocks to the device
+and folds them in place — the batched fold consumes one host-side stack
+(a single contiguous transfer into the jitted fold), so the gather reads
+p-blocks host-side through ``IOScheduler.fetch_block_host`` (accounted,
+and persisted reads pay the simulated persistent-tier cost) and pulls
+already-resident m-blocks back without issuing new staging. Device-side
+gathering of m-bucket rows plus demand staging for a device-side stack
+is the TPU follow-up tracked in ROADMAP.md.
+"""
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.buckets import Block, WindowState
+from repro.core.windows import WindowId
+
+
+@dataclass
+class BatchWorkItem:
+    """One due window execution (live expiry or late re-execution)."""
+    wid: WindowId
+    state: WindowState
+    late: bool
+
+
+def _block_arrays(blk: Block, io) -> Optional[Dict[str, Any]]:
+    """Full-capacity SoA arrays for one block, wherever it lives.
+
+    Prefers the device-resident copy (no transfer needed to read it back
+    on CPU; one is queued anyway by the host stack); otherwise a demand
+    host read through the I/O layer (accounted + simulated-cost-charged).
+    Returns None only if the block was purged while the batch was being
+    gathered.
+    """
+    dd = blk.device_data
+    if dd is not None:
+        return dd
+    return io.fetch_block_host(blk)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def snapshot_block_partition(state: WindowState):
+    """Atomic (m, p) partition of a window's blocks.
+
+    Shared by the per-window and batched execution paths — the
+    double-fold hazard lives here: snapshot BOTH lists before issuing any
+    staging request, otherwise the I/O thread can move a block
+    device-side between the two snapshots and it would be folded twice.
+    """
+    m_snapshot = state.m_blocks()
+    m_ids = {id(b) for b in m_snapshot}
+    p_blocks = [b for b in state.blocks if id(b) not in m_ids]
+    return m_snapshot, p_blocks
+
+
+class BatchExecutor:
+    """Executes a set of due windows in one vectorized device pass."""
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    # ------------------------------------------------------------ execute
+    def execute(self, items: List[BatchWorkItem], now: float
+                ) -> Dict[WindowId, Any]:
+        """Fold all items in one device pass; returns results by window.
+
+        Falls back to the per-window reference path when the operator has
+        no batch contract or the batch is trivial (a single window gains
+        nothing from stacking).
+        """
+        eng = self.engine
+        op = eng.operator
+        if not items:
+            return {}
+        if not op.supports_batch or len(items) == 1:
+            return {it.wid: eng.execute_window(it.wid, now, it.late)
+                    for it in items}
+
+        t0 = _time.time()
+
+        # 1. snapshot every window (m-blocks read back in place, p-blocks
+        #    read host-side — the fold consumes one host stack, so no
+        #    demand staging is issued)
+        plans = [(it, sum(snapshot_block_partition(it.state), []))
+                 for it in items]
+
+        # 2. stack block rows: [rows, capacity, W] + fills + slot map
+        keys_rows, ts_rows, val_rows, fills, slots = [], [], [], [], []
+        for slot, (it, blocks) in enumerate(plans):
+            for blk in blocks:
+                if blk.fill == 0:
+                    continue
+                arrs = _block_arrays(blk, eng.io)
+                if arrs is None:         # purged mid-gather
+                    continue
+                keys_rows.append(arrs["keys"])
+                ts_rows.append(arrs["timestamps"])
+                val_rows.append(arrs["values"])
+                fills.append(blk.fill)
+                slots.append(slot)
+
+        # 3. one device pass over every due window. Rows are stacked
+        #    host-side (np.stack of a device row is a pull-back; cheap on
+        #    CPU, and one contiguous device_put beats a per-row dispatch
+        #    chain — device-side stacking for TPU is a ROADMAP open item).
+        #    Row and slot counts are padded to powers of two so the jitted
+        #    fold sees O(log) distinct shapes instead of recompiling every
+        #    time a window gains a block; padding rows have fill 0 and
+        #    contribute nothing.
+        num_slots = len(plans)
+        dev_t0 = _time.time()
+        if fills:
+            pad_rows = _next_pow2(len(fills)) - len(fills)
+            if pad_rows:
+                cap = keys_rows[0].shape[0]
+                w = val_rows[0].shape[-1]
+                keys_rows.extend([np.zeros((cap,), np.int32)] * pad_rows)
+                ts_rows.extend([np.zeros((cap,), np.float64)] * pad_rows)
+                val_rows.extend(
+                    [np.zeros((cap, w), np.float32)] * pad_rows)
+                fills.extend([0] * pad_rows)
+                slots.extend([0] * pad_rows)
+            data = {
+                "keys": np.stack([np.asarray(r) for r in keys_rows]),
+                "timestamps": np.stack([np.asarray(r) for r in ts_rows]),
+                "values": np.stack([np.asarray(r) for r in val_rows]),
+            }
+            results = op.run_batch(data, jnp.asarray(fills, jnp.int32),
+                                   jnp.asarray(slots, jnp.int32),
+                                   _next_pow2(num_slots))
+        else:
+            # every window empty: finalize the identity accumulator
+            results = [op.finalize(op.init_acc()) for _ in range(num_slots)]
+        dev_dt = _time.time() - dev_t0
+
+        # 4. per-window bookkeeping, identical to execute_window
+        out: Dict[WindowId, Any] = {}
+        for slot, (it, _) in enumerate(plans):
+            result = results[slot]
+            it.state.result = result
+            eng.results[it.wid] = result
+            it.state.last_executed_at = now
+            it.state.events_at_last_exec = it.state.total_events
+            if it.late:
+                eng.metrics.late_executions += 1
+            else:
+                eng.metrics.live_executions += 1
+            out[it.wid] = result
+            eng._post_execute_destage(it.wid, it.state, now)
+        eng.metrics.exec_seconds += _time.time() - t0
+        eng.metrics.batch_executions += 1
+        eng.metrics.batched_windows += num_slots
+        eng.metrics.batch_device_seconds += dev_dt
+        eng.metrics.batch_occupancy_series.append(num_slots)
+        return out

@@ -20,7 +20,7 @@ import os
 import threading
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, Iterator, List, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -39,16 +39,27 @@ _BLOCK_IDS = iter(range(1, 1 << 62))
 @dataclass
 class Block:
     """Fixed-capacity SoA block. Exactly one of (host_data, device_data,
-    storage_path) is the authoritative copy, per ``tier``."""
+    storage_path) is the authoritative copy, per ``tier``.
+
+    ``lock``/``dropped`` serialize the ownership handoff between the
+    engine's predictive cleanup (main thread) and the staging executor
+    (I/O thread): a stage that commits after the block was dropped must
+    release its own budget reservation, and a drop that races a
+    committed stage must report the device bytes so the engine releases
+    them — otherwise reservations leak.
+    """
     capacity: int
     width: int
     block_id: int = field(default_factory=lambda: next(_BLOCK_IDS))
     fill: int = 0
     tier: Tier = Tier.HOST
     persisted: bool = False      # has touched the persistent tier (p-bucket)
+    dropped: bool = False        # predictive cleanup freed this block
     host_data: Optional[Dict[str, np.ndarray]] = None
     device_data: Optional[Dict[str, object]] = None
     storage_path: Optional[Path] = None
+    lock: threading.Lock = field(default_factory=threading.Lock,
+                                 repr=False, compare=False)
 
     @staticmethod
     def new(capacity: int, width: int) -> "Block":
@@ -107,13 +118,20 @@ class Block:
         self.host_data = None
         self.tier = Tier.STORAGE
 
-    def drop(self) -> None:
-        """Free all copies (predictive cleanup)."""
-        self.host_data = None
-        self.device_data = None
-        if self.storage_path is not None and self.storage_path.exists():
-            os.unlink(self.storage_path)
-        self.storage_path = None
+    def drop(self) -> int:
+        """Free all copies (predictive cleanup). Returns the device bytes
+        that were committed to the budget at drop time — the caller owns
+        releasing them (an in-flight stage that commits later sees
+        ``dropped`` and releases its own reservation instead)."""
+        with self.lock:
+            self.dropped = True
+            device_bytes = self.nbytes if self.tier == Tier.DEVICE else 0
+            self.host_data = None
+            self.device_data = None
+            if self.storage_path is not None and self.storage_path.exists():
+                os.unlink(self.storage_path)
+            self.storage_path = None
+            return device_bytes
 
 
 class MemoryBudget:
@@ -197,10 +215,10 @@ class WindowState:
     def events_since_last_exec(self) -> int:
         return self.total_events - self.events_at_last_exec
 
-    def drop_all(self) -> int:
-        """Predictive cleanup: free every copy. Returns bytes freed."""
+    def drop_all(self) -> Tuple[int, int]:
+        """Predictive cleanup: free every copy. Returns (total bytes
+        freed, device bytes the caller must release from the budget)."""
         freed = sum(b.nbytes for b in self.blocks)
-        for b in self.blocks:
-            b.drop()
+        device_bytes = sum(b.drop() for b in self.blocks)
         self.blocks.clear()
-        return freed
+        return freed, device_bytes

@@ -14,6 +14,11 @@ Control flow (host-side orchestration; operator folds are jit-compiled):
 Live executions always run before late re-executions (the paper's priority
 rule); window re-execution is a pure function of bucket contents, which is
 what makes straggler backup execution idempotent (distributed/fault.py).
+
+Execution routing: when ``AionConfig.batched_execution`` is on (default)
+and the operator implements the batch contract, all due windows of one
+priority class fold in a single device pass through ``core.batch_exec``;
+the per-window ``execute_window`` path is retained as the reference.
 """
 from __future__ import annotations
 
@@ -25,7 +30,10 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.configs.base import AionConfig
-from repro.core.buckets import MemoryBudget, Tier, WindowState
+from repro.core.batch_exec import (
+    BatchExecutor, BatchWorkItem, snapshot_block_partition,
+)
+from repro.core.buckets import Block, MemoryBudget, Tier, WindowState
 from repro.core.cleanup import PredictiveCleanup
 from repro.core.events import EventBatch
 from repro.core.operators import WindowOperator
@@ -50,12 +58,30 @@ class EngineMetrics:
     purged_bytes: int = 0
     fetch_stall_seconds: float = 0.0
     exec_seconds: float = 0.0
+    # batched execution path: one entry per device pass
+    batch_executions: int = 0
+    batched_windows: int = 0
+    batch_device_seconds: float = 0.0
+    batch_occupancy_series: List[int] = field(default_factory=list)
     device_bytes_series: List[Tuple[float, int]] = field(default_factory=list)
     host_bytes_series: List[Tuple[float, int]] = field(default_factory=list)
 
     def snapshot(self, now: float, device_bytes: int, host_bytes: int):
         self.device_bytes_series.append((now, device_bytes))
         self.host_bytes_series.append((now, host_bytes))
+
+    @property
+    def mean_batch_occupancy(self) -> float:
+        """Windows folded per device pass (1.0 == no batching win)."""
+        if not self.batch_occupancy_series:
+            return 0.0
+        return float(np.mean(self.batch_occupancy_series))
+
+    @property
+    def device_seconds_per_execution(self) -> float:
+        if not self.batched_windows:
+            return 0.0
+        return self.batch_device_seconds / self.batched_windows
 
 
 @dataclass
@@ -112,6 +138,12 @@ class StreamEngine:
         self.reexec_plans: Dict[WindowId, _ReexecPlan] = {}
         self.metrics = EngineMetrics()
         self.results: Dict[WindowId, Any] = {}
+        self.batch_exec = BatchExecutor(self)
+
+    @property
+    def batching_enabled(self) -> bool:
+        """Batched path is on AND the operator implements the contract."""
+        return self.aion.batched_execution and self.operator.supports_batch
 
     # ------------------------------------------------------------- helpers
     @property
@@ -151,9 +183,6 @@ class StreamEngine:
                 if len(idx) != len(batch) else batch
             state = self._state_for(wid)
             late = wid.end <= wm
-            if late and state.result is None and state.expired is False \
-                    and wid not in self.windows:
-                pass
             new_blocks = state.append_events(sub, late)
             self.policy.on_append(state, new_blocks, self.io, late, now)
             if late:
@@ -190,9 +219,20 @@ class StreamEngine:
     def advance_watermark(self, wm: float, now: float) -> None:
         if not self.tracker.advance(wm):
             return
-        for wid in sorted(self.windows):
-            state = self.windows[wid]
-            if not state.expired and wid.end <= wm:
+        due = [wid for wid in sorted(self.windows)
+               if not self.windows[wid].expired and wid.end <= wm]
+        if self.batching_enabled and len(due) > 1:
+            # live batch: every newly-expired window folds in one pass
+            for wid in due:
+                self.windows[wid].expired = True
+            self.batch_exec.execute(
+                [BatchWorkItem(wid, self.windows[wid], False)
+                 for wid in due], now)
+            for wid in due:
+                self.policy.on_expiry(self.windows[wid], self.io, now)
+        else:
+            for wid in due:
+                state = self.windows[wid]
                 state.expired = True
                 self.execute_window(wid, now, late=False)
                 self.policy.on_expiry(state, self.io, now)
@@ -203,13 +243,10 @@ class StreamEngine:
         t0 = _time.time()
         stall = 0.0
 
-        # lazy block iteration: consume m-blocks while staging p-blocks.
-        # Snapshot BOTH lists atomically before issuing the staging request
-        # — otherwise the IO thread can move a block device-side between the
-        # two snapshots and it would be folded twice.
-        m_snapshot = state.m_blocks()
-        p_blocks = [b for b in state.blocks
-                    if id(b) not in {id(x) for x in m_snapshot}]
+        # lazy block iteration: consume m-blocks while staging p-blocks
+        # (the shared snapshot helper keeps the double-fold hazard logic
+        # in one place)
+        m_snapshot, p_blocks = snapshot_block_partition(state)
         stage_done = None
         stage_t0 = _time.time()
         staged_events = sum(b.fill for b in p_blocks)
@@ -229,10 +266,10 @@ class StreamEngine:
             if blk.device_data is not None:
                 acc = self.operator.fold(acc, blk.device_data, blk.fill)
             else:
-                data = blk.as_event_batch()
-                acc = self.operator.fold(
-                    acc, {"keys": data.keys, "timestamps": data.timestamps,
-                          "values": data.values}, blk.fill)
+                hd = self.io.fetch_block_host(blk)
+                if hd is None:
+                    continue                    # purged mid-execution
+                acc = self.operator.fold(acc, hd, blk.fill)
         # pass 2: blocks arriving from the p-bucket
         if stage_done is not None:
             w0 = _time.time()
@@ -243,10 +280,10 @@ class StreamEngine:
                 acc = self.operator.fold(acc, blk.device_data, blk.fill)
             else:
                 # staging could not reserve budget: fold host-side copy
-                data = blk.as_event_batch()
-                acc = self.operator.fold(
-                    acc, {"keys": data.keys, "timestamps": data.timestamps,
-                          "values": data.values}, blk.fill)
+                hd = self.io.fetch_block_host(blk)
+                if hd is None:
+                    continue                    # purged mid-execution
+                acc = self.operator.fold(acc, hd, blk.fill)
         if p_blocks and staged_events:
             self.prestage.cost.observe(_time.time() - stage_t0,
                                        staged_events)
@@ -262,6 +299,11 @@ class StreamEngine:
             self.metrics.late_executions += 1
         else:
             self.metrics.live_executions += 1
+        self._post_execute_destage(wid, state, now)
+        return result
+
+    def _post_execute_destage(self, wid: WindowId, state: WindowState,
+                              now: float) -> None:
         # keep the m-bucket resident if another re-execution is imminent
         # (avoids destage/restage thrash between planned executions)
         plan = self.reexec_plans.get(wid)
@@ -271,13 +313,20 @@ class StreamEngine:
                      <= 2 * self.prestage_margin)
         if not next_soon:
             self.policy.on_post_execute(state, self.io, now)
-        return result
 
     # ----------------------------------------------------------------- poll
     def poll(self, now: float) -> None:
         # 1. due late re-executions first (their demand staging outranks the
         #    speculative pre-staging issued below; live execution in
         #    advance_watermark always went before either)
+        if self.batching_enabled:
+            self._poll_reexec_batched(now)
+        else:
+            self._poll_reexec_reference(now)
+        self._poll_tail(now)
+
+    def _poll_reexec_reference(self, now: float) -> None:
+        """Per-window reference path: one execution per due plan time."""
         for wid, plan in list(self.reexec_plans.items()):
             state = self.windows.get(wid)
             if state is None:
@@ -291,6 +340,39 @@ class StreamEngine:
                     self.prestage.plan(wid, state,
                                        plan.times[plan.next_idx], now,
                                        self.prestage_margin)
+
+    def _poll_reexec_batched(self, now: float) -> None:
+        """Batched path: every window with due re-executions folds in ONE
+        device pass. A window's multiple already-due plan times collapse
+        into a single execution — re-execution is a pure function of
+        bucket contents, so executing once at ``now`` yields the same
+        result as executing at each elapsed time."""
+        due: List[Tuple[WindowId, WindowState, _ReexecPlan]] = []
+        for wid, plan in list(self.reexec_plans.items()):
+            state = self.windows.get(wid)
+            if state is None:
+                del self.reexec_plans[wid]
+                continue
+            n_due = 0
+            while plan.next_idx + n_due < len(plan.times) and \
+                    plan.times[plan.next_idx + n_due] <= now:
+                n_due += 1
+            if n_due:
+                # leave next_idx on the LAST due time so the imminence
+                # check in _post_execute_destage sees the first future one
+                plan.next_idx += n_due - 1
+                due.append((wid, state, plan))
+        if not due:
+            return
+        self.batch_exec.execute(
+            [BatchWorkItem(wid, state, True) for wid, state, _ in due], now)
+        for wid, state, plan in due:
+            plan.next_idx += 1
+            if self.prestage_enabled and plan.next_idx < len(plan.times):
+                self.prestage.plan(wid, state, plan.times[plan.next_idx],
+                                   now, self.prestage_margin)
+
+    def _poll_tail(self, now: float) -> None:
         # 2. due pre-staging (for future re-executions)
         if self.prestage_enabled:
             for wid in self.prestage.due(now):
@@ -303,9 +385,11 @@ class StreamEngine:
             for wid in list(self.windows):
                 state = self.windows[wid]
                 if state.expired and self.cleanup.should_purge(wid.end, wm):
-                    freed = state.drop_all()
-                    for b in state.m_blocks():
-                        self.budget.release(b.nbytes)
+                    # drop_all reports the device bytes committed at drop
+                    # time; an in-flight stage that commits later sees the
+                    # dropped flag and releases its own reservation
+                    freed, device_bytes = state.drop_all()
+                    self.budget.release(device_bytes)
                     self.metrics.purged_windows += 1
                     self.metrics.purged_bytes += freed
                     self.prestage.cancel(wid)
@@ -323,8 +407,13 @@ class StreamEngine:
     # -------------------------------------------------- engine checkpointing
     def restore_state(self, snap: Dict[str, Any]) -> None:
         """Restore from ``checkpoint_state()`` output: watermark, lateness
-        histogram, and window bucket contents (host tier; staging decisions
-        are re-made by the policies after restart)."""
+        histogram, and window bucket contents.
+
+        Blocks are rebuilt 1:1 — same fill boundaries and ``persisted``
+        flags as at checkpoint time — rather than re-appended (which would
+        re-pack events into different blocks and lose the on-time/late
+        provenance). All blocks restore into the host tier; device
+        placement is re-decided by the policies after restart."""
         import jax.numpy as _jnp
         self.tracker.watermark = snap["watermark"]
         self.cleanup.hist.counts = _jnp.asarray(
@@ -339,13 +428,43 @@ class StreamEngine:
                 data = b["data"]
                 if not data or b["fill"] == 0:
                     continue
-                batch = EventBatch(
-                    np.asarray(data["keys"], np.int32)[:b["fill"]],
-                    np.asarray(data["timestamps"])[:b["fill"]],
-                    np.asarray(data["values"], np.float32)[:b["fill"]])
-                st.append_events(batch, late=False)
+                blk = Block.new(st.block_capacity, st.width)
+                fill = int(b["fill"])
+                blk.host_data["keys"][:fill] = \
+                    np.asarray(data["keys"], np.int32)[:fill]
+                blk.host_data["timestamps"][:fill] = \
+                    np.asarray(data["timestamps"], np.float64)[:fill]
+                blk.host_data["values"][:fill] = \
+                    np.asarray(data["values"], np.float32)[:fill]
+                blk.fill = fill
+                blk.persisted = bool(b.get(
+                    "persisted", b.get("tier") != Tier.DEVICE.value))
+                st.blocks.append(blk)
             st.total_events = w["total_events"]
             st.late_events = w["late_events"]
+
+    @staticmethod
+    def _block_ckpt_data(b: Block) -> Dict[str, Any]:
+        """Serializable event arrays for one block, whatever its tier
+        (spilled blocks are read back from their .npz without mutating
+        the block's residency).
+
+        Read order is race-critical vs the concurrent destage thread:
+        grab the device dict reference FIRST (destage clears the
+        reference, not the dict), then prefer the host copy — destage
+        writes host_data before dropping device_data, so at least one of
+        the two snapshots is always complete."""
+        dd = b.device_data
+        hd = b.host_data
+        if hd is not None:
+            return {k: np.asarray(v).tolist() for k, v in hd.items()}
+        if dd is not None:
+            return {k: np.asarray(v).tolist() for k, v in dd.items()}
+        if b.storage_path is not None:
+            with np.load(b.storage_path) as z:
+                return {k: z[k].tolist()
+                        for k in ("keys", "timestamps", "values")}
+        return {}
 
     def checkpoint_state(self) -> Dict[str, Any]:
         """Serializable engine state for fault tolerance (bucket manifests,
@@ -362,11 +481,8 @@ class StreamEngine:
                     "expired": st.expired,
                     "blocks": [
                         {"fill": b.fill, "tier": b.tier.value,
-                         "data": {k: v.tolist() for k, v in
-                                  (b.host_data or {}).items()}
-                         if b.tier != Tier.DEVICE else
-                         {k: np.asarray(v).tolist() for k, v in
-                          (b.device_data or {}).items()}}
+                         "persisted": b.persisted,
+                         "data": self._block_ckpt_data(b)}
                         for b in st.blocks
                     ],
                 }

@@ -12,6 +12,23 @@ finalizing. Folds are jit-compiled over fixed block shapes.
   lrb          non-blocking  Linear Road: per-segment vehicle counts, avg
                              speed, accident detection -> toll
   percentile   BLOCKING      exact percentiles (needs the full window)
+
+Batched contract: operators may additionally implement ``fold_batch`` /
+``finalize_batch`` — a vectorized path that folds the blocks of MANY
+windows in one device pass by reducing over composite ``(window_slot,
+key)`` segment ids through the batched segment-aggregate kernel.
+``average``, ``stock``, and ``lrb`` implement it; ``bigrams`` and the
+blocking ``percentile`` fall back to the per-window reference path.
+
+  fold_batch(data, fills, slots, num_slots) -> acc
+      data   {"keys": [B, cap] i32, "timestamps": [B, cap] f64,
+              "values": [B, cap, W] f32}   (B stacked blocks, padded)
+      fills  [B] i32   valid events per block (ragged fills)
+      slots  [B] i32   block row -> window slot (several blocks of one
+                       window share a slot)
+  finalize_batch(acc, num_slots) -> [per-window result] * num_slots
+      element i is equal (up to float assoc.) to the per-window
+      ``finalize(fold(...))`` over slot i's blocks.
 """
 from __future__ import annotations
 
@@ -31,6 +48,15 @@ class WindowOperator:
     init_acc: Callable[[], Any]
     fold: Callable[[Any, Dict[str, jnp.ndarray], jnp.ndarray], Any]
     finalize: Callable[[Any], Any]
+    # vectorized multi-window contract (see module docstring); None ->
+    # the engine falls back to per-window execution for this operator
+    fold_batch: Optional[Callable[..., Any]] = None
+    finalize_batch: Optional[Callable[[Any, int], list]] = None
+
+    @property
+    def supports_batch(self) -> bool:
+        return self.fold_batch is not None and \
+            self.finalize_batch is not None
 
     def run(self, blocks, fills) -> Any:
         """Reference path: fold over (block_data, fill) pairs."""
@@ -39,14 +65,38 @@ class WindowOperator:
             acc = self.fold(acc, data, fill)
         return self.finalize(acc)
 
+    def run_batch(self, data, fills, slots, num_slots: int) -> list:
+        """Batched path: one device pass over stacked blocks of many
+        windows; returns one finalized result per slot."""
+        assert self.supports_batch
+        acc = self.fold_batch(data, fills, slots, num_slots)
+        return self.finalize_batch(acc, num_slots)
+
 
 def _valid_mask(n: int, fill) -> jnp.ndarray:
     return jnp.arange(n) < fill
 
 
+def _batch_valid(cap: int, fills) -> jnp.ndarray:
+    """[B, cap] ragged-fill mask from per-block fills."""
+    return jnp.arange(cap)[None, :] < fills[:, None]
+
+
+def _per_slot_finalize(finalize: Callable[[Any], Any]):
+    """finalize_batch from a per-window finalize: slice the batched acc
+    (dict of [num_slots, ...] arrays) per slot and finalize each."""
+    def finalize_batch(acc, num_slots):
+        acc = {k: np.asarray(v) for k, v in acc.items()}
+        return [finalize({k: v[i] for k, v in acc.items()})
+                for i in range(num_slots)]
+    return finalize_batch
+
+
 # ------------------------------------------------------------------ average
 
 def make_average(block_capacity: int, width: int) -> WindowOperator:
+    from repro.kernels import segment_aggregate_batched
+
     def init_acc():
         return {"sum": jnp.zeros((), jnp.float32),
                 "count": jnp.zeros((), jnp.float32)}
@@ -61,7 +111,26 @@ def make_average(block_capacity: int, width: int) -> WindowOperator:
     def finalize(acc):
         return float(acc["sum"] / jnp.maximum(acc["count"], 1.0))
 
-    return WindowOperator("average", False, init_acc, fold, finalize)
+    @partial(jax.jit, static_argnames=("num_slots",))
+    def fold_batch(data, fills, slots, num_slots):
+        cap = data["values"].shape[1]
+        valid = _batch_valid(cap, jnp.asarray(fills))
+        # single segment per window: the composite id IS the slot
+        out = segment_aggregate_batched(
+            jnp.asarray(data["values"][:, :, :1], jnp.float32),
+            jnp.zeros((data["values"].shape[0], cap), jnp.int32), 1,
+            valid=valid, slot_ids=jnp.asarray(slots, jnp.int32),
+            num_slots=num_slots, stats=("sum", "count"))
+        return {"sum": out["sum"][:, 0, 0], "count": out["count"][:, 0]}
+
+    def finalize_batch(acc, num_slots):
+        s = np.asarray(acc["sum"])
+        c = np.asarray(acc["count"])
+        return [float(s[i] / max(c[i], 1.0)) for i in range(num_slots)]
+
+    return WindowOperator("average", False, init_acc, fold, finalize,
+                          fold_batch=fold_batch,
+                          finalize_batch=finalize_batch)
 
 
 # ------------------------------------------------------------------ bigrams
@@ -154,7 +223,23 @@ def make_stock(block_capacity: int, width: int,
             alerts = (mx - mn) / np.where(mn > 0, mn, np.inf) >= 0.05
         return {"mean": mean, "min": mn, "max": mx, "alerts": alerts}
 
-    return WindowOperator("stock", False, init_acc, fold, finalize)
+    from repro.kernels import segment_aggregate_batched
+
+    @partial(jax.jit, static_argnames=("num_slots",))
+    def fold_batch(data, fills, slots, num_slots):
+        cap = data["values"].shape[1]
+        valid = _batch_valid(cap, jnp.asarray(fills))
+        keys = jnp.asarray(data["keys"], jnp.int32) % num_keys
+        out = segment_aggregate_batched(
+            jnp.asarray(data["values"][:, :, :1], jnp.float32), keys,
+            num_keys, valid=valid, slot_ids=jnp.asarray(slots, jnp.int32),
+            num_slots=num_slots)
+        return {"min": out["min"][:, :, 0], "max": out["max"][:, :, 0],
+                "sum": out["sum"][:, :, 0], "count": out["count"]}
+
+    return WindowOperator("stock", False, init_acc, fold, finalize,
+                          fold_batch=fold_batch,
+                          finalize_batch=_per_slot_finalize(finalize))
 
 
 # ---------------------------------------------------------------------- lrb
@@ -195,7 +280,28 @@ def make_lrb(block_capacity: int, width: int,
         return {"count": count, "avg_speed": avg_speed,
                 "accident": accident, "toll": toll}
 
-    return WindowOperator("lrb", False, init_acc, fold, finalize)
+    from repro.kernels import segment_aggregate_batched
+
+    @partial(jax.jit, static_argnames=("num_slots",))
+    def fold_batch(data, fills, slots, num_slots):
+        cap = data["values"].shape[1]
+        valid = _batch_valid(cap, jnp.asarray(fills))
+        seg = jnp.asarray(data["keys"], jnp.int32) % num_segments
+        speed = jnp.asarray(data["values"][:, :, 0], jnp.float32)
+        stopped = (valid & (speed <= 1e-3)).astype(jnp.float32)
+        # width-2 payload: the segment-sum of [speed, stopped] yields both
+        # speed_sum and the stopped-vehicle count in one kernel pass
+        vals = jnp.stack([speed, stopped], axis=-1)
+        out = segment_aggregate_batched(
+            vals, seg, num_segments, valid=valid,
+            slot_ids=jnp.asarray(slots, jnp.int32), num_slots=num_slots,
+            stats=("sum", "count"))
+        return {"count": out["count"], "speed_sum": out["sum"][:, :, 0],
+                "stopped": out["sum"][:, :, 1]}
+
+    return WindowOperator("lrb", False, init_acc, fold, finalize,
+                          fold_batch=fold_batch,
+                          finalize_batch=_per_slot_finalize(finalize))
 
 
 # --------------------------------------------------------------- percentile

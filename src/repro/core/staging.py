@@ -75,6 +75,11 @@ class IOScheduler:
         }
         self._host_bytes = 0
         self._host_lru: List[Block] = []      # spill candidates, cold first
+        # guards _host_bytes/_host_lru: both the executor thread and the
+        # engine main thread (sync stage calls, demand host reads) account
+        # here. Ordering: block.lock may be held when taking _host_lock,
+        # never the reverse.
+        self._host_lock = threading.Lock()
         self._sim_lock = threading.Lock()     # one persistent-tier channel
         if sequential_io:
             self._thread = threading.Thread(target=self._run, daemon=True)
@@ -155,18 +160,34 @@ class IOScheduler:
             return False
         t0 = time.time()
         if block.tier == Tier.STORAGE:
-            block.as_event_batch()                    # load from file
-            self._host_bytes += block.nbytes
-        if block.host_data is None:
+            # load under the block lock: a concurrent purge unlinks the
+            # .npz and would otherwise strand the reservation we hold
+            with block.lock:
+                if block.dropped or block.storage_path is None:
+                    self.budget.release(block.nbytes)
+                    return False
+                block.as_event_batch()                # load from file
+                with self._host_lock:
+                    self._host_bytes += block.nbytes
+        host_data = block.host_data
+        if host_data is None:
             # block was purged (predictive cleanup) while this stage request
             # was queued — drop the reservation and skip
             self.budget.release(block.nbytes)
             return False
-        block.device_data = {
-            k: jax.device_put(v) for k, v in block.host_data.items()}
-        for v in block.device_data.values():
+        device_data = {
+            k: jax.device_put(v) for k, v in host_data.items()}
+        for v in device_data.values():
             v.block_until_ready()
-        block.tier = Tier.DEVICE
+        # commit under the block lock: if predictive cleanup dropped the
+        # block while the transfer was in flight, the reservation is ours
+        # to release (the purge only accounts blocks ALREADY on device)
+        with block.lock:
+            if block.dropped:
+                self.budget.release(block.nbytes)
+                return False
+            block.device_data = device_data
+            block.tier = Tier.DEVICE
         if block.persisted:       # reads from the persistent tier pay I/O;
             self._simulate_io(block.nbytes)   # fresh ingest is memory-direct
         self.stats["staged_blocks"] += 1
@@ -177,16 +198,19 @@ class IOScheduler:
     def destage_block_sync(self, block: Block) -> None:
         """m->p: move one block back to host (keeping the host copy is the
         'serialization' step; device buffers are dropped afterwards)."""
-        if block.tier != Tier.DEVICE:
-            return
         t0 = time.time()
-        if block.host_data is None and block.device_data is not None:
-            block.host_data = {
-                k: np.asarray(v) for k, v in block.device_data.items()}
-        block.device_data = None
-        block.tier = Tier.HOST
-        block.persisted = True
-        self._host_bytes += block.nbytes
+        with block.lock:
+            if block.tier != Tier.DEVICE or block.dropped:
+                # dropped: the purge already released the device bytes
+                return
+            if block.host_data is None and block.device_data is not None:
+                block.host_data = {
+                    k: np.asarray(v) for k, v in block.device_data.items()}
+            block.device_data = None
+            block.tier = Tier.HOST
+            block.persisted = True
+        with self._host_lock:
+            self._host_bytes += block.nbytes
         self.budget.release(block.nbytes)
         self._simulate_io(block.nbytes)
         self.stats["destaged_blocks"] += 1
@@ -201,22 +225,64 @@ class IOScheduler:
         coldest first)."""
         if self.host_budget_bytes is None or self.spill_dir is None:
             return
-        while self._host_bytes > self.host_budget_bytes and self._host_lru:
-            blk = self._host_lru.pop(0)
-            if blk.tier == Tier.HOST:
-                self.spill_block_sync(blk)
+        while True:
+            with self._host_lock:
+                if self._host_bytes <= self.host_budget_bytes \
+                        or not self._host_lru:
+                    return
+                blk = self._host_lru.pop(0)
+            self.spill_block_sync(blk)
 
     def track_host_block(self, block: Block) -> None:
         """Register a host-resident block as a spill candidate."""
         if self.spill_dir is not None:
-            self._host_lru.append(block)
+            with self._host_lock:
+                self._host_lru.append(block)
+
+    def fetch_block_host(self, block: Block
+                         ) -> Optional[Dict[str, np.ndarray]]:
+        """Demand host-side read of a block's full-capacity arrays for
+        folding. Returns None if the block was purged.
+
+        Execution paths that fold a p-bucket block host-side (the batched
+        gather; the per-window budget-full fallback) must come through
+        here rather than calling ``as_event_batch`` directly: STORAGE
+        loads are accounted against the host tier (otherwise the bytes
+        never count and the block can never spill again), and reads of
+        persisted blocks pay the simulated persistent-tier cost — the
+        same price the staging path charges, so simulated-I/O ablations
+        don't get free reads on one path. Deliberately no
+        ``_maybe_spill``: the caller is about to read ``host_data`` and
+        an immediate spill could snatch it back.
+        """
+        with block.lock:
+            if block.dropped:
+                return None
+            if block.host_data is None and block.storage_path is not None:
+                block.as_event_batch()
+                with self._host_lock:
+                    self._host_bytes += block.nbytes
+                    if self.spill_dir is not None:
+                        self._host_lru.append(block)
+            host_data = block.host_data
+        if host_data is not None and block.persisted:
+            self._simulate_io(block.nbytes)
+        return host_data
 
     def spill_block_sync(self, block: Block) -> None:
-        if block.tier == Tier.HOST and self.spill_dir is not None:
+        if self.spill_dir is None:
+            return
+        # spill under the block lock so a concurrent purge can't clear
+        # host_data mid-write or have its storage unlink undone by a
+        # spill that resurrects the .npz for a dead block
+        with block.lock:
+            if block.dropped or block.tier != Tier.HOST:
+                return
             nbytes = block.nbytes
             block.spill_to_storage(self.spill_dir)
+        with self._host_lock:
             self._host_bytes = max(self._host_bytes - nbytes, 0)
-            self._simulate_io(nbytes)
+        self._simulate_io(nbytes)
 
     # ------------------------------------------------------- bulk requests
     def request_stage(self, window: WindowState,

@@ -3,10 +3,11 @@ from repro.kernels.ops import (
     flash_attention,
     flash_attention_vjp,
     segment_aggregate,
+    segment_aggregate_batched,
     ssd_chunk_scan,
 )
 
 __all__ = [
     "decode_attention_paged", "flash_attention", "flash_attention_vjp",
-    "segment_aggregate", "ssd_chunk_scan",
+    "segment_aggregate", "segment_aggregate_batched", "ssd_chunk_scan",
 ]

@@ -18,7 +18,10 @@ from repro.kernels import ref as _ref
 from repro.kernels.decode_attention import decode_attention_paged_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention_bwd import flash_attention_bwd_pallas
-from repro.kernels.segment_aggregate import segment_aggregate_pallas
+from repro.kernels.segment_aggregate import (
+    segment_aggregate_batched_dense, segment_aggregate_batched_pallas,
+    segment_aggregate_pallas,
+)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 
@@ -40,6 +43,45 @@ def segment_aggregate(values, segment_ids, num_segments: int, valid=None,
     return segment_aggregate_pallas(values, segment_ids, num_segments,
                                     valid=valid, block_n=block_n,
                                     interpret=(be == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "num_slots",
+                                             "backend", "block_n",
+                                             "stats"))
+def segment_aggregate_batched(values, segment_ids, num_segments: int,
+                              valid=None, slot_ids=None,
+                              num_slots: Optional[int] = None,
+                              backend: str = "auto", block_n: int = 512,
+                              stats: tuple = ("sum", "count", "min",
+                                              "max")):
+    """Batched multi-window reduce-by-key: values [B, N, W], ids [B, N],
+    slot_ids [B] -> aggregates [num_slots, num_segments, ...] in one pass.
+
+    The engine's batched execution path folds every due window through a
+    single launch of this op. ``backend='auto'`` resolves to Mosaic on
+    TPU and the dense one-hot jnp formulation elsewhere (identical math;
+    XLA:CPU scatters and the Pallas interpreter are both validation-only
+    speeds). ``stats`` selects which aggregates to materialize — folds
+    that only need sum/count skip the min/max work.
+    """
+    if backend == "auto":
+        be = "pallas" if jax.devices()[0].platform == "tpu" else "dense"
+    else:
+        be = backend
+    if be == "dense":
+        return segment_aggregate_batched_dense(
+            values, segment_ids, num_segments, valid=valid,
+            slot_ids=slot_ids, num_slots=num_slots, stats=stats)
+    if be == "ref":
+        out = _ref.ref_segment_aggregate_batched(
+            values, segment_ids, num_segments, valid=valid,
+            slot_ids=slot_ids, num_slots=num_slots)
+    else:
+        out = segment_aggregate_batched_pallas(
+            values, segment_ids, num_segments, valid=valid,
+            slot_ids=slot_ids, num_slots=num_slots, block_n=block_n,
+            interpret=(be == "interpret"))
+    return {k: v for k, v in out.items() if k in stats}
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "backend",

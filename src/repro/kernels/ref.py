@@ -34,6 +34,41 @@ def ref_segment_aggregate(values: jnp.ndarray, segment_ids: jnp.ndarray,
     return {"sum": vsum, "count": cnt, "min": vmin, "max": vmax}
 
 
+def ref_segment_aggregate_batched(values: jnp.ndarray,
+                                  segment_ids: jnp.ndarray,
+                                  num_segments: int,
+                                  valid: Optional[jnp.ndarray] = None,
+                                  slot_ids: Optional[jnp.ndarray] = None,
+                                  num_slots: Optional[int] = None) -> dict:
+    """values [B, N, W]; segment_ids [B, N]; slot_ids [B] -> per-slot
+    sum/count/min/max of shape [num_slots, num_segments, ...].
+
+    Oracle for the batched multi-window kernel: composite (slot, key)
+    segment ids reduced in one pass.
+    """
+    b, n, w = values.shape
+    if valid is None:
+        valid = jnp.ones((b, n), bool)
+    if slot_ids is None:
+        slot_ids = jnp.arange(b, dtype=jnp.int32)
+        if num_slots is None:
+            num_slots = b
+    elif num_slots is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    composite = (slot_ids.astype(jnp.int32)[:, None] * num_segments
+                 + segment_ids.astype(jnp.int32))
+    out = ref_segment_aggregate(values.reshape(b * n, w),
+                                composite.reshape(b * n),
+                                num_slots * num_segments,
+                                valid=valid.reshape(b * n))
+    return {
+        "sum": out["sum"].reshape(num_slots, num_segments, w),
+        "count": out["count"].reshape(num_slots, num_segments),
+        "min": out["min"].reshape(num_slots, num_segments, w),
+        "max": out["max"].reshape(num_slots, num_segments, w),
+    }
+
+
 def ref_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True, window: int = 0) -> jnp.ndarray:
     """q [B, Sq, H, D]; k, v [B, Sk, Hkv, D] -> [B, Sq, H, D].

@@ -11,6 +11,12 @@ Tiling: grid over event tiles of ``block_n`` rows; each step loads a
 one-hot in registers, and accumulates [S, W] / [S] outputs that stay
 resident in VMEM across the whole grid (output BlockSpecs map every step
 to the same block).
+
+The **batched** entry point (``segment_aggregate_batched_pallas``) extends
+this to many concurrent windows in one device pass: event rows carry a
+2-D segment layout ``(window_slot, key)`` which is flattened into the
+segment axis (``sid = slot * S + key``) so a single kernel launch reduces
+every due window at once — the engine's multi-window execution path.
 """
 from __future__ import annotations
 
@@ -101,3 +107,103 @@ def segment_aggregate_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
         interpret=interpret,
     )(segment_ids.astype(jnp.int32), valid, values.astype(jnp.float32))
     return {"sum": s, "count": c, "min": mn, "max": mx}
+
+
+def segment_aggregate_batched_pallas(values: jnp.ndarray,
+                                     segment_ids: jnp.ndarray,
+                                     num_segments: int,
+                                     valid: Optional[jnp.ndarray] = None,
+                                     slot_ids: Optional[jnp.ndarray] = None,
+                                     num_slots: Optional[int] = None,
+                                     block_n: int = 512,
+                                     interpret: bool = True):
+    """Multi-window segment aggregation in ONE kernel launch.
+
+    values [B, N, W] f32, segment_ids [B, N] i32 -> per-slot aggregates
+    {sum [num_slots, S, W], count [num_slots, S], min, max}.
+
+    Each of the B rows is a padded event block (``valid`` masks ragged
+    fills); ``slot_ids [B]`` maps rows to output window slots, so several
+    blocks of the same window may share a slot (default: ``arange(B)``,
+    one row per slot). The 2-D segment layout ``(slot, key)`` is flattened
+    into the segment axis — ``sid = slot * num_segments + key`` — and fed
+    through the same one-hot-matmul grid as the single-window kernel.
+    """
+    b, n, w = values.shape
+    if valid is None:
+        valid = jnp.ones((b, n), jnp.int32)
+    if slot_ids is None:
+        slot_ids = jnp.arange(b, dtype=jnp.int32)
+        if num_slots is None:
+            num_slots = b
+    elif num_slots is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    composite = (slot_ids.astype(jnp.int32)[:, None] * num_segments
+                 + segment_ids.astype(jnp.int32))        # [B, N]
+    out = segment_aggregate_pallas(
+        values.reshape(b * n, w), composite.reshape(b * n),
+        num_slots * num_segments, valid=valid.reshape(b * n),
+        block_n=block_n, interpret=interpret)
+    return {
+        "sum": out["sum"].reshape(num_slots, num_segments, w),
+        "count": out["count"].reshape(num_slots, num_segments),
+        "min": out["min"].reshape(num_slots, num_segments, w),
+        "max": out["max"].reshape(num_slots, num_segments, w),
+    }
+
+
+def segment_aggregate_batched_dense(values: jnp.ndarray,
+                                    segment_ids: jnp.ndarray,
+                                    num_segments: int,
+                                    valid: Optional[jnp.ndarray] = None,
+                                    slot_ids: Optional[jnp.ndarray] = None,
+                                    num_slots: Optional[int] = None,
+                                    stats: Tuple[str, ...] = (
+                                        "sum", "count", "min", "max")):
+    """The kernel's one-hot formulation as plain jnp — the non-TPU hot
+    path for the batched engine fold.
+
+    Same contract as ``segment_aggregate_batched_pallas``. XLA:CPU lowers
+    ``jax.ops.segment_*`` to serial scatters, which is orders slower than
+    the one-hot matmul this uses (identical math to the Mosaic kernel);
+    ``stats`` lets callers skip the min/max broadcast-reduce temps when
+    only sum/count are needed (the average and LRB folds).
+    """
+    b, n, w = values.shape
+    if valid is None:
+        valid = jnp.ones((b, n), bool)
+    if slot_ids is None:
+        slot_ids = jnp.arange(b, dtype=jnp.int32)
+        if num_slots is None:
+            num_slots = b
+    elif num_slots is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    s_total = num_slots * num_segments
+    composite = (slot_ids.astype(jnp.int32)[:, None] * num_segments
+                 + segment_ids.astype(jnp.int32)).reshape(b * n)
+    flat_valid = valid.reshape(b * n).astype(bool)
+    flat_vals = values.reshape(b * n, w).astype(jnp.float32)
+    onehot = (composite[:, None] ==
+              jnp.arange(s_total, dtype=jnp.int32)[None, :]) \
+        & flat_valid[:, None]                               # [B*N, S]
+    oh_f = onehot.astype(jnp.float32)
+    out = {}
+    if "sum" in stats:
+        out["sum"] = jax.lax.dot_general(
+            oh_f, jnp.where(flat_valid[:, None], flat_vals, 0.0),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ).reshape(num_slots, num_segments, w)
+    if "count" in stats:
+        out["count"] = jnp.sum(oh_f, axis=0).reshape(num_slots,
+                                                     num_segments)
+    if "min" in stats:
+        big = jnp.where(onehot[:, :, None], flat_vals[:, None, :], jnp.inf)
+        out["min"] = jnp.min(big, axis=0).reshape(num_slots, num_segments,
+                                                  w)
+    if "max" in stats:
+        small = jnp.where(onehot[:, :, None], flat_vals[:, None, :],
+                          -jnp.inf)
+        out["max"] = jnp.max(small, axis=0).reshape(num_slots,
+                                                    num_segments, w)
+    return out

@@ -119,6 +119,7 @@ def test_drop_removes_storage_file(tmp_path):
     blk = st.blocks[0]
     io.spill_block_sync(blk)
     path = blk.storage_path
-    freed = st.drop_all()
+    freed, device_bytes = st.drop_all()
     assert freed > 0 and not path.exists()
+    assert device_bytes == 0          # block was in storage, not on device
     io.shutdown()

@@ -176,6 +176,127 @@ def test_engine_checkpoint_restore_roundtrip():
     eng2.close()
 
 
+def test_checkpoint_restore_full_roundtrip_with_late_events():
+    """Round-trip checkpoint_state() -> restore_state(): watermark,
+    lateness histogram, per-window event counts (total AND late), block
+    boundaries, and re-executed results must all survive."""
+    eng = _engine(trigger=DeltaTTrigger(executions=2))
+    on_time = _uniform_batch(300, 0, 20, seed=61)
+    eng.ingest(on_time, now=0.0)
+    eng.advance_watermark(20.0, 20.0)                   # two live windows
+    late = _uniform_batch(120, 0, 10, seed=62)
+    eng.ingest(late, now=22.0)                          # late into [0,10)
+    for t in np.linspace(22, 22 + 2 * eng.cleanup.current_bound(), 20):
+        eng.poll(t)
+    eng.io.drain()
+    snap = eng.checkpoint_state()
+    from repro.core.windows import WindowId
+    wids = sorted(eng.windows)
+    want_results = {w: eng.results[w] for w in wids}
+    want_counts = {w: (eng.windows[w].total_events,
+                       eng.windows[w].late_events) for w in wids}
+    want_fills = {w: [b.fill for b in eng.windows[w].blocks] for w in wids}
+    want_hist = (np.asarray(eng.cleanup.hist.counts).copy(),
+                 eng.cleanup.hist.total)
+    eng.close()
+
+    eng2 = _engine(trigger=DeltaTTrigger(executions=2))
+    eng2.restore_state(snap)
+    assert eng2.tracker.watermark == 20.0
+    np.testing.assert_allclose(np.asarray(eng2.cleanup.hist.counts),
+                               want_hist[0])
+    assert eng2.cleanup.hist.total == want_hist[1]
+    for w in wids:
+        st = eng2.windows[w]
+        assert (st.total_events, st.late_events) == want_counts[w]
+        # block boundaries survive 1:1 (restore must not re-pack events)
+        assert [b.fill for b in st.blocks] == want_fills[w]
+        got = eng2.execute_window(w, now=23.0, late=True)
+        assert got == pytest.approx(want_results[w], rel=1e-5, abs=1e-6)
+    eng2.close()
+
+
+def test_checkpoint_captures_spilled_blocks(tmp_path):
+    """Blocks that live in the storage tier at checkpoint time must not
+    serialize as empty."""
+    aion = AionConfig(block_size=128)
+    op = make_operator("average", aion.block_size, 4)
+    eng = StreamEngine(
+        assigner=TumblingWindows(10.0), operator=op, aion=aion,
+        value_width=4, device_budget_bytes=2 << 20,
+        spill_dir=tmp_path, host_budget_bytes=64 << 10,
+        trigger=DeltaTTrigger(executions=1),
+    )
+    b = _uniform_batch(3000, 0, 10, seed=71)
+    eng.ingest(b, now=0.0)
+    eng.advance_watermark(10.0, 10.0)
+    eng.io.drain()
+    from repro.core.buckets import Tier
+    tiers = [blk.tier for st in eng.windows.values() for blk in st.blocks]
+    assert any(t == Tier.STORAGE for t in tiers)
+    snap = eng.checkpoint_state()
+    want = eng.results[list(eng.windows)[0]]
+    eng.close()
+    total = sum(len(blk["data"].get("keys", []))
+                for w in snap["windows"] for blk in w["blocks"])
+    assert total >= 3000 // 128 * 128     # every full block captured
+    eng2 = _engine()
+    eng2.restore_state(snap)
+    from repro.core.windows import WindowId
+    got = eng2.execute_window(WindowId(0.0, 10.0), now=11.0, late=True)
+    assert got == pytest.approx(want, rel=1e-5, abs=1e-6)
+    eng2.close()
+
+
+def test_purge_releases_device_budget():
+    """Predictive cleanup of a window with device-resident blocks must
+    return their bytes to the budget (regression: drop_all used to clear
+    the block list before the release loop could see the m-blocks)."""
+    eng = _engine()
+    eng.cleanup.min_history = 10
+    eng.cleanup.coverage = 0.9
+    eng.ingest(_uniform_batch(500, 0, 10, seed=91), now=0.0)
+    eng.io.drain()
+    assert eng.budget.used_bytes > 0
+    from repro.core.windows import WindowId
+    eng.windows[WindowId(0.0, 10.0)].expired = True
+    eng.cleanup.observe(np.random.default_rng(0).uniform(0.1, 1.0, 5000))
+    eng.advance_watermark(1000.0, now=1000.0)   # way past the purge bound
+    eng.poll(now=1000.0)
+    assert eng.metrics.purged_windows == 1
+    assert eng.budget.used_bytes == 0
+    eng.close()
+
+
+def test_block_partition_covers_each_block_once():
+    """Regression for the execute-window snapshot: the (m, p) partition
+    must cover every block exactly once — no block folded twice, none
+    skipped — including when tiers are mixed."""
+    from repro.core.buckets import Tier
+    eng = _engine(budget=1 << 30)
+    eng.ingest(_uniform_batch(1000, 0, 10, seed=81), now=0.0)
+    from repro.core.windows import WindowId
+    state = eng.windows[WindowId(0.0, 10.0)]
+    assert len(state.blocks) >= 4
+    # force a mixed-tier layout: destage half the device blocks
+    for blk in state.m_blocks()[::2]:
+        eng.io.destage_block_sync(blk)
+    from repro.core.batch_exec import snapshot_block_partition
+    m_snapshot, p_blocks = snapshot_block_partition(state)
+    ids = [id(x) for x in m_snapshot] + [id(x) for x in p_blocks]
+    assert sorted(ids) == sorted(id(x) for x in state.blocks)
+    assert len(set(ids)) == len(state.blocks)
+    assert all(b.tier == Tier.DEVICE for b in m_snapshot)
+    # result over the partition equals the plain mean (nothing double-
+    # counted, nothing dropped)
+    got = eng.execute_window(WindowId(0.0, 10.0), now=1.0, late=False)
+    vals = np.concatenate([blk.as_event_batch().values[:, 0]
+                           for blk in state.blocks]) \
+        if state.blocks else np.zeros(1)
+    assert got == pytest.approx(float(np.mean(vals)), rel=1e-4, abs=1e-5)
+    eng.close()
+
+
 def test_host_budget_spills_to_storage(tmp_path):
     """Third tier: past-window state beyond the host budget lands in
     storage files and restages losslessly at re-execution."""

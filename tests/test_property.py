@@ -1,6 +1,11 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt); the rest of tier-1 runs without it")
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import AionConfig
