@@ -1,10 +1,22 @@
-# Tier-1 verification: the exact ROADMAP.md command, verbatim. Keep in
-# sync with ROADMAP.md "Tier-1 verify".
+# Tier-1 verification: the exact ROADMAP.md command, verbatim, followed
+# by the multi-device suites on 8 simulated CPU devices. Keep the first
+# recipe line in sync with ROADMAP.md "Tier-1 verify".
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+	$(MAKE) verify-multidevice
+
+# Slot-sharding + differential-soak suites under a forced 8-device host
+# platform (XLA splits the CPU into 8 simulated devices; the slot-sharded
+# batched fold really runs under shard_map). These same files also run —
+# single-device fallbacks only — inside plain `pytest` above.
+verify-multidevice:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8$${XLA_FLAGS:+ $$XLA_FLAGS}" \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
+		tests/test_slot_sharding.py tests/test_soak_differential.py \
+		tests/test_kernels.py tests/test_property.py tests/test_batch_exec.py
 
 # Benchmark entry point (CSV rows, one per paper table/figure).
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py
 
-.PHONY: verify bench
+.PHONY: verify verify-multidevice bench

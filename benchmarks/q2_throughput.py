@@ -3,7 +3,12 @@ in-memory baseline when everything fits in memory.
 
 Also benchmarks the batched multi-window execution path
 (``fold_benchmark``): with many concurrent due windows, folding them in
-one device pass vs one ``execute_window`` per window."""
+one device pass vs one ``execute_window`` per window — and, with
+``--devices N``, the slot-sharded multi-device fold vs the single-device
+batched fold on N simulated CPU devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``, which must be
+set before jax imports: repro imports here are function-local so the
+``__main__`` argparse can set it first)."""
 from __future__ import annotations
 
 import time
@@ -11,21 +16,16 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.configs.base import AionConfig
-from repro.configs.workloads import WORKLOADS
-from repro.core import (
-    EngineOOM, InMemoryPolicy, StreamEngine, TumblingWindows,
-)
-from repro.core.events import EventBatch
-from repro.core.operators import make_operator
-from repro.core.triggers import DeltaTTrigger
-from repro.data.generators import make_generator
-
 EVENTS_PER_WM = 1500
 N_WATERMARKS = 8
 
 
 def run_one(workload, baseline: bool, include_late: bool) -> Dict:
+    from repro.configs.base import AionConfig
+    from repro.core import InMemoryPolicy, StreamEngine, TumblingWindows
+    from repro.core.operators import make_operator
+    from repro.core.triggers import DeltaTTrigger
+    from repro.data.generators import make_generator
     gen = make_generator(workload, seed=3)
     aion = AionConfig(block_size=1024)
     kw = {}
@@ -77,17 +77,42 @@ def run_one(workload, baseline: bool, include_late: bool) -> Dict:
 
 
 def fold_benchmark(num_windows: int = 8, events_per_window: int = 2000,
-                   repeats: int = 5) -> Dict:
+                   repeats: int = 5,
+                   modes: tuple = (("batched", True, False),
+                                   ("per_window", False, False)),
+                   op_name: str = "average",
+                   num_keys: int = 256) -> Dict:
     """Fold throughput with ``num_windows`` concurrent due windows:
-    batched single-pass execution vs the per-window reference path on the
-    ``average`` workload. Reports events folded per second of execution
-    wall time, batch occupancy, and device time per window execution."""
+    batched single-pass execution vs the per-window reference path.
+    Reports events folded per second of execution wall time, batch
+    occupancy, and device time per window execution.
+
+    ``modes`` rows are ``(label, batched_execution, slot_sharding)`` —
+    the ``--devices N`` sweep adds a slot-sharded mode that partitions
+    the batch's window slots across the simulated device mesh. The fold
+    cost of the keyed operators (``stock``/``lrb``) scales with
+    ``num_slots * num_keys`` (the one-hot segment axis), which is the
+    regime slot sharding targets: each device reduces a D-times smaller
+    row block onto a D-times narrower slot range.
+    """
+    from repro.configs.base import AionConfig
+    from repro.core import StreamEngine, TumblingWindows
+    from repro.core.events import EventBatch
+    from repro.core.operators import make_operator
+    from repro.core.triggers import DeltaTTrigger
+
     wd = 10.0
     horizon = num_windows * wd
     out: Dict[str, Dict] = {}
-    for batched in (True, False):
-        aion = AionConfig(block_size=1024, batched_execution=batched)
-        op = make_operator("average", aion.block_size, 1)
+    op_kw = {}
+    if op_name == "stock":
+        op_kw = {"num_keys": num_keys}
+    elif op_name == "lrb":
+        op_kw = {"num_segments": num_keys}
+    for label, batched, sharded in modes:
+        aion = AionConfig(block_size=1024, batched_execution=batched,
+                          slot_sharding=sharded)
+        op = make_operator(op_name, aion.block_size, 1, **op_kw)
         eng = StreamEngine(
             assigner=TumblingWindows(wd), operator=op, aion=aion,
             value_width=1, device_budget_bytes=512 << 20,
@@ -117,6 +142,7 @@ def fold_benchmark(num_windows: int = 8, events_per_window: int = 2000,
         m.live_executions = 0
         m.batch_executions = 0
         m.batched_windows = 0
+        m.sharded_batch_executions = 0
         m.batch_device_seconds = 0.0
         m.batch_occupancy_series.clear()
         times = []
@@ -127,23 +153,56 @@ def fold_benchmark(num_windows: int = 8, events_per_window: int = 2000,
             eng.advance_watermark((r + 1) * horizon, now=(r + 1) * horizon)
             times.append(time.time() - t0)
         eng.io.drain()
-        out["batched" if batched else "per_window"] = {
+        out[label] = {
             "fold_events_per_sec": n * repeats / sum(times),
             "exec_wall_s": round(sum(times), 4),
             "windows_executed": m.live_executions,
             "batch_occupancy": round(m.mean_batch_occupancy, 2),
             "device_s_per_exec": round(m.device_seconds_per_execution, 6),
+            "sharded_passes": m.sharded_batch_executions,
         }
         eng.close()
-    out["speedup"] = round(
-        out["batched"]["fold_events_per_sec"]
-        / max(out["per_window"]["fold_events_per_sec"], 1e-9), 2)
+    if "batched" in out and "per_window" in out:
+        out["speedup"] = round(
+            out["batched"]["fold_events_per_sec"]
+            / max(out["per_window"]["fold_events_per_sec"], 1e-9), 2)
     out["num_windows"] = num_windows
+    return out
+
+
+def devices_sweep(num_windows: int = 16, events_per_window: int = 2000,
+                  repeats: int = 5, op_name: str = "lrb",
+                  num_keys: int = 64) -> Dict:
+    """Slot-sharded multi-device fold vs BOTH single-device paths on the
+    same workload. Run via ``--devices N`` (the flag forces N simulated
+    CPU devices before jax initializes). The acceptance bar: sharded fold
+    throughput no worse than single-device. Defaults to the keyed ``lrb``
+    workload — the segment-axis-heavy regime the sharding targets: the
+    dense one-hot fold costs O(rows * num_slots * num_keys), and each
+    device reduces a D-times smaller row block onto a D-times narrower
+    slot range (a slot's one-hot columns live on exactly one device), so
+    per-device work drops ~D^2 (8 devices, CPU container: ~10x vs the
+    unsharded batched fold, and above the per-window path too)."""
+    import jax
+    out = fold_benchmark(
+        num_windows=num_windows, events_per_window=events_per_window,
+        repeats=repeats,
+        modes=(("batched", True, False), ("sharded", True, True),
+               ("per_window", False, False)),
+        op_name=op_name, num_keys=num_keys)
+    out["num_devices"] = len(jax.devices())
+    out["workload"] = op_name
+    sharded = out["sharded"]["fold_events_per_sec"]
+    out["sharded_vs_single_device"] = round(
+        sharded / max(out["batched"]["fold_events_per_sec"], 1e-9), 2)
+    out["sharded_vs_per_window"] = round(
+        sharded / max(out["per_window"]["fold_events_per_sec"], 1e-9), 2)
     return out
 
 
 def run(workload_names=("average", "bigrams", "stock_market", "lrb")
         ) -> List[Dict]:
+    from repro.configs.workloads import WORKLOADS
     rows = []
     for name in workload_names:
         for include_late in (False, True):
@@ -153,6 +212,24 @@ def run(workload_names=("average", "bigrams", "stock_market", "lrb")
 
 
 if __name__ == "__main__":
-    for r in run():
-        print(r)
-    print(fold_benchmark())
+    import argparse
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=0, metavar="N",
+                    help="simulate N CPU devices and benchmark the "
+                         "slot-sharded fold against single-device "
+                         "(sets XLA_FLAGS before jax loads)")
+    ap.add_argument("--windows", type=int, default=16,
+                    help="concurrent due windows for the devices sweep")
+    args = ap.parse_args()
+    if args.devices > 1:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.devices}").strip()
+        print(devices_sweep(num_windows=args.windows))
+    else:
+        for r in run():
+            print(r)
+        print(fold_benchmark())

@@ -244,6 +244,29 @@ class AionConfig:
     # operator implements the batch contract; the per-window path remains
     # the reference and the fallback
     batched_execution: bool = True
+    # slot-sharded multi-device batched fold: partition window slots of a
+    # batch across a 1-D mesh of local devices (shard_map over the
+    # composite (window_slot, key) segment axis, psum-free — slots are
+    # disjoint). The executor round-robins due windows onto device-local
+    # slot ranges and pads each shard to a common power-of-two row count.
+    # Safe no-op on single-device hosts (falls back to the unsharded
+    # batched path); requires batched_execution and a batch-contract
+    # operator to take effect.
+    slot_sharding: bool = False
+    # how many local devices the slot mesh spans; 0 = every local device
+    # (clamped to the number actually present)
+    slot_shard_devices: int = 0
+    # mesh axis name for the slot shard (only needs changing if an outer
+    # mesh already uses 'slots')
+    slot_shard_axis: str = "slots"
+    # device-side row stacking for the batched gather: m-bucket rows that
+    # are already device-resident are stacked with a device concat
+    # (jnp.stack) instead of being pulled back to the host — the sharded
+    # path never round-trips hot blocks through host memory. Cold
+    # p-blocks still arrive via IOScheduler.fetch_block_host (accounted,
+    # simulated-cost-charged). False restores the PR-1 host-side
+    # np.stack + single contiguous device_put.
+    device_stacking: bool = True
 
 
 def to_json(cfg: Any) -> str:

@@ -18,31 +18,43 @@ granularity. A batch stacks the windows' fixed-capacity blocks into
 windows; a slot vector maps rows back to windows) and folds everything in
 a single call of the operator's ``fold_batch`` — which reduces over
 composite ``(window_slot, key)`` segment ids through the batched
-segment-aggregate Pallas kernel. Re-execution stays a pure function of
-bucket contents, so folding N windows in one pass is bitwise-equivalent
-to N independent folds up to float associativity (parity-tested in
-``tests/test_batch_exec.py``).
+segment-aggregate kernel. Re-execution stays a pure function of bucket
+contents, so folding N windows in one pass is bitwise-equivalent to N
+independent folds up to float associativity (parity-tested in
+``tests/test_batch_exec.py`` and ``tests/test_slot_sharding.py``).
 
-Unlike the per-window path — which demand-stages p-blocks to the device
-and folds them in place — the batched fold consumes one host-side stack
-(a single contiguous transfer into the jitted fold), so the gather reads
-p-blocks host-side through ``IOScheduler.fetch_block_host`` (accounted,
-and persisted reads pay the simulated persistent-tier cost) and pulls
-already-resident m-blocks back without issuing new staging. Device-side
-gathering of m-bucket rows plus demand staging for a device-side stack
-is the TPU follow-up tracked in ROADMAP.md.
+Row gathering prefers device residency: m-bucket rows that already live
+on the device are stacked with a **device concat** (``jnp.stack`` of the
+resident arrays — no host round-trip); cold p-blocks are read host-side
+through ``IOScheduler.fetch_block_host`` (accounted, and persisted reads
+pay the simulated persistent-tier cost). ``AionConfig.device_stacking``
+= False restores the PR-1 host-side ``np.stack`` + one contiguous
+``device_put``.
+
+Multi-device slot sharding (``AionConfig.slot_sharding``): the placement
+step round-robins due windows onto device-local slot ranges — window i of
+a batch goes to device ``i % D`` at local slot ``i // D`` — then packs
+each device's block rows contiguously (shard-major) and pads every shard
+to a common power-of-two row count. The fold runs under a ``shard_map``
+over the slot axis; slots are disjoint, so the per-slot result gather is
+a pure concatenation with no cross-device reduction (psum-free). On a
+single-device host the placement degenerates to the unsharded layout.
 """
 from __future__ import annotations
 
 import time as _time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.buckets import Block, WindowState
+from repro.core.buckets import WindowState
 from repro.core.windows import WindowId
+from repro.kernels.segment_aggregate import (
+    next_pow2, pack_rows_shard_major,
+)
 
 
 @dataclass
@@ -51,25 +63,6 @@ class BatchWorkItem:
     wid: WindowId
     state: WindowState
     late: bool
-
-
-def _block_arrays(blk: Block, io) -> Optional[Dict[str, Any]]:
-    """Full-capacity SoA arrays for one block, wherever it lives.
-
-    Prefers the device-resident copy (no transfer needed to read it back
-    on CPU; one is queued anyway by the host stack); otherwise a demand
-    host read through the I/O layer (accounted + simulated-cost-charged).
-    Returns None only if the block was purged while the batch was being
-    gathered.
-    """
-    dd = blk.device_data
-    if dd is not None:
-        return dd
-    return io.fetch_block_host(blk)
-
-
-def _next_pow2(n: int) -> int:
-    return 1 << max(n - 1, 0).bit_length()
 
 
 def snapshot_block_partition(state: WindowState):
@@ -86,11 +79,62 @@ def snapshot_block_partition(state: WindowState):
     return m_snapshot, p_blocks
 
 
+def plan_slot_placement(num_windows: int, num_devices: int
+                        ) -> Tuple[List[int], int, int]:
+    """Round-robin due windows onto device-local slot ranges.
+
+    Device ``d`` owns the contiguous global slot range
+    ``[d*slots_per, (d+1)*slots_per)``; window ``i`` of the batch lands on
+    device ``i % num_devices`` at local slot ``i // num_devices``.
+    ``slots_per`` is padded to a power of two so the jitted fold sees
+    O(log) distinct shapes. Returns ``(slot_of_window, num_slots,
+    slots_per)``; ``num_devices <= 1`` degenerates to the unsharded
+    identity placement.
+    """
+    if num_devices <= 1:
+        ns = next_pow2(num_windows)
+        return list(range(num_windows)), ns, ns
+    slots_per = next_pow2(-(-num_windows // num_devices))
+    slot_of = [(i % num_devices) * slots_per + i // num_devices
+               for i in range(num_windows)]
+    return slot_of, num_devices * slots_per, slots_per
+
+
 class BatchExecutor:
     """Executes a set of due windows in one vectorized device pass."""
 
     def __init__(self, engine):
         self.engine = engine
+        self._mesh = None
+        self._mesh_resolved = False
+
+    # ---------------------------------------------------------- slot mesh
+    def _slot_mesh(self):
+        """The 1-D slot mesh, or None (sharding off / single device)."""
+        if self._mesh_resolved:
+            return self._mesh
+        self._mesh_resolved = True
+        aion = self.engine.aion
+        if getattr(aion, "slot_sharding", False):
+            from repro.distributed.sharding import make_slot_mesh
+            self._mesh = make_slot_mesh(aion.slot_shard_devices,
+                                        aion.slot_shard_axis)
+        return self._mesh
+
+    @staticmethod
+    def _stack(rows: List[Any], device: bool, dtype) -> Any:
+        """Stack per-block rows into one [rows, ...] tensor.
+
+        ``device=True``: a device concat — already-resident jax rows are
+        consumed in place and host rows are transferred individually, so
+        hot m-bucket blocks never round-trip through the host.
+        ``device=False``: the PR-1 host stack (one contiguous device_put
+        inside the jitted fold).
+        """
+        if device:
+            return jnp.stack([r if isinstance(r, jax.Array)
+                              else jnp.asarray(r) for r in rows])
+        return np.stack([np.asarray(r, dtype) for r in rows])
 
     # ------------------------------------------------------------ execute
     def execute(self, items: List[BatchWorkItem], now: float
@@ -99,7 +143,8 @@ class BatchExecutor:
 
         Falls back to the per-window reference path when the operator has
         no batch contract or the batch is trivial (a single window gains
-        nothing from stacking).
+        nothing from stacking). An empty item list is a no-op — no
+        degenerate [0, ...] tensors, no metrics.
         """
         eng = self.engine
         op = eng.operator
@@ -111,65 +156,87 @@ class BatchExecutor:
 
         t0 = _time.time()
 
-        # 1. snapshot every window (m-blocks read back in place, p-blocks
-        #    read host-side — the fold consumes one host stack, so no
-        #    demand staging is issued)
+        # 1. snapshot every window (m-blocks consumed in place, p-blocks
+        #    read host-side — no demand staging is issued)
         plans = [(it, sum(snapshot_block_partition(it.state), []))
                  for it in items]
 
-        # 2. stack block rows: [rows, capacity, W] + fills + slot map
-        keys_rows, ts_rows, val_rows, fills, slots = [], [], [], [], []
-        for slot, (it, blocks) in enumerate(plans):
+        # 2. placement: window -> global slot. Unsharded: slot i = i.
+        #    Sharded: round-robin onto device-local slot ranges so every
+        #    device owns a disjoint contiguous range (psum-free gather).
+        mesh = self._slot_mesh()
+        num_devices = mesh.size if mesh is not None else 1
+        slot_of, num_slots, slots_per = plan_slot_placement(
+            len(plans), num_devices)
+
+        # 3. gather block rows: (arrays, fill, slot) in plan order
+        rows: List[Tuple[Dict[str, Any], int, int]] = []
+        for i, (it, blocks) in enumerate(plans):
             for blk in blocks:
                 if blk.fill == 0:
                     continue
-                arrs = _block_arrays(blk, eng.io)
+                arrs = eng.io.fetch_block_arrays(blk)
                 if arrs is None:         # purged mid-gather
                     continue
-                keys_rows.append(arrs["keys"])
-                ts_rows.append(arrs["timestamps"])
-                val_rows.append(arrs["values"])
-                fills.append(blk.fill)
-                slots.append(slot)
+                rows.append((arrs, blk.fill, slot_of[i]))
 
-        # 3. one device pass over every due window. Rows are stacked
-        #    host-side (np.stack of a device row is a pull-back; cheap on
-        #    CPU, and one contiguous device_put beats a per-row dispatch
-        #    chain — device-side stacking for TPU is a ROADMAP open item).
-        #    Row and slot counts are padded to powers of two so the jitted
-        #    fold sees O(log) distinct shapes instead of recompiling every
-        #    time a window gains a block; padding rows have fill 0 and
-        #    contribute nothing.
-        num_slots = len(plans)
         dev_t0 = _time.time()
-        if fills:
-            pad_rows = _next_pow2(len(fills)) - len(fills)
-            if pad_rows:
-                cap = keys_rows[0].shape[0]
-                w = val_rows[0].shape[-1]
-                keys_rows.extend([np.zeros((cap,), np.int32)] * pad_rows)
-                ts_rows.extend([np.zeros((cap,), np.float64)] * pad_rows)
-                val_rows.extend(
-                    [np.zeros((cap, w), np.float32)] * pad_rows)
-                fills.extend([0] * pad_rows)
-                slots.extend([0] * pad_rows)
+        ran_sharded = False
+        if rows:
+            # 4. shard-major stack via the same packing helper the parity
+            #    tests drive: rows group by owning shard and every shard
+            #    pads to a common power-of-two row count (invalid rows:
+            #    fill 0, slot = shard's base slot) so row counts divide
+            #    the mesh and the jitted fold sees O(log) distinct
+            #    shapes. num_devices == 1 degenerates to the PR-1 layout
+            #    (one group, rows padded to pow2).
+            cap = eng.aion.block_size
+            w = eng.value_width
+            per_shard, rows_per_shard = pack_rows_shard_major(
+                [slot for _, _, slot in rows], num_devices, slots_per)
+            pad_arrs = {
+                "keys": np.zeros((cap,), np.int32),
+                "values": np.zeros((cap, w), np.float32),
+            }
+            keys_rows, val_rows = [], []
+            fills: List[int] = []
+            slots: List[int] = []
+            for d, idxs in enumerate(per_shard):
+                base_slot = d * slots_per if num_devices > 1 else 0
+                for r in idxs:
+                    arrs, fill, slot = rows[r]
+                    keys_rows.append(arrs["keys"])
+                    val_rows.append(arrs["values"])
+                    fills.append(fill)
+                    slots.append(slot)
+                for _ in range(rows_per_shard - len(idxs)):
+                    keys_rows.append(pad_arrs["keys"])
+                    val_rows.append(pad_arrs["values"])
+                    fills.append(0)
+                    slots.append(base_slot)
+
+            device = getattr(eng.aion, "device_stacking", True)
+            # the batched stack carries keys + values only: no batch fold
+            # is time-dependent within a window, and stacking timestamps
+            # would force a D2H pull of every hot device-resident row
+            # (f64 on host, f32 on device — see the fold_batch contract)
             data = {
-                "keys": np.stack([np.asarray(r) for r in keys_rows]),
-                "timestamps": np.stack([np.asarray(r) for r in ts_rows]),
-                "values": np.stack([np.asarray(r) for r in val_rows]),
+                "keys": self._stack(keys_rows, device, np.int32),
+                "values": self._stack(val_rows, device, np.float32),
             }
             results = op.run_batch(data, jnp.asarray(fills, jnp.int32),
                                    jnp.asarray(slots, jnp.int32),
-                                   _next_pow2(num_slots))
+                                   num_slots, mesh=mesh)
+            ran_sharded = mesh is not None
         else:
             # every window empty: finalize the identity accumulator
             results = [op.finalize(op.init_acc()) for _ in range(num_slots)]
         dev_dt = _time.time() - dev_t0
 
-        # 4. per-window bookkeeping, identical to execute_window
+        # 5. per-window bookkeeping, identical to execute_window
         out: Dict[WindowId, Any] = {}
-        for slot, (it, _) in enumerate(plans):
-            result = results[slot]
+        for i, (it, _) in enumerate(plans):
+            result = results[slot_of[i]]
             it.state.result = result
             eng.results[it.wid] = result
             it.state.last_executed_at = now
@@ -182,7 +249,9 @@ class BatchExecutor:
             eng._post_execute_destage(it.wid, it.state, now)
         eng.metrics.exec_seconds += _time.time() - t0
         eng.metrics.batch_executions += 1
-        eng.metrics.batched_windows += num_slots
+        eng.metrics.batched_windows += len(plans)
         eng.metrics.batch_device_seconds += dev_dt
-        eng.metrics.batch_occupancy_series.append(num_slots)
+        eng.metrics.batch_occupancy_series.append(len(plans))
+        if ran_sharded:
+            eng.metrics.sharded_batch_executions += 1
         return out

@@ -19,6 +19,10 @@ Execution routing: when ``AionConfig.batched_execution`` is on (default)
 and the operator implements the batch contract, all due windows of one
 priority class fold in a single device pass through ``core.batch_exec``;
 the per-window ``execute_window`` path is retained as the reference.
+With ``AionConfig.slot_sharding`` on and more than one local device, that
+single pass additionally partitions window slots across a 1-D mesh
+(shard_map over the composite (window_slot, key) segment axis, psum-free
+— slots are disjoint); see ``core.batch_exec`` for the placement step.
 """
 from __future__ import annotations
 
@@ -61,6 +65,8 @@ class EngineMetrics:
     # batched execution path: one entry per device pass
     batch_executions: int = 0
     batched_windows: int = 0
+    # device passes that ran slot-sharded across a multi-device mesh
+    sharded_batch_executions: int = 0
     batch_device_seconds: float = 0.0
     batch_occupancy_series: List[int] = field(default_factory=list)
     device_bytes_series: List[Tuple[float, int]] = field(default_factory=list)

@@ -20,12 +20,20 @@ key)`` segment ids through the batched segment-aggregate kernel.
 ``average``, ``stock``, and ``lrb`` implement it; ``bigrams`` and the
 blocking ``percentile`` fall back to the per-window reference path.
 
-  fold_batch(data, fills, slots, num_slots) -> acc
-      data   {"keys": [B, cap] i32, "timestamps": [B, cap] f64,
-              "values": [B, cap, W] f32}   (B stacked blocks, padded)
+  fold_batch(data, fills, slots, num_slots, mesh=None) -> acc
+      data   {"keys": [B, cap] i32, "values": [B, cap, W] f32}
+             (B stacked blocks, padded). Timestamps are deliberately NOT
+             stacked: no batch fold is time-dependent within a window,
+             and stacking them would pull every hot device-resident row
+             back to the host (f64 host-side, f32 once staged). A future
+             time-aware operator must extend the executor's gather.
       fills  [B] i32   valid events per block (ragged fills)
       slots  [B] i32   block row -> window slot (several blocks of one
                        window share a slot)
+      mesh   optional 1-D device mesh (static): slot-sharded execution —
+             rows arrive shard-major, slots partition across devices, and
+             the kernel gathers per-slot tiles with no cross-device
+             reduction (see kernels.segment_aggregate)
   finalize_batch(acc, num_slots) -> [per-window result] * num_slots
       element i is equal (up to float assoc.) to the per-window
       ``finalize(fold(...))`` over slot i's blocks.
@@ -65,11 +73,14 @@ class WindowOperator:
             acc = self.fold(acc, data, fill)
         return self.finalize(acc)
 
-    def run_batch(self, data, fills, slots, num_slots: int) -> list:
+    def run_batch(self, data, fills, slots, num_slots: int,
+                  mesh=None) -> list:
         """Batched path: one device pass over stacked blocks of many
-        windows; returns one finalized result per slot."""
+        windows; returns one finalized result per slot. ``mesh`` routes
+        the fold through the slot-sharded multi-device kernel (the
+        contract requires fold_batch to accept it, default None)."""
         assert self.supports_batch
-        acc = self.fold_batch(data, fills, slots, num_slots)
+        acc = self.fold_batch(data, fills, slots, num_slots, mesh=mesh)
         return self.finalize_batch(acc, num_slots)
 
 
@@ -111,8 +122,8 @@ def make_average(block_capacity: int, width: int) -> WindowOperator:
     def finalize(acc):
         return float(acc["sum"] / jnp.maximum(acc["count"], 1.0))
 
-    @partial(jax.jit, static_argnames=("num_slots",))
-    def fold_batch(data, fills, slots, num_slots):
+    @partial(jax.jit, static_argnames=("num_slots", "mesh"))
+    def fold_batch(data, fills, slots, num_slots, mesh=None):
         cap = data["values"].shape[1]
         valid = _batch_valid(cap, jnp.asarray(fills))
         # single segment per window: the composite id IS the slot
@@ -120,7 +131,7 @@ def make_average(block_capacity: int, width: int) -> WindowOperator:
             jnp.asarray(data["values"][:, :, :1], jnp.float32),
             jnp.zeros((data["values"].shape[0], cap), jnp.int32), 1,
             valid=valid, slot_ids=jnp.asarray(slots, jnp.int32),
-            num_slots=num_slots, stats=("sum", "count"))
+            num_slots=num_slots, stats=("sum", "count"), mesh=mesh)
         return {"sum": out["sum"][:, 0, 0], "count": out["count"][:, 0]}
 
     def finalize_batch(acc, num_slots):
@@ -225,15 +236,15 @@ def make_stock(block_capacity: int, width: int,
 
     from repro.kernels import segment_aggregate_batched
 
-    @partial(jax.jit, static_argnames=("num_slots",))
-    def fold_batch(data, fills, slots, num_slots):
+    @partial(jax.jit, static_argnames=("num_slots", "mesh"))
+    def fold_batch(data, fills, slots, num_slots, mesh=None):
         cap = data["values"].shape[1]
         valid = _batch_valid(cap, jnp.asarray(fills))
         keys = jnp.asarray(data["keys"], jnp.int32) % num_keys
         out = segment_aggregate_batched(
             jnp.asarray(data["values"][:, :, :1], jnp.float32), keys,
             num_keys, valid=valid, slot_ids=jnp.asarray(slots, jnp.int32),
-            num_slots=num_slots)
+            num_slots=num_slots, mesh=mesh)
         return {"min": out["min"][:, :, 0], "max": out["max"][:, :, 0],
                 "sum": out["sum"][:, :, 0], "count": out["count"]}
 
@@ -282,8 +293,8 @@ def make_lrb(block_capacity: int, width: int,
 
     from repro.kernels import segment_aggregate_batched
 
-    @partial(jax.jit, static_argnames=("num_slots",))
-    def fold_batch(data, fills, slots, num_slots):
+    @partial(jax.jit, static_argnames=("num_slots", "mesh"))
+    def fold_batch(data, fills, slots, num_slots, mesh=None):
         cap = data["values"].shape[1]
         valid = _batch_valid(cap, jnp.asarray(fills))
         seg = jnp.asarray(data["keys"], jnp.int32) % num_segments
@@ -295,7 +306,7 @@ def make_lrb(block_capacity: int, width: int,
         out = segment_aggregate_batched(
             vals, seg, num_segments, valid=valid,
             slot_ids=jnp.asarray(slots, jnp.int32), num_slots=num_slots,
-            stats=("sum", "count"))
+            stats=("sum", "count"), mesh=mesh)
         return {"count": out["count"], "speed_sum": out["sum"][:, :, 0],
                 "stopped": out["sum"][:, :, 1]}
 

@@ -269,6 +269,21 @@ class IOScheduler:
             self._simulate_io(block.nbytes)
         return host_data
 
+    def fetch_block_arrays(self, block: Block):
+        """Device-preferred read of a block's full-capacity SoA arrays
+        for the batched gather.
+
+        A device-resident (m-bucket) copy is returned as-is — the batched
+        stack keeps it device-side (a device concat instead of a host
+        round-trip). Cold p-blocks fall through to ``fetch_block_host``
+        so the read is accounted and persisted blocks pay the simulated
+        persistent-tier cost. Returns None only if the block was purged.
+        """
+        dd = block.device_data
+        if dd is not None:
+            return dd
+        return self.fetch_block_host(block)
+
     def spill_block_sync(self, block: Block) -> None:
         if self.spill_dir is None:
             return

@@ -26,6 +26,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import MeshConfig, ModelConfig
@@ -77,6 +78,30 @@ def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
     from jax.experimental.shard_map import shard_map as _shard_map
     return _shard_map(f, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, check_rep=check)
+
+
+# Default mesh axis for the streaming engine's slot-sharded batched fold
+# (``AionConfig.slot_sharding``): window slots partition across a 1-D mesh
+# with NO cross-device reduction — slots are disjoint, so each device owns
+# a contiguous slot range outright (psum-free).
+SLOT_AXIS = "slots"
+
+
+def make_slot_mesh(num_devices: int = 0,
+                   axis_name: str = SLOT_AXIS) -> Optional[Mesh]:
+    """1-D mesh over local devices for slot-sharded window execution.
+
+    ``num_devices == 0`` takes every local device. Returns ``None`` when
+    fewer than two devices are available — callers fall back to the
+    single-device batched path, which keeps ``slot_sharding=True`` a safe
+    no-op on one-device hosts (the tier-1 CPU container).
+    """
+    devs = jax.devices()
+    n = num_devices if num_devices > 0 else len(devs)
+    n = min(n, len(devs))
+    if n <= 1:
+        return None
+    return Mesh(np.asarray(devs[:n]), (axis_name,))
 
 
 def _divides(a: int, b: int) -> bool:

@@ -19,8 +19,9 @@ from repro.kernels.decode_attention import decode_attention_paged_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention_bwd import flash_attention_bwd_pallas
 from repro.kernels.segment_aggregate import (
+    empty_batch_identity as _empty_batch_identity,
     segment_aggregate_batched_dense, segment_aggregate_batched_pallas,
-    segment_aggregate_pallas,
+    segment_aggregate_batched_sharded, segment_aggregate_pallas,
 )
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -47,13 +48,14 @@ def segment_aggregate(values, segment_ids, num_segments: int, valid=None,
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "num_slots",
                                              "backend", "block_n",
-                                             "stats"))
+                                             "stats", "mesh"))
 def segment_aggregate_batched(values, segment_ids, num_segments: int,
                               valid=None, slot_ids=None,
                               num_slots: Optional[int] = None,
                               backend: str = "auto", block_n: int = 512,
                               stats: tuple = ("sum", "count", "min",
-                                              "max")):
+                                              "max"),
+                              mesh=None):
     """Batched multi-window reduce-by-key: values [B, N, W], ids [B, N],
     slot_ids [B] -> aggregates [num_slots, num_segments, ...] in one pass.
 
@@ -63,11 +65,35 @@ def segment_aggregate_batched(values, segment_ids, num_segments: int,
     XLA:CPU scatters and the Pallas interpreter are both validation-only
     speeds). ``stats`` selects which aggregates to materialize — folds
     that only need sum/count skip the min/max work.
+
+    ``mesh`` (a 1-D device mesh; static, hashable) routes the fold
+    through the slot-sharded variant: window slots partition across the
+    mesh and each device reduces only its own shard-major rows —
+    psum-free, since slots are disjoint. Rows/slots must divide the mesh
+    and rows must be packed shard-major (``pack_rows_shard_major``). The
+    ``'ref'`` backend ignores the mesh: it is the unsharded oracle the
+    sharded path is validated against.
     """
+    b = values.shape[0]
+    ns = num_slots if num_slots is not None else \
+        (b if slot_ids is None else None)
+    if ns is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    if b == 0 or ns == 0:
+        # empty-batch edge: no degenerate [0, ...] kernel launch — return
+        # the fold identity (zero sum/count, +/-inf extrema) directly
+        empty = _empty_batch_identity(ns, num_segments, values.shape[2])
+        return {k: v for k, v in empty.items() if k in stats}
     if backend == "auto":
         be = "pallas" if jax.devices()[0].platform == "tpu" else "dense"
     else:
         be = backend
+    if mesh is not None and be != "ref" and mesh.size > 1:
+        return segment_aggregate_batched_sharded(
+            values, segment_ids, num_segments, valid=valid,
+            slot_ids=slot_ids, num_slots=num_slots, mesh=mesh,
+            stats=stats, use_pallas=(be in ("pallas", "interpret")),
+            block_n=block_n, interpret=(be == "interpret"))
     if be == "dense":
         return segment_aggregate_batched_dense(
             values, segment_ids, num_segments, valid=valid,

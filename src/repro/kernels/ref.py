@@ -55,6 +55,11 @@ def ref_segment_aggregate_batched(values: jnp.ndarray,
             num_slots = b
     elif num_slots is None:
         raise ValueError("num_slots is required when slot_ids is given")
+    if b == 0 or num_slots == 0:
+        # empty batch: the fold identity, with no degenerate [0, ...]
+        # reduction (segment_* identities are dtype-max, not inf)
+        from repro.kernels.segment_aggregate import empty_batch_identity
+        return empty_batch_identity(num_slots, num_segments, w)
     composite = (slot_ids.astype(jnp.int32)[:, None] * num_segments
                  + segment_ids.astype(jnp.int32))
     out = ref_segment_aggregate(values.reshape(b * n, w),

@@ -17,6 +17,17 @@ this to many concurrent windows in one device pass: event rows carry a
 2-D segment layout ``(window_slot, key)`` which is flattened into the
 segment axis (``sid = slot * S + key``) so a single kernel launch reduces
 every due window at once — the engine's multi-window execution path.
+
+The **sharded** entry point (``segment_aggregate_batched_sharded``)
+partitions that composite segment axis across a 1-D device mesh: device
+``d`` owns the contiguous slot range ``[d*slots_per, (d+1)*slots_per)``
+and reduces only the block rows placed in its shard. Slots are disjoint,
+so shards never touch each other's outputs and the gather needs **no
+cross-device reduction** (no psum) — the output is simply each shard's
+``[slots_per, S, ...]`` tile concatenated along the slot axis. Rows must
+arrive in shard-major order (``pack_rows_shard_major``); a row whose slot
+falls outside its shard's range is defensively masked invalid rather than
+corrupting a neighbour's slot.
 """
 from __future__ import annotations
 
@@ -25,7 +36,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+from jax.sharding import PartitionSpec as P
 
 
 def _kernel(ids_ref, valid_ref, values_ref, sum_ref, cnt_ref, min_ref,
@@ -207,3 +220,107 @@ def segment_aggregate_batched_dense(values: jnp.ndarray,
         out["max"] = jnp.max(small, axis=0).reshape(num_slots,
                                                     num_segments, w)
     return out
+
+
+def empty_batch_identity(num_slots: int, num_segments: int, w: int) -> dict:
+    """Fold identity per (slot, segment) for an empty batch: zero
+    sums/counts, +/-inf extrema. Shared by the public entry point and the
+    ref oracle so the B == 0 contract cannot drift between them."""
+    return {
+        "sum": jnp.zeros((num_slots, num_segments, w), jnp.float32),
+        "count": jnp.zeros((num_slots, num_segments), jnp.float32),
+        "min": jnp.full((num_slots, num_segments, w), jnp.inf),
+        "max": jnp.full((num_slots, num_segments, w), -jnp.inf),
+    }
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1). Shared by the batch executor's
+    shape bucketing and the shard-major row packing below."""
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def pack_rows_shard_major(slot_ids, num_devices: int, slots_per: int
+                          ) -> Tuple[list, int]:
+    """Host-side row placement for the sharded fold.
+
+    Groups row indices by owning shard (``slot // slots_per``) and picks
+    the common power-of-two per-shard row count every shard pads to, so
+    the ``[num_devices * rows_per_shard, ...]`` stack splits evenly under
+    a ``shard_map`` over the leading axis. Returns
+    ``(per_shard_row_indices, rows_per_shard)``.
+    """
+    shard = np.asarray(slot_ids, np.int64) // max(slots_per, 1)
+    per = [np.flatnonzero(shard == d) for d in range(num_devices)]
+    rows_per_shard = next_pow2(max([len(p) for p in per] + [1]))
+    return per, rows_per_shard
+
+
+def segment_aggregate_batched_sharded(values: jnp.ndarray,
+                                      segment_ids: jnp.ndarray,
+                                      num_segments: int,
+                                      valid: Optional[jnp.ndarray] = None,
+                                      slot_ids: Optional[jnp.ndarray] = None,
+                                      num_slots: Optional[int] = None,
+                                      *, mesh,
+                                      stats: Tuple[str, ...] = (
+                                          "sum", "count", "min", "max"),
+                                      use_pallas: bool = False,
+                                      block_n: int = 512,
+                                      interpret: bool = True):
+    """Slot-sharded multi-window segment aggregation over a 1-D mesh.
+
+    Same contract as ``segment_aggregate_batched_pallas`` with one layout
+    precondition: rows are **shard-major** — row ``r`` belongs to the
+    device ``r // (B / num_devices)``, and its (global) slot id must fall
+    in that device's range ``[d*slots_per, (d+1)*slots_per)`` where
+    ``slots_per = num_slots / num_devices`` (``pack_rows_shard_major``
+    produces this layout). Each shard reduces its own rows into its own
+    slot tile; the 2-D ``(slot, key)`` layout makes the tiles disjoint,
+    so the gathered output is a pure concatenation along the slot axis —
+    **no psum**. Misplaced rows are masked invalid inside the shard (they
+    contribute nothing) instead of aliasing into a resident slot.
+    """
+    b, n, w = values.shape
+    axis_name = mesh.axis_names[0]
+    num_devices = mesh.shape[axis_name]
+    if valid is None:
+        valid = jnp.ones((b, n), bool)
+    if slot_ids is None:
+        slot_ids = jnp.arange(b, dtype=jnp.int32)
+        if num_slots is None:
+            num_slots = b
+    elif num_slots is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    if b % num_devices or num_slots % num_devices:
+        raise ValueError(
+            f"rows ({b}) and slots ({num_slots}) must both divide the "
+            f"slot mesh ({num_devices} devices); pad with invalid rows / "
+            "unused slots (pack_rows_shard_major)")
+    slots_per = num_slots // num_devices
+
+    def shard_fn(v, sid, val, sl):
+        base = jax.lax.axis_index(axis_name) * slots_per
+        local = sl.astype(jnp.int32) - base
+        own = (local >= 0) & (local < slots_per)
+        local = jnp.where(own, local, 0)
+        val_own = val.astype(bool) & own[:, None]
+        if use_pallas:
+            out = segment_aggregate_batched_pallas(
+                v, sid, num_segments, valid=val_own, slot_ids=local,
+                num_slots=slots_per, block_n=block_n, interpret=interpret)
+            return {k: o for k, o in out.items() if k in stats}
+        return segment_aggregate_batched_dense(
+            v, sid, num_segments, valid=val_own, slot_ids=local,
+            num_slots=slots_per, stats=stats)
+
+    in_specs = (P(axis_name, None, None), P(axis_name, None),
+                P(axis_name, None), P(axis_name))
+    out_specs = {k: (P(axis_name, None) if k == "count"
+                     else P(axis_name, None, None))
+                 for k in stats}
+    # local import avoids a kernels <-> distributed cycle at module load
+    from repro.distributed.sharding import shard_map_compat
+    f = shard_map_compat(shard_fn, mesh, in_specs, out_specs)
+    return f(values.astype(jnp.float32), segment_ids.astype(jnp.int32),
+             valid.astype(bool), slot_ids.astype(jnp.int32))

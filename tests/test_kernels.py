@@ -77,6 +77,52 @@ def test_segment_aggregate_batched_ragged_fills(b, n, w, s, num_slots,
         np.testing.assert_allclose(a[m], bb[m], rtol=1e-6)
 
 
+@pytest.mark.parametrize("num_devices", [d for d in (1, 2, 4, 8)
+                                         if d <= len(jax.devices())])
+def test_segment_aggregate_batched_sharded_sweep(num_devices):
+    """Slot-sharded kernel vs unsharded vs oracle, on the executor's
+    shard-major layout (1-device count = unsharded fallback; higher
+    counts run under make verify-multidevice)."""
+    from repro.distributed.sharding import make_slot_mesh
+    from repro.kernels import ref as R2
+    slots_per, rows_per, n, w, s = 3, 5, 40, 2, 7
+    num_slots = num_devices * slots_per
+    b = num_devices * rows_per
+    slots = np.concatenate([
+        RNG.integers(d * slots_per, (d + 1) * slots_per, rows_per)
+        for d in range(num_devices)]).astype(np.int32)
+    vals = jnp.asarray(RNG.normal(size=(b, n, w)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, s, (b, n)), jnp.int32)
+    fills = RNG.integers(0, n + 1, b)           # ragged incl. empty rows
+    valid = jnp.asarray(np.arange(n)[None, :] < fills[:, None])
+    kw = dict(valid=valid, slot_ids=jnp.asarray(slots),
+              num_slots=num_slots)
+    mesh = make_slot_mesh(num_devices)
+    out = segment_aggregate_batched(vals, ids, s, mesh=mesh, **kw)
+    out_u = segment_aggregate_batched(vals, ids, s, **kw)
+    ref = R2.ref_segment_aggregate_batched(vals, ids, s, **kw)
+    assert out["sum"].shape == (num_slots, s, w)
+    for k in ("sum", "count", "min", "max"):
+        np.testing.assert_allclose(out[k], out_u[k], rtol=1e-6, atol=1e-6)
+        a, bb = np.asarray(out[k]), np.asarray(ref[k])
+        m = np.isfinite(bb)
+        assert np.array_equal(np.isfinite(a), m), k
+        np.testing.assert_allclose(a[m], bb[m], rtol=1e-5, atol=1e-5)
+
+
+def test_segment_aggregate_batched_empty_batch_no_launch():
+    """B == 0 returns fold identities with the right shapes instead of
+    launching a degenerate [0, ...] kernel (regression: empty batch)."""
+    out = segment_aggregate_batched(
+        jnp.zeros((0, 32, 3), jnp.float32), jnp.zeros((0, 32), jnp.int32),
+        5, slot_ids=jnp.zeros((0,), jnp.int32), num_slots=4)
+    assert out["sum"].shape == (4, 5, 3)
+    assert out["count"].shape == (4, 5)
+    assert float(jnp.abs(out["sum"]).sum()) == 0.0
+    assert bool(jnp.all(jnp.isposinf(out["min"])))
+    assert bool(jnp.all(jnp.isneginf(out["max"])))
+
+
 def test_segment_aggregate_batched_equals_per_window_calls():
     """Folding N windows in one batched launch == N single-window kernel
     calls (the engine-level parity claim, at the kernel level)."""

@@ -6,6 +6,8 @@ pytest.importorskip(
     "hypothesis",
     reason="property tests need hypothesis (pip install -r "
            "requirements-dev.txt); the rest of tier-1 runs without it")
+import jax
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import AionConfig
@@ -101,6 +103,61 @@ def test_aion_trigger_never_worse_than_deltaev(seed, k):
     aion = minimize_max_staleness(delays, T, k).max_staleness
     de = max_staleness_of(deltaev_times(delays, T, k), delays, T)
     assert aion <= de + 1e-7
+
+
+# device counts available in this process: {1} on the tier-1 single-CPU
+# container, {1, 2, 4, 8} under `make verify-multidevice`
+_SHARD_DEVICE_COUNTS = [d for d in (1, 2, 4, 8)
+                        if d <= len(jax.devices())]
+
+
+@pytest.mark.parametrize("num_devices", _SHARD_DEVICE_COUNTS)
+@given(st.data())
+@settings(max_examples=15, deadline=None)
+def test_sharded_batched_fold_matches_unsharded_and_ref(num_devices, data):
+    """segment_aggregate_batched parity: sharded == unsharded == ref for
+    ragged slot_ids, duplicate slots, and all-invalid rows, on any
+    shard-major row layout the executor's placement can produce."""
+    from repro.distributed.sharding import make_slot_mesh
+    from repro.kernels import segment_aggregate_batched
+    from repro.kernels import ref as R
+
+    seed = data.draw(st.integers(0, 2**31 - 1), label="seed")
+    rows_per = data.draw(st.integers(1, 6), label="rows_per_shard")
+    slots_per = data.draw(st.integers(1, 4), label="slots_per_shard")
+    n = data.draw(st.sampled_from([8, 24, 48]), label="events_per_block")
+    w = data.draw(st.integers(1, 3), label="width")
+    s = data.draw(st.integers(1, 6), label="num_segments")
+    all_invalid = data.draw(st.booleans(), label="all_invalid")
+    rng = np.random.default_rng(seed)
+    b = num_devices * rows_per
+    num_slots = num_devices * slots_per
+    # shard-major layout: rows of shard d draw (duplicate, ragged) slots
+    # from d's own contiguous range — exactly what the executor's
+    # round-robin placement + pack_rows_shard_major produce
+    slots = np.concatenate([
+        rng.integers(d * slots_per, (d + 1) * slots_per, rows_per)
+        for d in range(num_devices)]).astype(np.int32)
+    vals = jnp.asarray(rng.normal(size=(b, n, w)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, s, (b, n)), jnp.int32)
+    fills = rng.integers(0, n + 1, b)
+    if all_invalid:
+        fills[:] = 0
+    valid = jnp.asarray(np.arange(n)[None, :] < fills[:, None])
+    kw = dict(valid=valid, slot_ids=jnp.asarray(slots),
+              num_slots=num_slots)
+    mesh = make_slot_mesh(num_devices)
+    out_s = segment_aggregate_batched(vals, ids, s, mesh=mesh, **kw)
+    out_u = segment_aggregate_batched(vals, ids, s, **kw)
+    ref = R.ref_segment_aggregate_batched(vals, ids, s, **kw)
+    for k in ("sum", "count", "min", "max"):
+        np.testing.assert_allclose(out_s[k], out_u[k], rtol=1e-6,
+                                   atol=1e-6, err_msg=f"{k} vs unsharded")
+        a, bb = np.asarray(out_s[k]), np.asarray(ref[k])
+        m = np.isfinite(bb)
+        assert np.array_equal(np.isfinite(a), m), k
+        np.testing.assert_allclose(a[m], bb[m], rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{k} vs ref")
 
 
 @given(st.integers(1, 1000))

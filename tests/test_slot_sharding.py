@@ -1,0 +1,319 @@
+"""Slot-sharded multi-device batched fold: parity + placement + edges.
+
+The sharded path must be result-identical to the unsharded batched path
+and the per-window reference path. Multi-device cases run under
+``make verify-multidevice`` (XLA_FLAGS=--xla_force_host_platform_device_count=8);
+on a single-device host they skip and the single-device fallbacks (mesh
+None, sharding a safe no-op) are exercised instead.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AionConfig
+from repro.core import StreamEngine, TumblingWindows
+from repro.core.batch_exec import plan_slot_placement
+from repro.core.events import EventBatch
+from repro.core.operators import make_operator
+from repro.core.triggers import DeltaTTrigger
+from repro.distributed.sharding import make_slot_mesh
+from repro.kernels import segment_aggregate_batched
+from repro.kernels.segment_aggregate import (
+    next_pow2, pack_rows_shard_major,
+)
+
+NDEV = len(jax.devices())
+multidevice = pytest.mark.skipif(
+    NDEV < 2, reason="needs >= 2 devices (make verify-multidevice)")
+
+WINDOW = 10.0
+N_WINDOWS = 12
+
+
+# ------------------------------------------------------------- placement
+def test_plan_slot_placement_round_robins_device_ranges():
+    slot_of, num_slots, slots_per = plan_slot_placement(10, 4)
+    # 10 windows over 4 devices -> ceil(10/4)=3 -> padded to 4 per device
+    assert slots_per == 4 and num_slots == 16
+    # window i -> device i % 4, local slot i // 4
+    assert slot_of == [0, 4, 8, 12, 1, 5, 9, 13, 2, 6]
+    # every device's slots stay inside its own contiguous range
+    for i, s in enumerate(slot_of):
+        d = i % 4
+        assert d * slots_per <= s < (d + 1) * slots_per
+    # slots are unique (disjoint windows -> disjoint slots)
+    assert len(set(slot_of)) == len(slot_of)
+
+
+def test_plan_slot_placement_single_device_identity():
+    slot_of, num_slots, slots_per = plan_slot_placement(5, 1)
+    assert slot_of == [0, 1, 2, 3, 4]
+    assert num_slots == slots_per == 8          # pow2 shape bucketing
+
+
+def test_pack_rows_shard_major_groups_and_pads():
+    slots = np.array([0, 3, 0, 7, 2, 3])        # slots_per=2, 4 devices
+    per, rows = pack_rows_shard_major(slots, 4, 2)
+    # shard of row = slot // 2 -> shards [0, 1, 0, 3, 1, 1]
+    assert [list(p) for p in per] == [[0, 2], [1, 4, 5], [], [3]]
+    assert rows == 4                            # max shard size 3 -> pow2
+    per, rows = pack_rows_shard_major(np.array([0, 0, 0]), 2, 2)
+    assert rows == 4                            # 3 rows -> padded to 4
+
+
+def test_make_slot_mesh_single_device_is_none():
+    assert make_slot_mesh(1) is None
+    if NDEV < 2:
+        assert make_slot_mesh(0) is None
+    else:
+        mesh = make_slot_mesh(0)
+        assert mesh is not None and mesh.size == NDEV
+
+
+# ------------------------------------------------------------ empty batch
+def test_batch_executor_empty_items_is_noop():
+    eng = _make_engine("average", batched=True, sharded=False)
+    before = (eng.metrics.batch_executions, eng.metrics.live_executions,
+              eng.metrics.late_executions, eng.metrics.exec_seconds)
+    assert eng.batch_exec.execute([], now=0.0) == {}
+    after = (eng.metrics.batch_executions, eng.metrics.live_executions,
+             eng.metrics.late_executions, eng.metrics.exec_seconds)
+    assert before == after
+    eng.close()
+
+
+def test_batched_kernel_empty_batch_is_identity():
+    out = segment_aggregate_batched(
+        jnp.zeros((0, 16, 2), jnp.float32), jnp.zeros((0, 16), jnp.int32),
+        4)
+    assert out["sum"].shape == (0, 4, 2)
+    assert out["count"].shape == (0, 4)
+    out = segment_aggregate_batched(
+        jnp.zeros((0, 16, 2), jnp.float32), jnp.zeros((0, 16), jnp.int32),
+        4, slot_ids=jnp.zeros((0,), jnp.int32), num_slots=8)
+    assert out["sum"].shape == (8, 4, 2)
+    assert float(out["sum"].sum()) == 0.0
+    assert float(out["count"].sum()) == 0.0
+    assert bool(jnp.all(jnp.isinf(out["min"]))) \
+        and bool(jnp.all(out["min"] > 0))
+    assert bool(jnp.all(jnp.isinf(out["max"]))) \
+        and bool(jnp.all(out["max"] < 0))
+
+
+def test_ref_batched_empty_batch_is_identity():
+    from repro.kernels import ref as R
+    out = R.ref_segment_aggregate_batched(
+        jnp.zeros((0, 8, 1), jnp.float32), jnp.zeros((0, 8), jnp.int32),
+        3, slot_ids=jnp.zeros((0,), jnp.int32), num_slots=4)
+    assert out["sum"].shape == (4, 3, 1)
+    assert float(out["count"].sum()) == 0.0
+
+
+# ----------------------------------------------------------- engine parity
+def _make_engine(op_name: str, batched: bool, sharded: bool,
+                 block: int = 64, width: int = 2,
+                 num_keys: int = 8, **aion_kw) -> StreamEngine:
+    aion = AionConfig(block_size=block, batched_execution=batched,
+                      slot_sharding=sharded, **aion_kw)
+    kw = {}
+    if op_name == "stock":
+        kw = {"num_keys": num_keys}
+    elif op_name == "lrb":
+        kw = {"num_segments": num_keys}
+    op = make_operator(op_name, block, width, **kw)
+    return StreamEngine(
+        assigner=TumblingWindows(WINDOW), operator=op, aion=aion,
+        value_width=width, device_budget_bytes=64 << 20,
+        trigger=DeltaTTrigger(executions=2),
+    )
+
+
+def _late_heavy_run(eng: StreamEngine, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    horizon = N_WINDOWS * WINDOW
+    n = 3600
+    b = EventBatch(rng.integers(0, 8, n), rng.uniform(0, horizon, n),
+                   rng.normal(size=(n, 2)).astype(np.float32))
+    eng.ingest(b, now=0.0)
+    eng.advance_watermark(horizon, now=horizon)
+    nl = 1000
+    late = EventBatch(rng.integers(0, 8, nl),
+                      rng.uniform(0, horizon - WINDOW, nl),
+                      rng.normal(size=(nl, 2)).astype(np.float32))
+    eng.ingest(late, now=horizon + 1.0)
+    for t in np.linspace(horizon + 1,
+                         horizon + 1 + 2 * eng.cleanup.current_bound(), 25):
+        eng.poll(t)
+    results = dict(eng.results)
+    metrics = eng.metrics
+    eng.close()
+    return results, metrics
+
+
+def _assert_equal_results(got, want, tag):
+    assert set(got) == set(want)
+    for wid in want:
+        g, w = got[wid], want[wid]
+        if isinstance(w, dict):
+            for k in w:
+                np.testing.assert_allclose(
+                    np.asarray(g[k], np.float64),
+                    np.asarray(w[k], np.float64), rtol=1e-4, atol=1e-5,
+                    err_msg=f"{tag} {wid} field {k!r}")
+        else:
+            assert g == pytest.approx(w, rel=1e-4, abs=1e-5), f"{tag} {wid}"
+
+
+@multidevice
+@pytest.mark.parametrize("op_name", ["average", "stock", "lrb"])
+def test_sharded_matches_unsharded_and_reference(op_name):
+    got_s, m_s = _late_heavy_run(_make_engine(op_name, True, True))
+    got_u, m_u = _late_heavy_run(_make_engine(op_name, True, False))
+    want, m_r = _late_heavy_run(_make_engine(op_name, False, False))
+    _assert_equal_results(got_s, got_u, f"{op_name} sharded-vs-unsharded")
+    _assert_equal_results(got_s, want, f"{op_name} sharded-vs-reference")
+    # the sharded run really ran sharded; the others never did
+    assert m_s.sharded_batch_executions >= 1
+    assert m_s.batch_executions == m_u.batch_executions
+    assert m_u.sharded_batch_executions == 0
+    assert m_r.batch_executions == 0
+    assert m_s.live_executions == m_u.live_executions \
+        == m_r.live_executions == N_WINDOWS
+
+
+def test_slot_sharding_is_safe_noop_on_single_device():
+    """slot_sharding=True clamped to one device (1-device host, or
+    slot_shard_devices=1) silently uses the unsharded batched path —
+    same results, no mesh."""
+    eng = _make_engine("average", True, True, slot_shard_devices=1)
+    got, m = _late_heavy_run(eng)
+    want, _ = _late_heavy_run(_make_engine("average", True, False))
+    assert m.sharded_batch_executions == 0
+    assert m.batch_executions >= 1
+    _assert_equal_results(got, want, "single-device noop")
+
+
+@multidevice
+def test_sharded_more_windows_than_slots_per_device():
+    """More due windows than devices: several windows share each device's
+    slot range and the padded layout still folds correctly."""
+    eng = _make_engine("average", True, True)
+    rng = np.random.default_rng(3)
+    n_win = max(2 * NDEV + 3, N_WINDOWS)
+    horizon = n_win * WINDOW
+    n = 4000
+    b = EventBatch(rng.integers(0, 8, n), rng.uniform(0, horizon, n),
+                   rng.normal(size=(n, 2)).astype(np.float32))
+    eng.ingest(b, now=0.0)
+    eng.advance_watermark(horizon, now=horizon)
+    assert eng.metrics.batch_executions == 1
+    assert eng.metrics.sharded_batch_executions == 1
+    assert eng.metrics.live_executions == n_win
+    ts = b.timestamps
+    from repro.core.windows import WindowId
+    for i in range(n_win):
+        sel = (ts >= i * WINDOW) & (ts < (i + 1) * WINDOW)
+        if not sel.any():
+            continue
+        want = float(np.mean(b.values[sel, 0]))
+        assert eng.results[WindowId(i * WINDOW, (i + 1) * WINDOW)] == \
+            pytest.approx(want, rel=1e-4, abs=1e-5)
+    eng.close()
+
+
+# ---------------------------------------------------- device-side stacking
+@pytest.mark.parametrize("sharded", [False, True])
+def test_device_stacking_matches_host_stacking(sharded):
+    """The device concat gather and the PR-1 host np.stack gather fold to
+    identical results (hot m-blocks consumed in place vs pulled back)."""
+    if sharded and NDEV < 2:
+        pytest.skip("sharded variant needs >= 2 devices")
+    results = {}
+    for device_stacking in (True, False):
+        aion = AionConfig(block_size=64, batched_execution=True,
+                          slot_sharding=sharded,
+                          device_stacking=device_stacking)
+        eng = StreamEngine(
+            assigner=TumblingWindows(WINDOW),
+            operator=make_operator("stock", 64, 2, num_keys=8),
+            aion=aion, value_width=2, device_budget_bytes=64 << 20,
+            trigger=DeltaTTrigger(executions=2),
+        )
+        got, m = _late_heavy_run(eng, seed=13)
+        assert m.batch_executions >= 1
+        results[device_stacking] = got
+    _assert_equal_results(results[True], results[False],
+                          f"device-vs-host stack (sharded={sharded})")
+
+
+# -------------------------------------------------------- kernel laylout
+@multidevice
+@pytest.mark.parametrize("num_devices", [2, 4, 8])
+def test_sharded_kernel_parity_all_backends(num_devices):
+    if num_devices > NDEV:
+        pytest.skip(f"needs {num_devices} devices, have {NDEV}")
+    rng = np.random.default_rng(num_devices)
+    slots_per, rows_per, n, w, s = 2, 4, 48, 2, 5
+    num_slots = num_devices * slots_per
+    b = num_devices * rows_per
+    slots = np.concatenate([
+        rng.integers(d * slots_per, (d + 1) * slots_per, rows_per)
+        for d in range(num_devices)]).astype(np.int32)
+    vals = jnp.asarray(rng.normal(size=(b, n, w)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, s, (b, n)), jnp.int32)
+    fills = rng.integers(0, n + 1, b)            # includes all-invalid rows
+    valid = jnp.asarray(np.arange(n)[None, :] < fills[:, None])
+    mesh = make_slot_mesh(num_devices)
+    kw = dict(valid=valid, slot_ids=jnp.asarray(slots),
+              num_slots=num_slots)
+    out_s = segment_aggregate_batched(vals, ids, s, mesh=mesh, **kw)
+    out_u = segment_aggregate_batched(vals, ids, s, **kw)
+    from repro.kernels import ref as R
+    ref = R.ref_segment_aggregate_batched(vals, ids, s, **kw)
+    for k in ("sum", "count", "min", "max"):
+        np.testing.assert_allclose(out_s[k], out_u[k], rtol=1e-6,
+                                   atol=1e-6, err_msg=f"{k} vs unsharded")
+        a, bb = np.asarray(out_s[k]), np.asarray(ref[k])
+        m = np.isfinite(bb)
+        assert np.array_equal(np.isfinite(a), m), k
+        np.testing.assert_allclose(a[m], bb[m], rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{k} vs ref")
+
+
+@multidevice
+def test_sharded_kernel_rejects_indivisible_layout():
+    mesh = make_slot_mesh(2)
+    from repro.kernels.segment_aggregate import (
+        segment_aggregate_batched_sharded,
+    )
+    with pytest.raises(ValueError, match="divide"):
+        segment_aggregate_batched_sharded(
+            jnp.zeros((3, 8, 1)), jnp.zeros((3, 8), jnp.int32), 2,
+            slot_ids=jnp.zeros((3,), jnp.int32), num_slots=4, mesh=mesh)
+
+
+@multidevice
+def test_sharded_kernel_masks_misplaced_rows():
+    """A row whose slot lives on another shard contributes nothing rather
+    than corrupting a resident slot (defensive ownership mask)."""
+    from repro.kernels.segment_aggregate import (
+        segment_aggregate_batched_sharded,
+    )
+    mesh = make_slot_mesh(2)
+    # 2 devices x 1 row; row 0 claims slot 1 which device 1 owns
+    vals = jnp.ones((2, 8, 1), jnp.float32)
+    ids = jnp.zeros((2, 8), jnp.int32)
+    slots = jnp.asarray([1, 1], jnp.int32)
+    out = segment_aggregate_batched_sharded(
+        vals, ids, 1, slot_ids=slots, num_slots=2, mesh=mesh)
+    # only device 1's own row lands in slot 1; device 0's misplaced row
+    # is masked out instead of folding into device 0's slot 0
+    assert float(out["count"][0, 0]) == 0.0
+    assert float(out["count"][1, 0]) == 8.0
+    assert float(out["sum"][1, 0, 0]) == 8.0
+
+
+def test_next_pow2():
+    assert [next_pow2(i) for i in (0, 1, 2, 3, 5, 8, 9)] == \
+        [1, 1, 2, 4, 8, 8, 16]

