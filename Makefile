@@ -8,15 +8,23 @@ verify:
 # Slot-sharding + differential-soak suites under a forced 8-device host
 # platform (XLA splits the CPU into 8 simulated devices; the slot-sharded
 # batched fold really runs under shard_map). These same files also run —
-# single-device fallbacks only — inside plain `pytest` above.
+# single-device fallbacks only — inside plain `pytest` above. The block
+# pool is DEFAULT-ON (AionConfig.block_pool), so both verify targets
+# exercise the pooled configuration throughout; the soak + batch_exec
+# matrices additionally pin pooled on/off explicitly.
 verify-multidevice:
 	XLA_FLAGS="--xla_force_host_platform_device_count=8$${XLA_FLAGS:+ $$XLA_FLAGS}" \
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
 		tests/test_slot_sharding.py tests/test_soak_differential.py \
-		tests/test_kernels.py tests/test_property.py tests/test_batch_exec.py
+		tests/test_kernels.py tests/test_property.py \
+		tests/test_batch_exec.py tests/test_block_pool.py
 
 # Benchmark entry point (CSV rows, one per paper table/figure).
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py
 
-.PHONY: verify verify-multidevice bench
+# Pooled vs device-concat gather benchmark; refreshes BENCH_q2_gather.json
+bench-gather:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q2_throughput.py --gather
+
+.PHONY: verify verify-multidevice bench bench-gather

@@ -170,6 +170,133 @@ def fold_benchmark(num_windows: int = 8, events_per_window: int = 2000,
     return out
 
 
+def gather_benchmark(num_windows: int = 8, events_per_window: int = 8000,
+                     repeats: int = 20, warmup: int = 3,
+                     op_name: str = "lrb", num_keys: int = 64,
+                     emit_json: str = "BENCH_q2_gather.json") -> Dict:
+    """Gather vs fold seconds for the batched execution path: the
+    persistent block pool (block tables, zero-copy) vs the device-concat
+    baseline, at ``num_windows`` concurrent due windows.
+
+    Two scenarios:
+      * **hot** — everything device-resident (InMemoryPolicy pins blocks,
+        so pooled rows never leave the arena between re-executions): the
+        pooled gather is a table of Python ints + one take inside the
+        fold, the baseline re-stacks every row every batch.
+      * **cold** — spill pressure with a simulated persistent tier
+        (LocalRhoMinPolicy keeps a rho_min=0.5 bootstrap resident, the
+        rest destages after every execution and every re-read pays the
+        simulated persistent-tier cost): the pooled path demand-fills
+        the cold half at PRIO_DEMAND_STAGE and hides that I/O behind the
+        fold of the resident half (stall = what the fold could not
+        hide), the baseline pays the same reads synchronously inside the
+        gather.
+
+    Reported per mode: gather seconds (batch assembly outside the fold
+    call — ``EngineMetrics.batch_gather_seconds``), fold seconds, overlap
+    stall, end-to-end fold throughput. The acceptance bar is
+    ``hot.gather_speedup >= 3`` at >= 8 due windows; results land in
+    ``emit_json`` (checked in as BENCH_q2_gather.json).
+    """
+    import json
+
+    from repro.configs.base import AionConfig
+    from repro.core import InMemoryPolicy, StreamEngine, TumblingWindows
+    from repro.core.batch_exec import BatchWorkItem
+    from repro.core.events import EventBatch
+    from repro.core.operators import make_operator
+    from repro.core.policies import LocalRhoMinPolicy
+    from repro.core.triggers import DeltaTTrigger
+
+    wd = 10.0
+    horizon = num_windows * wd
+    n = num_windows * events_per_window
+    op_kw = {}
+    if op_name == "stock":
+        op_kw = {"num_keys": num_keys}
+    elif op_name == "lrb":
+        op_kw = {"num_segments": num_keys}
+
+    def drive(pooled: bool, hot: bool) -> Dict:
+        aion = AionConfig(block_size=1024, batched_execution=True,
+                          block_pool=pooled)
+        op = make_operator(op_name, aion.block_size, 1, **op_kw)
+        eng = StreamEngine(
+            assigner=TumblingWindows(wd), operator=op, aion=aion,
+            value_width=1, device_budget_bytes=512 << 20,
+            # hot: everything stays resident between re-executions;
+            # cold: half the blocks destage after every execution
+            # (rho_min bootstrap keeps the other half) and persistent-
+            # tier reads cost ~0.8 ms/block (simulated)
+            policy=InMemoryPolicy() if hot
+            else LocalRhoMinPolicy(rho_min=0.5, tau=1e9),
+            simulated_seconds_per_byte=0.0 if hot else 5e-8,
+            trigger=DeltaTTrigger(executions=1),
+        )
+        rng = np.random.default_rng(0)
+        ts = np.concatenate([
+            rng.uniform(i * wd, (i + 1) * wd, events_per_window)
+            for i in range(num_windows)])
+        eng.ingest(EventBatch(rng.integers(0, num_keys, n).astype(np.int32),
+                              ts, rng.normal(size=(n, 1)).astype(np.float32)),
+                   now=0.0)
+        eng.advance_watermark(horizon, now=horizon)      # live batch+compile
+        eng.io.drain()
+
+        def late_batch(r):
+            items = [BatchWorkItem(wid, eng.windows[wid], True)
+                     for wid in sorted(eng.windows)]
+            eng.batch_exec.execute(items, now=horizon + 1.0 + r)
+            if not hot:
+                eng.io.drain()                  # let destage make it cold
+        # warmup rounds compile every fold/gather variant of the late
+        # path; reset counters so the measurement is steady state
+        for r in range(warmup):
+            late_batch(r - warmup)
+        m = eng.metrics
+        m.batch_gather_seconds = 0.0
+        m.batch_device_seconds = 0.0
+        m.batch_stall_seconds = 0.0
+        m.pooled_rows = m.fallback_rows = m.demand_pool_fills = 0
+        # steady state: re-execute the same due set repeatedly (the
+        # batched late path — a pure function of bucket contents)
+        t0 = time.time()
+        for r in range(repeats):
+            late_batch(r)
+        wall = time.time() - t0
+        out = {
+            "gather_s": round(m.batch_gather_seconds, 6),
+            "fold_s": round(m.batch_device_seconds, 6),
+            "stall_s": round(m.batch_stall_seconds, 6),
+            "wall_s": round(wall, 6),
+            "fold_events_per_sec": round(n * repeats / max(wall, 1e-9)),
+            "pooled_rows": m.pooled_rows,
+            "fallback_rows": m.fallback_rows,
+            "demand_pool_fills": m.demand_pool_fills,
+        }
+        eng.close()
+        return out
+
+    out: Dict = {"num_windows": num_windows,
+                 "events_per_window": events_per_window,
+                 "repeats": repeats, "workload": op_name}
+    for scen, hot in (("hot", True), ("cold", False)):
+        pooled = drive(True, hot)
+        concat = drive(False, hot)
+        out[scen] = {
+            "pooled": pooled, "device_concat": concat,
+            "gather_speedup": round(
+                concat["gather_s"] / max(pooled["gather_s"], 1e-9), 2),
+            "throughput_ratio": round(
+                pooled["fold_events_per_sec"]
+                / max(concat["fold_events_per_sec"], 1e-9), 3),
+        }
+    if emit_json:
+        with open(emit_json, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
 def devices_sweep(num_windows: int = 16, events_per_window: int = 2000,
                   repeats: int = 5, op_name: str = "lrb",
                   num_keys: int = 64) -> Dict:
@@ -220,15 +347,28 @@ if __name__ == "__main__":
                     help="simulate N CPU devices and benchmark the "
                          "slot-sharded fold against single-device "
                          "(sets XLA_FLAGS before jax loads)")
-    ap.add_argument("--windows", type=int, default=16,
-                    help="concurrent due windows for the devices sweep")
+    ap.add_argument("--windows", type=int, default=0,
+                    help="concurrent due windows (0 = each mode's "
+                         "default: 16 for the devices sweep, 8 for "
+                         "--gather — the configuration the checked-in "
+                         "BENCH_q2_gather.json was measured at)")
+    ap.add_argument("--gather", action="store_true",
+                    help="run the pooled vs device-concat gather "
+                         "benchmark and emit BENCH_q2_gather.json")
     args = ap.parse_args()
+    if args.devices > 1 and args.gather:
+        ap.error("--gather measures the single-device gather path; "
+                 "run it without --devices")
     if args.devices > 1:
         flags = os.environ.get("XLA_FLAGS", "")
         os.environ["XLA_FLAGS"] = (
             f"{flags} --xla_force_host_platform_device_count="
             f"{args.devices}").strip()
-        print(devices_sweep(num_windows=args.windows))
+        print(devices_sweep(num_windows=args.windows or 16))
+    elif args.gather:
+        import json as _json
+        print(_json.dumps(gather_benchmark(
+            num_windows=args.windows or 8), indent=2))
     else:
         for r in run():
             print(r)

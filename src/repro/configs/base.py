@@ -265,8 +265,27 @@ class AionConfig:
     # path never round-trips hot blocks through host memory. Cold
     # p-blocks still arrive via IOScheduler.fetch_block_host (accounted,
     # simulated-cost-charged). False restores the PR-1 host-side
-    # np.stack + single contiguous device_put.
+    # np.stack + single contiguous device_put. Only reached when
+    # ``block_pool`` is off (or as the pool's per-row fallback).
     device_stacking: bool = True
+    # persistent device block pool (core/block_pool.py): staging writes
+    # blocks INTO a preallocated [pool_slots, block_capacity(, W)] device
+    # arena (a dynamic-update-slice at a pool slot) instead of a per-block
+    # device_put, and the batched fold consumes a BLOCK TABLE of pool-slot
+    # indices — the row gather becomes one take along the pool axis
+    # (dense) / an in-kernel scalar-prefetch gather (Mosaic), with zero
+    # per-batch copies for already-resident blocks. Safe fallback: pool
+    # exhaustion degrades a block to the legacy device_put/stack path.
+    block_pool: bool = True
+    # arena capacity in blocks; rounded up to a multiple of the slot-shard
+    # count, and clamped so the arena never exceeds the device budget
+    pool_slots: int = 256
+    # overlap demand pool-fills of cold p-blocks with the fold of the
+    # already-resident shard: the executor issues PRIO_DEMAND_STAGE fills,
+    # folds the resident block table while the I/O thread stages, then
+    # folds the newly-filled slots and merges the accumulators. False
+    # restores the PR-3 behaviour (cold p-blocks read host-side).
+    pool_overlap_prefetch: bool = True
 
 
 def to_json(cfg: Any) -> str:

@@ -13,44 +13,56 @@ class: each ``advance_watermark`` gathers every newly-expired window into
 one live batch, and each ``poll`` gathers every due late re-execution
 into one late batch — live batches always run before late batches because
 the engine calls them in that order, so the rule is preserved at batch
-granularity. A batch stacks the windows' fixed-capacity blocks into
-``[rows, block_capacity, W]`` tensors (rows may be blocks of different
-windows; a slot vector maps rows back to windows) and folds everything in
-a single call of the operator's ``fold_batch`` — which reduces over
-composite ``(window_slot, key)`` segment ids through the batched
-segment-aggregate kernel. Re-execution stays a pure function of bucket
-contents, so folding N windows in one pass is bitwise-equivalent to N
-independent folds up to float associativity (parity-tested in
+granularity. Re-execution stays a pure function of bucket contents, so
+folding N windows in one pass is bitwise-equivalent to N independent
+folds up to float associativity (parity-tested in
 ``tests/test_batch_exec.py`` and ``tests/test_slot_sharding.py``).
 
-Row gathering prefers device residency: m-bucket rows that already live
-on the device are stacked with a **device concat** (``jnp.stack`` of the
-resident arrays — no host round-trip); cold p-blocks are read host-side
-through ``IOScheduler.fetch_block_host`` (accounted, and persisted reads
-pay the simulated persistent-tier cost). ``AionConfig.device_stacking``
-= False restores the PR-1 host-side ``np.stack`` + one contiguous
-``device_put``.
+Row gathering — the **block-table path** (``AionConfig.block_pool``,
+default on): blocks staged by ``core.staging`` live in a persistent
+device arena (``core.block_pool``), so a batch over already-resident
+blocks is assembled as a *table* of pool-slot indices — O(rows) Python
+ints — and the operator's ``fold_batch(..., table=)`` gathers the event
+tiles straight from the arena (an in-kernel scalar-prefetch DMA on the
+Mosaic backend, one take along the pool axis on the dense backend):
+**zero per-batch copies**. Cold p-blocks are demand-staged INTO the pool
+at ``PRIO_DEMAND_STAGE`` and that I/O **overlaps** the fold of the
+already-resident shard (``pool_overlap_prefetch``): the executor
+dispatches the resident block table, waits for the fills, folds the
+newly-filled slots as a second table, and merges the partial accumulators
+(``WindowOperator.merge_acc``). Blocks that could not be pooled (slot or
+budget exhaustion, overlap off) degrade to the legacy stacked gather.
 
-Multi-device slot sharding (``AionConfig.slot_sharding``): the placement
-step round-robins due windows onto device-local slot ranges — window i of
-a batch goes to device ``i % D`` at local slot ``i // D`` — then packs
-each device's block rows contiguously (shard-major) and pads every shard
-to a common power-of-two row count. The fold runs under a ``shard_map``
-over the slot axis; slots are disjoint, so the per-slot result gather is
-a pure concatenation with no cross-device reduction (psum-free). On a
-single-device host the placement degenerates to the unsharded layout.
+The legacy **stacked path** (``block_pool=False``, and the pooled path's
+per-row fallback) re-materializes each batch: m-bucket rows that already
+live on the device are stacked with a device concat (``jnp.stack`` —
+``AionConfig.device_stacking``; False restores the PR-1 host ``np.stack``
++ one ``device_put``) and cold p-blocks are read host-side through
+``IOScheduler.fetch_block_host`` (accounted, simulated-cost-charged).
+
+Multi-device slot sharding (``AionConfig.slot_sharding``): the unpooled
+placement round-robins due windows onto device-local slot ranges and
+packs rows shard-major padded to a common power-of-two count; the fold
+runs under a psum-free ``shard_map`` over the slot axis. The POOLED
+placement is hash-based instead (``distributed.sharding.shard_of_window``
+— the same map the staging shard hint uses), because pool slots are
+assigned at STAGING time, before any batch composition is known: placing
+a window on its hash shard is what keeps its block-table rows local to
+the device whose arena tile holds them. Rows whose pool slot lands
+outside their window's shard (stale placement, cross-range restores) fall
+back to the stacked gather rather than being misfolded.
 """
 from __future__ import annotations
 
 import time as _time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.buckets import WindowState
+from repro.core.buckets import Tier, WindowState
 from repro.core.windows import WindowId
 from repro.kernels.segment_aggregate import (
     next_pow2, pack_rows_shard_major,
@@ -97,6 +109,31 @@ def plan_slot_placement(num_windows: int, num_devices: int
     slots_per = next_pow2(-(-num_windows // num_devices))
     slot_of = [(i % num_devices) * slots_per + i // num_devices
                for i in range(num_windows)]
+    return slot_of, num_devices * slots_per, slots_per
+
+
+def plan_slot_placement_pooled(wids: List[WindowId], num_devices: int
+                               ) -> Tuple[List[int], int, int]:
+    """Hash-based placement for the pooled sharded fold.
+
+    A window's pool slots were allocated at staging time in the arena
+    range of ``shard_of_window(...)`` — placement must agree with that
+    map or every block-table row would be misplaced. Windows group by
+    their hash shard; each shard's windows take consecutive local slots,
+    padded to a common power-of-two ``slots_per``. Degenerates to the
+    identity placement on one device.
+    """
+    if num_devices <= 1:
+        return plan_slot_placement(len(wids), 1)
+    from repro.distributed.sharding import shard_of_window
+    shards = [shard_of_window(w.start, w.end, num_devices) for w in wids]
+    counts = [0] * num_devices
+    local = []
+    for s in shards:
+        local.append(counts[s])
+        counts[s] += 1
+    slots_per = next_pow2(max(counts + [1]))
+    slot_of = [s * slots_per + l for s, l in zip(shards, local)]
     return slot_of, num_devices * slots_per, slots_per
 
 
@@ -156,84 +193,23 @@ class BatchExecutor:
 
         t0 = _time.time()
 
-        # 1. snapshot every window (m-blocks consumed in place, p-blocks
-        #    read host-side — no demand staging is issued)
+        # 1. snapshot every window atomically (membership is fixed from
+        #    here on: each block folds exactly once, whatever tier it
+        #    moves to while the batch assembles)
         plans = [(it, sum(snapshot_block_partition(it.state), []))
                  for it in items]
 
-        # 2. placement: window -> global slot. Unsharded: slot i = i.
-        #    Sharded: round-robin onto device-local slot ranges so every
-        #    device owns a disjoint contiguous range (psum-free gather).
         mesh = self._slot_mesh()
         num_devices = mesh.size if mesh is not None else 1
-        slot_of, num_slots, slots_per = plan_slot_placement(
-            len(plans), num_devices)
 
-        # 3. gather block rows: (arrays, fill, slot) in plan order
-        rows: List[Tuple[Dict[str, Any], int, int]] = []
-        for i, (it, blocks) in enumerate(plans):
-            for blk in blocks:
-                if blk.fill == 0:
-                    continue
-                arrs = eng.io.fetch_block_arrays(blk)
-                if arrs is None:         # purged mid-gather
-                    continue
-                rows.append((arrs, blk.fill, slot_of[i]))
-
-        dev_t0 = _time.time()
-        ran_sharded = False
-        if rows:
-            # 4. shard-major stack via the same packing helper the parity
-            #    tests drive: rows group by owning shard and every shard
-            #    pads to a common power-of-two row count (invalid rows:
-            #    fill 0, slot = shard's base slot) so row counts divide
-            #    the mesh and the jitted fold sees O(log) distinct
-            #    shapes. num_devices == 1 degenerates to the PR-1 layout
-            #    (one group, rows padded to pow2).
-            cap = eng.aion.block_size
-            w = eng.value_width
-            per_shard, rows_per_shard = pack_rows_shard_major(
-                [slot for _, _, slot in rows], num_devices, slots_per)
-            pad_arrs = {
-                "keys": np.zeros((cap,), np.int32),
-                "values": np.zeros((cap, w), np.float32),
-            }
-            keys_rows, val_rows = [], []
-            fills: List[int] = []
-            slots: List[int] = []
-            for d, idxs in enumerate(per_shard):
-                base_slot = d * slots_per if num_devices > 1 else 0
-                for r in idxs:
-                    arrs, fill, slot = rows[r]
-                    keys_rows.append(arrs["keys"])
-                    val_rows.append(arrs["values"])
-                    fills.append(fill)
-                    slots.append(slot)
-                for _ in range(rows_per_shard - len(idxs)):
-                    keys_rows.append(pad_arrs["keys"])
-                    val_rows.append(pad_arrs["values"])
-                    fills.append(0)
-                    slots.append(base_slot)
-
-            device = getattr(eng.aion, "device_stacking", True)
-            # the batched stack carries keys + values only: no batch fold
-            # is time-dependent within a window, and stacking timestamps
-            # would force a D2H pull of every hot device-resident row
-            # (f64 on host, f32 on device — see the fold_batch contract)
-            data = {
-                "keys": self._stack(keys_rows, device, np.int32),
-                "values": self._stack(val_rows, device, np.float32),
-            }
-            results = op.run_batch(data, jnp.asarray(fills, jnp.int32),
-                                   jnp.asarray(slots, jnp.int32),
-                                   num_slots, mesh=mesh)
-            ran_sharded = mesh is not None
+        if eng.pool is not None:
+            results, slot_of, num_slots, dev_dt, gather_dt, ran_sharded = \
+                self._fold_pooled(plans, mesh, num_devices)
         else:
-            # every window empty: finalize the identity accumulator
-            results = [op.finalize(op.init_acc()) for _ in range(num_slots)]
-        dev_dt = _time.time() - dev_t0
+            results, slot_of, num_slots, dev_dt, gather_dt, ran_sharded = \
+                self._fold_stacked(plans, mesh, num_devices)
 
-        # 5. per-window bookkeeping, identical to execute_window
+        # per-window bookkeeping, identical to execute_window
         out: Dict[WindowId, Any] = {}
         for i, (it, _) in enumerate(plans):
             result = results[slot_of[i]]
@@ -251,7 +227,275 @@ class BatchExecutor:
         eng.metrics.batch_executions += 1
         eng.metrics.batched_windows += len(plans)
         eng.metrics.batch_device_seconds += dev_dt
+        eng.metrics.batch_gather_seconds += gather_dt
         eng.metrics.batch_occupancy_series.append(len(plans))
         if ran_sharded:
             eng.metrics.sharded_batch_executions += 1
         return out
+
+    def _stack_rows(self, rows, num_devices: int, slots_per: int):
+        """Stacked (data, fills, slots) tensors from (arrays, fill,
+        window_slot) rows.
+
+        Shard-major via the same packing helper the parity tests drive:
+        rows group by owning shard and every shard pads to a common
+        power-of-two row count (invalid rows: fill 0, slot = shard's
+        base slot) so row counts divide the mesh and the jitted fold
+        sees O(log) distinct shapes. ``num_devices == 1`` degenerates to
+        the PR-1 layout (one group, rows padded to pow2). The stack
+        carries keys + values only: no batch fold is time-dependent
+        within a window, and stacking timestamps would force a D2H pull
+        of every hot device-resident row (f64 on host, f32 on device —
+        see the fold_batch contract).
+        """
+        eng = self.engine
+        cap = eng.aion.block_size
+        w = eng.value_width
+        per_shard, rows_per_shard = pack_rows_shard_major(
+            [slot for _, _, slot in rows], num_devices, slots_per)
+        pad_arrs = {
+            "keys": np.zeros((cap,), np.int32),
+            "values": np.zeros((cap, w), np.float32),
+        }
+        keys_rows, val_rows = [], []
+        fills: List[int] = []
+        slots: List[int] = []
+        for d, idxs in enumerate(per_shard):
+            base_slot = d * slots_per if num_devices > 1 else 0
+            for r in idxs:
+                arrs, fill, slot = rows[r]
+                keys_rows.append(arrs["keys"])
+                val_rows.append(arrs["values"])
+                fills.append(fill)
+                slots.append(slot)
+            for _ in range(rows_per_shard - len(idxs)):
+                keys_rows.append(pad_arrs["keys"])
+                val_rows.append(pad_arrs["values"])
+                fills.append(0)
+                slots.append(base_slot)
+        device = getattr(eng.aion, "device_stacking", True)
+        data = {
+            "keys": self._stack(keys_rows, device, np.int32),
+            "values": self._stack(val_rows, device, np.float32),
+        }
+        return (data, jnp.asarray(fills, jnp.int32),
+                jnp.asarray(slots, jnp.int32))
+
+    # ----------------------------------------------------- stacked gather
+    def _fold_stacked(self, plans, mesh, num_devices):
+        """Legacy gather: re-materialize the batch as stacked tensors
+        (device concat of resident rows; host reads of cold p-blocks)."""
+        eng = self.engine
+        op = eng.operator
+        slot_of, num_slots, slots_per = plan_slot_placement(
+            len(plans), num_devices)
+
+        # gather block rows: (arrays, fill, slot) in plan order
+        g0 = _time.time()
+        rows: List[Tuple[Dict[str, Any], int, int]] = []
+        for i, (it, blocks) in enumerate(plans):
+            for blk in blocks:
+                if blk.fill == 0:
+                    continue
+                arrs = eng.io.fetch_block_arrays(blk)
+                if arrs is None:         # purged mid-gather
+                    continue
+                rows.append((arrs, blk.fill, slot_of[i]))
+
+        ran_sharded = False
+        dev_dt = 0.0
+        if rows:
+            data, fills, slots = self._stack_rows(rows, num_devices,
+                                                  slots_per)
+            gather_dt = _time.time() - g0
+            dev_t0 = _time.time()
+            results = op.run_batch(data, fills, slots, num_slots,
+                                   mesh=mesh)
+            dev_dt = _time.time() - dev_t0
+            ran_sharded = mesh is not None
+        else:
+            gather_dt = _time.time() - g0
+            # every window empty: finalize the identity accumulator
+            results = [op.finalize(op.init_acc()) for _ in range(num_slots)]
+        return results, slot_of, num_slots, dev_dt, gather_dt, ran_sharded
+
+    # ------------------------------------------------------- pooled gather
+    def _pack_table(self, rows, num_devices: int, slots_per: int):
+        """Shard-major (table, fills, slots) arrays from (block,
+        window_slot, pool_slot) rows, each shard padded to a common
+        power-of-two row count (padding: the shard's base pool slot with
+        fill 0 — in-range for the shard, invalid for the fold)."""
+        pool = self.engine.pool
+        per_shard, rows_per_shard = pack_rows_shard_major(
+            [ws for _, ws, _ in rows], num_devices, slots_per)
+        table: List[int] = []
+        fills: List[int] = []
+        slots: List[int] = []
+        for d, idxs in enumerate(per_shard):
+            base_slot = d * slots_per if num_devices > 1 else 0
+            base_pool = d * pool.slots_per_shard if num_devices > 1 else 0
+            for r in idxs:
+                blk, wslot, ps = rows[r]
+                table.append(ps)
+                fills.append(blk.fill)
+                slots.append(wslot)
+            for _ in range(rows_per_shard - len(idxs)):
+                table.append(base_pool)
+                fills.append(0)
+                slots.append(base_slot)
+        return (jnp.asarray(table, jnp.int32),
+                jnp.asarray(fills, jnp.int32),
+                jnp.asarray(slots, jnp.int32))
+
+    def _fold_pooled(self, plans, mesh, num_devices):
+        """Block-table gather over the persistent pool.
+
+        Three row classes, folded as up to three partial accumulators and
+        merged (``op.merge_acc``):
+          * resident rows — already in the arena: block table, zero-copy;
+          * cold p-blocks — demand pool-fills at PRIO_DEMAND_STAGE whose
+            I/O overlaps the resident fold; filled slots fold as a second
+            block table, the rest degrade to the stacked fallback;
+          * fallback rows — unpoolable (slot/budget exhaustion, misplaced
+            shard, legacy device_data): the stacked gather, unsharded.
+        """
+        eng = self.engine
+        op = eng.operator
+        pool = eng.pool
+        aion = eng.aion
+        use_mesh = mesh if num_devices > 1 else None
+
+        slot_of, num_slots, slots_per = plan_slot_placement_pooled(
+            [it.wid for it, _ in plans], num_devices)
+
+        g0 = _time.time()
+        gather_dt = 0.0
+        dev_dt = 0.0
+        blocks: List[Tuple[Any, int]] = []        # (block, window index)
+        for i, (it, blks) in enumerate(plans):
+            for blk in blks:
+                if blk.fill:
+                    blocks.append((blk, i))
+
+        def well_placed(ps, i):
+            return num_devices <= 1 or \
+                pool.shard_of_slot(ps) == slot_of[i] // slots_per
+
+        accs: List[Any] = []
+        ran_sharded = False
+        evs: List[Any] = []
+        cold: List[Tuple[Any, int]] = []          # (block, window index)
+        fallback: List[Tuple[Any, int]] = []      # (block, wslot)
+
+        # the whole batch runs under ONE pool pin: any fill that lands
+        # while a fold may be executing takes the functional (copy) path,
+        # which (a) keeps our snapshot references live and (b) never
+        # touches the buffer the fold is reading — a donated in-place
+        # write here would WAIT on the fold's usage hold and serialize
+        # the overlap away. Fills outside a batch (ingest, pre-staging)
+        # see no pin and write donated (O(block), in place).
+        with pool.pinned():
+            k_arena, v_arena, pslots = pool.snapshot_for(
+                [b for b, _ in blocks])
+            arena_data = {"keys": k_arena, "values": v_arena}
+
+            pooled: List[Tuple[Any, int, int]] = []  # (blk, wslot, pslot)
+            for (blk, i), ps in zip(blocks, pslots):
+                if ps is not None and well_placed(ps, i):
+                    pooled.append((blk, slot_of[i], ps))
+                elif ps is None and blk.tier != Tier.DEVICE \
+                        and aion.pool_overlap_prefetch:
+                    cold.append((blk, i))
+                else:
+                    fallback.append((blk, slot_of[i]))
+
+            # demand pool-fills for cold p-blocks: issued BEFORE the
+            # resident fold so the I/O executor stages while the device
+            # folds (the paper's demand-staging-outranks-prestaging rule,
+            # at pool granularity)
+            if cold:
+                by_window: Dict[int, List[Any]] = {}
+                for blk, i in cold:
+                    by_window.setdefault(i, []).append(blk)
+                for i, blks in by_window.items():
+                    evs.append(eng.io.request_stage(plans[i][0].state,
+                                                    blks, demand=True))
+                eng.metrics.demand_pool_fills += len(cold)
+            gather_dt += _time.time() - g0
+
+            if pooled:
+                g0 = _time.time()
+                table, fills, slots = self._pack_table(
+                    pooled, num_devices, slots_per)
+                gather_dt += _time.time() - g0
+                d0 = _time.time()
+                accs.append(op.fold_batch(arena_data, fills, slots,
+                                          num_slots, mesh=use_mesh,
+                                          table=table))
+                dev_dt += _time.time() - d0
+                ran_sharded = ran_sharded or use_mesh is not None
+                eng.metrics.pooled_rows += len(pooled)
+
+            if evs:
+                w0 = _time.time()
+                for ev in evs:
+                    ev.wait(timeout=60)
+                eng.metrics.batch_stall_seconds += _time.time() - w0
+                g0 = _time.time()
+                k2, v2, ps2 = pool.snapshot_for([b for b, _ in cold])
+                staged: List[Tuple[Any, int, int]] = []
+                for (blk, i), ps in zip(cold, ps2):
+                    if ps is not None and well_placed(ps, i):
+                        staged.append((blk, slot_of[i], ps))
+                    else:
+                        # fill failed (budget/pool exhaustion) or landed
+                        # in a foreign range: the stacked fallback reads
+                        # it (device-preferred, host-accounted)
+                        fallback.append((blk, slot_of[i]))
+                gather_dt += _time.time() - g0
+                if staged:
+                    g0 = _time.time()
+                    table, fills, slots = self._pack_table(
+                        staged, num_devices, slots_per)
+                    arena2 = {"keys": k2, "values": v2}
+                    gather_dt += _time.time() - g0
+                    d0 = _time.time()
+                    accs.append(op.fold_batch(arena2, fills, slots,
+                                              num_slots, mesh=use_mesh,
+                                              table=table))
+                    dev_dt += _time.time() - d0
+                    ran_sharded = ran_sharded or use_mesh is not None
+                    eng.metrics.pooled_rows += len(staged)
+
+        if fallback:
+            g0 = _time.time()
+            rows = []
+            for blk, wslot in fallback:
+                arrs = eng.io.fetch_block_arrays(blk)
+                if arrs is None:          # purged mid-gather
+                    continue
+                rows.append((arrs, blk.fill, wslot))
+            if rows:
+                # unsharded fold (any global slot id is valid on one
+                # device), rows pow2-padded by the shared stacker
+                data, fills, slots = self._stack_rows(rows, 1, num_slots)
+                gather_dt += _time.time() - g0
+                d0 = _time.time()
+                accs.append(op.fold_batch(data, fills, slots, num_slots,
+                                          mesh=None))
+                dev_dt += _time.time() - d0
+                eng.metrics.fallback_rows += len(rows)
+            else:
+                gather_dt += _time.time() - g0
+
+        if not accs:
+            # every window empty: finalize the identity accumulator
+            results = [op.finalize(op.init_acc()) for _ in range(num_slots)]
+        else:
+            d0 = _time.time()
+            acc = accs[0]
+            for a in accs[1:]:
+                acc = op.merge_acc(acc, a)
+            results = op.finalize_batch(acc, num_slots)
+            dev_dt += _time.time() - d0
+        return results, slot_of, num_slots, dev_dt, gather_dt, ran_sharded

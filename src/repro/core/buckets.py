@@ -47,6 +47,12 @@ class Block:
     release its own budget reservation, and a drop that races a
     committed stage must report the device bytes so the engine releases
     them — otherwise reservations leak.
+
+    With the persistent block pool (``AionConfig.block_pool``), a
+    device-resident block holds a ``pool_slot`` into the arena instead of
+    per-block ``device_data`` buffers; ``pool`` is the back-reference
+    through which destage/drop surrender the slot (exactly once — the
+    surrender happens under ``lock`` via ``pool.release_slot``).
     """
     capacity: int
     width: int
@@ -58,6 +64,12 @@ class Block:
     host_data: Optional[Dict[str, np.ndarray]] = None
     device_data: Optional[Dict[str, object]] = None
     storage_path: Optional[Path] = None
+    pool_slot: Optional[int] = None    # arena slot while device-resident
+    pool: Optional[object] = field(default=None, repr=False, compare=False)
+    # host copy counted against IOScheduler's host tier (idempotent
+    # accounting: staging keeps host copies, so destage/stage round-trips
+    # must not re-count the same bytes)
+    host_accounted: bool = False
     lock: threading.Lock = field(default_factory=threading.Lock,
                                  repr=False, compare=False)
 
@@ -125,9 +137,18 @@ class Block:
         ``dropped`` and releases its own reservation instead)."""
         with self.lock:
             self.dropped = True
-            device_bytes = self.nbytes if self.tier == Tier.DEVICE else 0
+            # pooled blocks never held a per-block reservation (the
+            # arena's bytes are charged once, at pool construction), so
+            # only a legacy device_put block reports bytes to release
+            device_bytes = self.nbytes if (
+                self.tier == Tier.DEVICE and self.pool_slot is None) else 0
             self.host_data = None
             self.device_data = None
+            if self.pool is not None:
+                # surrender the arena slot exactly once (an in-flight
+                # stage that commits after this sees ``dropped`` and
+                # frees the slot it allocated instead)
+                self.pool.release_slot(self)
             if self.storage_path is not None and self.storage_path.exists():
                 os.unlink(self.storage_path)
             self.storage_path = None

@@ -68,6 +68,15 @@ class EngineMetrics:
     # device passes that ran slot-sharded across a multi-device mesh
     sharded_batch_executions: int = 0
     batch_device_seconds: float = 0.0
+    # batch assembly outside the fold call (row stacking / table build)
+    batch_gather_seconds: float = 0.0
+    # waiting on overlapped demand pool-fills (I/O the fold hid behind)
+    batch_stall_seconds: float = 0.0
+    # block-table rows folded straight from the pool arena vs rows that
+    # degraded to the stacked gather; demand fills issued by the executor
+    pooled_rows: int = 0
+    fallback_rows: int = 0
+    demand_pool_fills: int = 0
     batch_occupancy_series: List[int] = field(default_factory=list)
     device_bytes_series: List[Tuple[float, int]] = field(default_factory=list)
     host_bytes_series: List[Tuple[float, int]] = field(default_factory=list)
@@ -119,11 +128,48 @@ class StreamEngine:
         self.operator = operator
         self.value_width = value_width
         self.budget = MemoryBudget(device_budget_bytes)
+        # persistent device block pool: staging becomes arena fills and
+        # the batched fold consumes block tables (zero-copy gather). The
+        # pool shards its slot ranges to the slot mesh so a window's
+        # arena rows live on the device that folds them. Only built when
+        # the batched path can actually consume block tables — per-window
+        # engines (batching off, or a no-contract operator like
+        # percentile) keep the legacy device_data fast path. The arena's
+        # bytes are reserved from the device budget up front; pooled
+        # fills then cost a slot, not a second reservation.
+        self.pool = None
+        if self.aion.block_pool and self.aion.batched_execution \
+                and operator.supports_batch:
+            from repro.core.block_pool import DeviceBlockPool
+            shards = 1
+            if self.aion.slot_sharding:
+                from repro.distributed.sharding import make_slot_mesh
+                m = make_slot_mesh(self.aion.slot_shard_devices,
+                                   self.aion.slot_shard_axis)
+                shards = m.size if m is not None else 1
+            # the arena may take at most HALF the budget: the legacy
+            # per-block path keeps headroom, and utilization-driven
+            # policies (GlobalMemoryPolicy's moderate/severe thresholds)
+            # can always get below their lines by destaging per-block
+            # reservations — an arena sized to the full budget would pin
+            # utilization at 100% forever (destaging a pooled block
+            # frees a slot, not budget bytes)
+            pool = DeviceBlockPool(
+                self.aion.pool_slots, self.aion.block_size, value_width,
+                num_shards=shards,
+                max_arena_bytes=device_budget_bytes // 2)
+            if pool.pool_slots > 0 \
+                    and self.budget.try_reserve(pool.arena_bytes):
+                self.pool = pool
+            # else: a budget too small to back even one slot per shard
+            # within the half-budget cap — degrade to the legacy
+            # per-block path
         self.io = IOScheduler(
             self.budget, sequential_io=sequential_io,
             chunk_blocks=chunk_blocks, spill_dir=spill_dir,
             host_budget_bytes=host_budget_bytes,
-            simulated_seconds_per_byte=simulated_seconds_per_byte)
+            simulated_seconds_per_byte=simulated_seconds_per_byte,
+            pool=self.pool)
         self.policy = policy or StandardPolicy()
         self.cleanup = cleanup or PredictiveCleanup(
             coverage=self.aion.cleanup_coverage,
@@ -267,29 +313,25 @@ class StreamEngine:
                                                    demand=True)
 
         acc = self.operator.init_acc()
-        # pass 1: blocks already on device
+        # pass 1: blocks already on device (fetch_block_arrays prefers
+        # device residency — per-block device_data or the pool arena —
+        # and falls back to the accounted host read; None = purged)
         for blk in m_snapshot:
-            if blk.device_data is not None:
-                acc = self.operator.fold(acc, blk.device_data, blk.fill)
-            else:
-                hd = self.io.fetch_block_host(blk)
-                if hd is None:
-                    continue                    # purged mid-execution
-                acc = self.operator.fold(acc, hd, blk.fill)
-        # pass 2: blocks arriving from the p-bucket
+            data = self.io.fetch_block_arrays(blk)
+            if data is None:
+                continue                        # purged mid-execution
+            acc = self.operator.fold(acc, data, blk.fill)
+        # pass 2: blocks arriving from the p-bucket (staging that could
+        # not reserve budget leaves them host-side; same fetch logic)
         if stage_done is not None:
             w0 = _time.time()
             stage_done.wait(timeout=60)
             stall += max(_time.time() - w0 - 0.0, 0.0)
         for blk in p_blocks:
-            if blk.device_data is not None:
-                acc = self.operator.fold(acc, blk.device_data, blk.fill)
-            else:
-                # staging could not reserve budget: fold host-side copy
-                hd = self.io.fetch_block_host(blk)
-                if hd is None:
-                    continue                    # purged mid-execution
-                acc = self.operator.fold(acc, hd, blk.fill)
+            data = self.io.fetch_block_arrays(blk)
+            if data is None:
+                continue                        # purged mid-execution
+            acc = self.operator.fold(acc, data, blk.fill)
         if p_blocks and staged_events:
             self.prestage.cost.observe(_time.time() - stage_t0,
                                        staged_events)
@@ -467,9 +509,17 @@ class StreamEngine:
         if dd is not None:
             return {k: np.asarray(v).tolist() for k, v in dd.items()}
         if b.storage_path is not None:
+            # checked BEFORE the pool: a spilled copy carries the real
+            # timestamps, which the arena does not
             with np.load(b.storage_path) as z:
                 return {k: z[k].tolist()
                         for k in ("keys", "timestamps", "values")}
+        if b.pool is not None and b.pool_slot is not None:
+            # pooled blocks normally keep their host copy; this covers a
+            # defensively-rebuilt one (timestamps restore as zeros)
+            d = b.pool.read_host(b)
+            if d is not None:
+                return {k: np.asarray(v).tolist() for k, v in d.items()}
         return {}
 
     def checkpoint_state(self) -> Dict[str, Any]:

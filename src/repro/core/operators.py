@@ -17,16 +17,21 @@ Batched contract: operators may additionally implement ``fold_batch`` /
 ``finalize_batch`` — a vectorized path that folds the blocks of MANY
 windows in one device pass by reducing over composite ``(window_slot,
 key)`` segment ids through the batched segment-aggregate kernel.
-``average``, ``stock``, and ``lrb`` implement it; ``bigrams`` and the
-blocking ``percentile`` fall back to the per-window reference path.
+``average``, ``bigrams``, ``stock``, and ``lrb`` implement it; the
+blocking ``percentile`` falls back to the per-window reference path.
 
-  fold_batch(data, fills, slots, num_slots, mesh=None) -> acc
-      data   {"keys": [B, cap] i32, "values": [B, cap, W] f32}
-             (B stacked blocks, padded). Timestamps are deliberately NOT
-             stacked: no batch fold is time-dependent within a window,
-             and stacking them would pull every hot device-resident row
-             back to the host (f64 host-side, f32 once staged). A future
-             time-aware operator must extend the executor's gather.
+  fold_batch(data, fills, slots, num_slots, mesh=None, table=None) -> acc
+      data   table is None: {"keys": [B, cap] i32, "values": [B, cap, W]
+             f32} — B stacked blocks, padded (the legacy device-concat /
+             host-stack gather).
+             table given: the persistent pool ARENAS — {"keys":
+             [pool_slots, cap] i32, "values": [pool_slots, cap, W] f32};
+             rows are *referenced* by the table, never stacked.
+             Timestamps are deliberately NOT part of either layout: no
+             batch fold is time-dependent within a window, and carrying
+             them would pull every hot device-resident row back to the
+             host (f64 host-side, f32 once staged). A future time-aware
+             operator must extend the executor's gather.
       fills  [B] i32   valid events per block (ragged fills)
       slots  [B] i32   block row -> window slot (several blocks of one
                        window share a slot)
@@ -34,9 +39,21 @@ blocking ``percentile`` fall back to the per-window reference path.
              rows arrive shard-major, slots partition across devices, and
              the kernel gathers per-slot tiles with no cross-device
              reduction (see kernels.segment_aggregate)
+      table  optional [B] i32 pool-slot indices (the block-table path):
+             the fold gathers event tiles straight from the arena —
+             in-kernel on the Mosaic backend, one take along the pool
+             axis on the dense backend (zero per-batch host copies)
   finalize_batch(acc, num_slots) -> [per-window result] * num_slots
       element i is equal (up to float assoc.) to the per-window
       ``finalize(fold(...))`` over slot i's blocks.
+  merge_acc(a, b) -> acc
+      combines two partial batch accumulators over the SAME slot layout —
+      what lets the executor fold the already-resident block table while
+      demand pool-fills are in flight, then fold the newly-filled slots
+      and merge. Default (``default_merge_acc``): dict values merge by
+      key — 'min' -> elementwise minimum, 'max' -> maximum, everything
+      else adds; correct for every built-in accumulator, override via
+      the ``merge`` field otherwise.
 """
 from __future__ import annotations
 
@@ -47,6 +64,22 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def default_merge_acc(a: Dict[str, Any], b: Dict[str, Any]
+                      ) -> Dict[str, Any]:
+    """Combine two partial batch accumulators (dicts of per-slot arrays):
+    'min' -> elementwise minimum, 'max' -> maximum, everything else adds.
+    Every built-in batch accumulator conforms (sums, counts, extrema)."""
+    out = {}
+    for k in a:
+        if k == "min":
+            out[k] = jnp.minimum(a[k], b[k])
+        elif k == "max":
+            out[k] = jnp.maximum(a[k], b[k])
+        else:
+            out[k] = a[k] + b[k]
+    return out
 
 
 @dataclass
@@ -60,11 +93,19 @@ class WindowOperator:
     # the engine falls back to per-window execution for this operator
     fold_batch: Optional[Callable[..., Any]] = None
     finalize_batch: Optional[Callable[[Any, int], list]] = None
+    # partial-accumulator combine for the overlapped pooled fold; None ->
+    # ``default_merge_acc`` (dict accs merging by key semantics)
+    merge: Optional[Callable[[Any, Any], Any]] = None
 
     @property
     def supports_batch(self) -> bool:
         return self.fold_batch is not None and \
             self.finalize_batch is not None
+
+    def merge_acc(self, a: Any, b: Any) -> Any:
+        if self.merge is not None:
+            return self.merge(a, b)
+        return default_merge_acc(a, b)
 
     def run(self, blocks, fills) -> Any:
         """Reference path: fold over (block_data, fill) pairs."""
@@ -74,13 +115,15 @@ class WindowOperator:
         return self.finalize(acc)
 
     def run_batch(self, data, fills, slots, num_slots: int,
-                  mesh=None) -> list:
-        """Batched path: one device pass over stacked blocks of many
-        windows; returns one finalized result per slot. ``mesh`` routes
-        the fold through the slot-sharded multi-device kernel (the
-        contract requires fold_batch to accept it, default None)."""
+                  mesh=None, table=None) -> list:
+        """Batched path: one device pass over the blocks of many windows;
+        returns one finalized result per slot. ``mesh`` routes the fold
+        through the slot-sharded multi-device kernel; ``table`` switches
+        ``data`` from stacked rows to the pool arenas (the contract
+        requires fold_batch to accept both, defaults None)."""
         assert self.supports_batch
-        acc = self.fold_batch(data, fills, slots, num_slots, mesh=mesh)
+        acc = self.fold_batch(data, fills, slots, num_slots, mesh=mesh,
+                              table=table)
         return self.finalize_batch(acc, num_slots)
 
 
@@ -106,7 +149,9 @@ def _per_slot_finalize(finalize: Callable[[Any], Any]):
 # ------------------------------------------------------------------ average
 
 def make_average(block_capacity: int, width: int) -> WindowOperator:
-    from repro.kernels import segment_aggregate_batched
+    from repro.kernels import (
+        segment_aggregate_batched, segment_aggregate_block_table,
+    )
 
     def init_acc():
         return {"sum": jnp.zeros((), jnp.float32),
@@ -123,15 +168,25 @@ def make_average(block_capacity: int, width: int) -> WindowOperator:
         return float(acc["sum"] / jnp.maximum(acc["count"], 1.0))
 
     @partial(jax.jit, static_argnames=("num_slots", "mesh"))
-    def fold_batch(data, fills, slots, num_slots, mesh=None):
+    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None):
         cap = data["values"].shape[1]
         valid = _batch_valid(cap, jnp.asarray(fills))
+        slots = jnp.asarray(slots, jnp.int32)
         # single segment per window: the composite id IS the slot
-        out = segment_aggregate_batched(
-            jnp.asarray(data["values"][:, :, :1], jnp.float32),
-            jnp.zeros((data["values"].shape[0], cap), jnp.int32), 1,
-            valid=valid, slot_ids=jnp.asarray(slots, jnp.int32),
-            num_slots=num_slots, stats=("sum", "count"), mesh=mesh)
+        if table is not None:
+            # full arena + num_cols: the width-1 selection happens after
+            # the in-launch gather, never as an arena-wide slice copy
+            out = segment_aggregate_block_table(
+                data["values"],
+                jnp.zeros((table.shape[0], cap), jnp.int32), table, 1,
+                valid=valid, slot_ids=slots, num_slots=num_slots,
+                stats=("sum", "count"), mesh=mesh, num_cols=1)
+        else:
+            out = segment_aggregate_batched(
+                jnp.asarray(data["values"][:, :, :1], jnp.float32),
+                jnp.zeros((data["values"].shape[0], cap), jnp.int32), 1,
+                valid=valid, slot_ids=slots,
+                num_slots=num_slots, stats=("sum", "count"), mesh=mesh)
         return {"sum": out["sum"][:, 0, 0], "count": out["count"][:, 0]}
 
     def finalize_batch(acc, num_slots):
@@ -146,11 +201,75 @@ def make_average(block_capacity: int, width: int) -> WindowOperator:
 
 # ------------------------------------------------------------------ bigrams
 
+def _bigram_segment_count(ids, pval, slots, num_slots: int, vocab: int,
+                          mesh) -> jnp.ndarray:
+    """Composite (window_slot, pair) segment COUNT via one scatter —
+    the big-vocab bigram path, where the one-hot matmul's
+    [rows, num_slots * vocab^2] operand is memory-infeasible.
+
+    ids [B, P] local pair ids (a * vocab + b), pval [B, P] pair validity,
+    slots [B] window slots -> [num_slots, vocab^2] counts. With a mesh
+    the scatter shards exactly like the dense kernel: rows arrive
+    shard-major, each device rewrites its slots to shard-local indices
+    and scatters into its own [slots_per * vocab^2] tile — psum-free
+    (slots are disjoint), so sharded bigram batches genuinely
+    distribute rather than silently falling back to one device.
+    """
+    v2 = vocab * vocab
+
+    def flat_count(ids_, pv_, sl_, ns):
+        total = ns * v2
+        sid = (sl_.astype(jnp.int32)[:, None] * v2 + ids_).reshape(-1)
+        sid = jnp.where(pv_.reshape(-1), sid, total)      # park invalid
+        return jax.ops.segment_sum(
+            pv_.reshape(-1).astype(jnp.float32), sid,
+            num_segments=total + 1)[:total].reshape(ns, v2)
+
+    if mesh is None or mesh.size <= 1:
+        return flat_count(ids, pval, slots, num_slots)
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import shard_map_compat
+    axis = mesh.axis_names[0]
+    num_devices = mesh.shape[axis]
+    if ids.shape[0] % num_devices or num_slots % num_devices:
+        # rows/slots that don't divide the mesh (callers outside the
+        # executor's packed layout): correct unsharded fallback
+        return flat_count(ids, pval, slots, num_slots)
+    slots_per = num_slots // num_devices
+
+    def shard_fn(ids_, pv_, sl_):
+        base = jax.lax.axis_index(axis) * slots_per
+        local = sl_.astype(jnp.int32) - base
+        own = (local >= 0) & (local < slots_per)
+        local = jnp.where(own, local, 0)
+        return flat_count(ids_, pv_ & own[:, None], local, slots_per)
+
+    f = shard_map_compat(shard_fn, mesh,
+                         (P(axis, None), P(axis, None), P(axis)),
+                         P(axis, None))
+    return f(ids, pval.astype(bool), slots)
+
+
 def make_bigrams(block_capacity: int, width: int,
                  vocab: int = 256) -> WindowOperator:
     """Token payloads: each event's value row is a mini-document of
     ``width`` token ids; counts a dense [vocab, vocab] co-occurrence —
-    deliberately compute-heavy like the paper's bigrams workload."""
+    deliberately compute-heavy like the paper's bigrams workload.
+
+    Batch contract: every adjacent token pair is an "event" with the
+    composite segment id ``(window_slot, a * vocab + b)`` and the bigram
+    table is the per-slot segment COUNT — so bigrams ride the batched /
+    pooled path through the same count-only kernel as the keyed
+    operators (block-diagonal over slots: a pair only lands in its own
+    window's [vocab, vocab] tile). The one-hot formulation materializes
+    ``[rows, num_slots * vocab^2]``, which is only feasible for small
+    vocab x slot products; above ``_BIGRAM_ONEHOT_LIMIT`` columns the
+    fold switches to an equivalent one-launch ``segment_sum`` scatter
+    (same composite ids, no one-hot temps).
+    """
+    from repro.kernels import segment_aggregate_batched
+
+    _BIGRAM_ONEHOT_LIMIT = 8192
 
     def init_acc():
         return jnp.zeros((vocab, vocab), jnp.float32)
@@ -158,21 +277,57 @@ def make_bigrams(block_capacity: int, width: int,
     @jax.jit
     def fold(acc, data, fill):
         toks = jnp.abs(data["values"]).astype(jnp.int32) % vocab  # [n, w]
-        mask = _valid_mask(toks.shape[0], fill)[:, None]
-        a = jnp.where(mask[:, :1] & jnp.ones_like(toks[:, :-1], bool),
-                      toks[:, :-1], 0)
-        b = jnp.where(mask[:, :1] & jnp.ones_like(toks[:, 1:], bool),
-                      toks[:, 1:], 0)
-        onehot_a = jax.nn.one_hot(a, vocab, dtype=jnp.float32)   # [n,w-1,V]
-        onehot_b = jax.nn.one_hot(b, vocab, dtype=jnp.float32)
+        mask = _valid_mask(toks.shape[0], fill)
+        onehot_a = jax.nn.one_hot(toks[:, :-1], vocab,
+                                  dtype=jnp.float32)             # [n,w-1,V]
+        # masking one side of the product suffices: an invalid row's
+        # pairs contribute nothing anywhere (previously they collapsed
+        # onto (0, 0) and were phantom-counted)
+        onehot_a = onehot_a * mask[:, None, None]
+        onehot_b = jax.nn.one_hot(toks[:, 1:], vocab, dtype=jnp.float32)
         contrib = jnp.einsum("nwa,nwb->ab", onehot_a, onehot_b)
-        contrib = contrib * (jnp.sum(mask) > 0)
         return acc + contrib
 
     def finalize(acc):
         return np.asarray(acc)
 
-    return WindowOperator("bigrams", False, init_acc, fold, finalize)
+    @partial(jax.jit, static_argnames=("num_slots", "mesh"))
+    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None):
+        vals = data["values"]
+        if table is not None:
+            # pool gather: one take along the arena's pool axis (the
+            # pair ids are derived values, so unlike the keyed folds the
+            # tokens cannot be gathered in-kernel)
+            vals = jnp.take(vals, table, axis=0)
+        b, cap, w = vals.shape
+        slots = jnp.asarray(slots, jnp.int32)
+        if w < 2:
+            return {"pairs": jnp.zeros((num_slots, vocab, vocab),
+                                       jnp.float32)}
+        toks = jnp.abs(vals).astype(jnp.int32) % vocab        # [B, cap, w]
+        pair = toks[:, :, :-1] * vocab + toks[:, :, 1:]       # [B, cap, w-1]
+        valid = _batch_valid(cap, jnp.asarray(fills))         # [B, cap]
+        pvalid = jnp.broadcast_to(valid[:, :, None], pair.shape)
+        ids = pair.reshape(b, cap * (w - 1))
+        pval = pvalid.reshape(b, cap * (w - 1))
+        if num_slots * vocab * vocab <= _BIGRAM_ONEHOT_LIMIT:
+            ones = jnp.ones((b, cap * (w - 1), 1), jnp.float32)
+            out = segment_aggregate_batched(
+                ones, ids, vocab * vocab, valid=pval, slot_ids=slots,
+                num_slots=num_slots, stats=("count",), mesh=mesh)
+            cnt = out["count"]
+        else:
+            cnt = _bigram_segment_count(ids, pval, slots, num_slots,
+                                        vocab, mesh)
+        return {"pairs": cnt.reshape(num_slots, vocab, vocab)}
+
+    def finalize_batch(acc, num_slots):
+        pairs = np.asarray(acc["pairs"])
+        return [pairs[i] for i in range(num_slots)]
+
+    return WindowOperator("bigrams", False, init_acc, fold, finalize,
+                          fold_batch=fold_batch,
+                          finalize_batch=finalize_batch)
 
 
 # -------------------------------------------------------------------- stock
@@ -234,17 +389,32 @@ def make_stock(block_capacity: int, width: int,
             alerts = (mx - mn) / np.where(mn > 0, mn, np.inf) >= 0.05
         return {"mean": mean, "min": mn, "max": mx, "alerts": alerts}
 
-    from repro.kernels import segment_aggregate_batched
+    from repro.kernels import (
+        segment_aggregate_batched, segment_aggregate_block_table,
+    )
 
     @partial(jax.jit, static_argnames=("num_slots", "mesh"))
-    def fold_batch(data, fills, slots, num_slots, mesh=None):
+    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None):
         cap = data["values"].shape[1]
         valid = _batch_valid(cap, jnp.asarray(fills))
-        keys = jnp.asarray(data["keys"], jnp.int32) % num_keys
-        out = segment_aggregate_batched(
-            jnp.asarray(data["values"][:, :, :1], jnp.float32), keys,
-            num_keys, valid=valid, slot_ids=jnp.asarray(slots, jnp.int32),
-            num_slots=num_slots, mesh=mesh)
+        slots = jnp.asarray(slots, jnp.int32)
+        if table is not None:
+            # keys gather cheaply via one take (int32, needed to derive
+            # segment ids); the fat value tiles stay in the arena and are
+            # gathered inside the kernel launch (num_cols selects the
+            # price column post-gather — no arena-wide slice copy)
+            keys = jnp.take(jnp.asarray(data["keys"], jnp.int32), table,
+                            axis=0) % num_keys
+            out = segment_aggregate_block_table(
+                data["values"], keys,
+                table, num_keys, valid=valid, slot_ids=slots,
+                num_slots=num_slots, mesh=mesh, num_cols=1)
+        else:
+            keys = jnp.asarray(data["keys"], jnp.int32) % num_keys
+            out = segment_aggregate_batched(
+                jnp.asarray(data["values"][:, :, :1], jnp.float32), keys,
+                num_keys, valid=valid, slot_ids=slots,
+                num_slots=num_slots, mesh=mesh)
         return {"min": out["min"][:, :, 0], "max": out["max"][:, :, 0],
                 "sum": out["sum"][:, :, 0], "count": out["count"]}
 
@@ -294,11 +464,18 @@ def make_lrb(block_capacity: int, width: int,
     from repro.kernels import segment_aggregate_batched
 
     @partial(jax.jit, static_argnames=("num_slots", "mesh"))
-    def fold_batch(data, fills, slots, num_slots, mesh=None):
-        cap = data["values"].shape[1]
+    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None):
+        keys, values = data["keys"], data["values"]
+        if table is not None:
+            # the fold consumes DERIVED values ([speed, stopped]), so the
+            # pool gather is one take along the arena's pool axis per
+            # tensor — still a single fused gather op, not O(rows) concats
+            keys = jnp.take(jnp.asarray(keys, jnp.int32), table, axis=0)
+            values = jnp.take(values, table, axis=0)
+        cap = values.shape[1]
         valid = _batch_valid(cap, jnp.asarray(fills))
-        seg = jnp.asarray(data["keys"], jnp.int32) % num_segments
-        speed = jnp.asarray(data["values"][:, :, 0], jnp.float32)
+        seg = jnp.asarray(keys, jnp.int32) % num_segments
+        speed = jnp.asarray(values[:, :, 0], jnp.float32)
         stopped = (valid & (speed <= 1e-3)).astype(jnp.float32)
         # width-2 payload: the segment-sum of [speed, stopped] yields both
         # speed_sum and the stopped-vehicle count in one kernel pass

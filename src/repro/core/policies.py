@@ -64,9 +64,11 @@ class StandardPolicy(TransferPolicy):
             io.request_late_write(state, new_blocks)    # straight to p
             return
         # active window: stage new blocks into the m-bucket while there is
-        # budget; once full, subsequent blocks stay host-side (redirect)
+        # budget; once full, subsequent blocks stay host-side (redirect).
+        # The shard hint keeps pooled slots in the window's arena range.
+        shard = io.shard_of(state)
         for blk in new_blocks:
-            if not io.stage_block_sync(blk):
+            if not io.stage_block_sync(blk, shard=shard):
                 break
 
     def on_expiry(self, state, io, now):
@@ -143,8 +145,9 @@ class InMemoryPolicy(TransferPolicy):
     name: str = "in_memory_baseline"
 
     def on_append(self, state, new_blocks, io, late, now):
+        shard = io.shard_of(state)
         for blk in new_blocks:
-            if not io.stage_block_sync(blk):
+            if not io.stage_block_sync(blk, shard=shard):
                 raise EngineOOM(
                     f"in-memory baseline exhausted device budget "
                     f"({io.budget.used_bytes}/{io.budget.capacity_bytes} B)")

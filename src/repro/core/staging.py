@@ -19,10 +19,11 @@ import heapq
 import itertools
 import threading
 import time
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -56,25 +57,32 @@ class IOScheduler:
     def __init__(self, budget: MemoryBudget, *, sequential_io: bool = True,
                  chunk_blocks: int = 4, spill_dir: Optional[Path] = None,
                  host_budget_bytes: Optional[int] = None,
-                 simulated_seconds_per_byte: float = 0.0):
+                 simulated_seconds_per_byte: float = 0.0,
+                 pool=None):
         self.budget = budget
         self.sequential_io = sequential_io
         self.chunk_blocks = max(chunk_blocks, 1)
         self.spill_dir = spill_dir
         self.host_budget_bytes = host_budget_bytes
         self.sim_spb = simulated_seconds_per_byte
+        # persistent device block pool (core/block_pool.py); None keeps
+        # the legacy per-block device_put staging path
+        self.pool = pool
         self._seq = itertools.count()
         self._queue: List[_Task] = []
         self._cv = threading.Condition()
         self._stop = False
+        self._inflight = 0                    # tasks mid-run (both modes)
         self.stats = {
             "staged_blocks": 0, "destaged_blocks": 0, "late_write_blocks": 0,
             "stage_seconds": 0.0, "destage_seconds": 0.0,
             "stage_events": 0, "simulated_io_seconds": 0.0,
-            "preemptions": 0,
+            "preemptions": 0, "pool_fills": 0, "pool_fallbacks": 0,
         }
         self._host_bytes = 0
-        self._host_lru: List[Block] = []      # spill candidates, cold first
+        # spill candidates, cold first (deque: the spill loop pops the
+        # head, O(1) instead of list.pop(0)'s O(n))
+        self._host_lru: Deque[Block] = deque()
         # guards _host_bytes/_host_lru: both the executor thread and the
         # engine main thread (sync stage calls, demand host reads) account
         # here. Ordering: block.lock may be held when taking _host_lock,
@@ -93,10 +101,18 @@ class IOScheduler:
     def submit(self, priority: int, fn: Callable) -> threading.Event:
         if self._pool is not None:                     # no-sqntl-io ablation
             ev = threading.Event()
+            with self._cv:
+                self._inflight += 1
 
             def wrap():
-                fn()
-                ev.set()
+                try:
+                    fn()
+                finally:
+                    ev.set()
+                    with self._cv:
+                        self._inflight -= 1
+                        if not self._inflight:
+                            self._cv.notify_all()
             self._pool.submit(wrap)
             return ev
         task = _Task(priority, next(self._seq), fn)
@@ -109,28 +125,43 @@ class IOScheduler:
         while True:
             with self._cv:
                 while not self._queue and not self._stop:
-                    self._cv.wait(timeout=0.1)
+                    self._cv.wait(timeout=1.0)
                 if self._stop and not self._queue:
+                    self._cv.notify_all()
                     return
                 task = heapq.heappop(self._queue)
+                self._inflight += 1
             try:
                 task.fn()
             except Exception:                      # never kill the executor
                 self.stats["errors"] = self.stats.get("errors", 0) + 1
             finally:
                 task.done.set()
+                with self._cv:
+                    self._inflight -= 1
+                    if not self._queue and not self._inflight:
+                        self._cv.notify_all()      # wake drain() waiters
 
     def has_higher_priority_pending(self, priority: int) -> bool:
         with self._cv:
             return bool(self._queue) and self._queue[0].priority < priority
 
     def drain(self, timeout: float = 30.0) -> None:
+        """Block until the queue is empty and no task is mid-run — in
+        BOTH modes (the thread-pool ablation tracks in-flight tasks
+        through the same counter).
+
+        Waits on the executor's condition variable — workers notify when
+        the last task finishes — instead of the old 1 ms sleep-poll loop
+        (which burned a syscall per millisecond for the whole drain and
+        could return while a task was still executing)."""
         deadline = time.time() + timeout
-        while time.time() < deadline:
-            with self._cv:
-                if not self._queue:
+        with self._cv:
+            while self._queue or self._inflight:
+                remaining = deadline - time.time()
+                if remaining <= 0:
                     return
-            time.sleep(0.001)
+                self._cv.wait(timeout=remaining)
 
     def shutdown(self) -> None:
         self._stop = True
@@ -152,41 +183,84 @@ class IOScheduler:
             with self._sim_lock:              # single channel: threads queue
                 time.sleep(dt)
 
-    def stage_block_sync(self, block: Block) -> bool:
-        """p->m: move one block to device. Returns False if budget full."""
+    def stage_block_sync(self, block: Block,
+                         shard: Optional[int] = None) -> bool:
+        """p->m: move one block to device. Returns False if budget full.
+
+        With a block pool the transfer is an arena fill: allocate a pool
+        slot (state free -> filling, in ``shard``'s range when the pooled
+        fold is sharded) and dynamic-update-slice the block's keys/values
+        into the arena (filling -> resident). A pooled fill costs the
+        slot — its bytes were reserved once, at arena construction — so
+        there is no per-block budget round-trip. Pool-range exhaustion
+        falls back to the legacy per-block ``device_put`` (which DOES
+        reserve) — the block is still device-resident, it just rides the
+        stacked gather instead of the block table.
+        """
         if block.tier == Tier.DEVICE:
             return True
-        if not self.budget.try_reserve(block.nbytes):
+        slot = None
+        if self.pool is not None and block.capacity == self.pool.capacity \
+                and block.width == self.pool.width:
+            slot = self.pool.alloc(shard)
+            if slot is None:
+                self.stats["pool_fallbacks"] += 1
+        reserved = False
+        if slot is None:
+            if not self.budget.try_reserve(block.nbytes):
+                return False
+            reserved = True
+
+        def fail() -> bool:
+            if slot is not None:
+                self.pool.free(slot)           # never attached to the block
+            if reserved:
+                self.budget.release(block.nbytes)
             return False
+
         t0 = time.time()
         if block.tier == Tier.STORAGE:
             # load under the block lock: a concurrent purge unlinks the
-            # .npz and would otherwise strand the reservation we hold
+            # .npz and would otherwise strand the slot/reservation we hold
             with block.lock:
                 if block.dropped or block.storage_path is None:
-                    self.budget.release(block.nbytes)
-                    return False
+                    return fail()
                 block.as_event_batch()                # load from file
-                with self._host_lock:
-                    self._host_bytes += block.nbytes
+                self._account_host(block)
         host_data = block.host_data
         if host_data is None:
-            # block was purged (predictive cleanup) while this stage request
-            # was queued — drop the reservation and skip
-            self.budget.release(block.nbytes)
-            return False
-        device_data = {
-            k: jax.device_put(v) for k, v in host_data.items()}
-        for v in device_data.values():
-            v.block_until_ready()
+            # block was purged (predictive cleanup) while this stage
+            # request was queued — surrender the slot/reservation and skip
+            return fail()
+
+        device_data = None
+        if slot is None:
+            device_data = {
+                k: jax.device_put(v) for k, v in host_data.items()}
+            for v in device_data.values():
+                v.block_until_ready()
         # commit under the block lock: if predictive cleanup dropped the
-        # block while the transfer was in flight, the reservation is ours
-        # to release (the purge only accounts blocks ALREADY on device)
+        # block while the transfer was in flight, the slot/reservation is
+        # ours to surrender (the purge only accounts blocks ALREADY on
+        # device)
         with block.lock:
             if block.dropped:
-                self.budget.release(block.nbytes)
-                return False
-            block.device_data = device_data
+                return fail()
+            if block.tier == Tier.DEVICE:
+                # a concurrent stager (prestage racing a demand stage on
+                # the thread-pool ablation) committed first: surrender
+                # our duplicate slot/reservation — overwriting would
+                # orphan the winner's slot (or double-charge the budget)
+                fail()
+                return True
+            if slot is not None:
+                # arena write + slot attach, from the host arrays read
+                # above (not block.host_data — a racing spill may have
+                # nulled it since)
+                self.pool.commit(block, slot, host_data)
+                self.stats["pool_fills"] += 1
+            else:
+                block.device_data = device_data
             block.tier = Tier.DEVICE
         if block.persisted:       # reads from the persistent tier pay I/O;
             self._simulate_io(block.nbytes)   # fresh ingest is memory-direct
@@ -203,25 +277,58 @@ class IOScheduler:
             if block.tier != Tier.DEVICE or block.dropped:
                 # dropped: the purge already released the device bytes
                 return
-            if block.host_data is None and block.device_data is not None:
-                block.host_data = {
-                    k: np.asarray(v) for k, v in block.device_data.items()}
+            was_pooled = block.pool_slot is not None
+            if block.host_data is None:
+                if block.device_data is not None:
+                    block.host_data = {
+                        k: np.asarray(v)
+                        for k, v in block.device_data.items()}
+                elif block.storage_path is not None:
+                    # a racing spill wrote the REAL arrays (incl.
+                    # timestamps, which the arena does not carry) to
+                    # storage; prefer them over a pool read that would
+                    # fabricate zero timestamps and later overwrite the
+                    # genuine ones on re-spill
+                    block._load_from_storage()
+                elif was_pooled:
+                    block.host_data = self.pool.read_host(block)
+            if was_pooled:
+                # resident -> destaged: the slot returns to the free list
+                # (the slot IS the pooled block's device accounting — no
+                # budget release, the arena reservation is permanent)
+                self.pool.release_slot(block)
             block.device_data = None
             block.tier = Tier.HOST
             block.persisted = True
-        with self._host_lock:
-            self._host_bytes += block.nbytes
-        self.budget.release(block.nbytes)
+        self._account_host(block)
+        if not was_pooled:
+            self.budget.release(block.nbytes)
         self._simulate_io(block.nbytes)
         self.stats["destaged_blocks"] += 1
         self.stats["destage_seconds"] += time.time() - t0
-        self.track_host_block(block)
         self._maybe_spill()
+
+    def _account_host(self, block: Block) -> None:
+        """Idempotent host-tier accounting: count a block's host copy
+        once and register it as a spill candidate once. Staging keeps
+        host copies resident, so a destage/stage/destage round-trip (the
+        pooled cold path does one per re-execution) must not re-count
+        the same bytes or duplicate the LRU entry; the flag resets when
+        a spill actually evicts the copy. A re-destaged block keeps its
+        original LRU position (no O(n) refresh — a stale-cold entry just
+        spills early, which is safe)."""
+        with self._host_lock:
+            if block.host_accounted:
+                return
+            block.host_accounted = True
+            self._host_bytes += block.nbytes
+            if self.spill_dir is not None:
+                self._host_lru.append(block)
 
     def _maybe_spill(self) -> None:
         """Enforce the host budget by spilling cold host blocks to storage
         (the persistent-storage tier of the p-bucket). Candidates are
-        registered by ``track_host_block`` in destage order (oldest =
+        registered by ``_account_host`` in first-destage order (oldest =
         coldest first)."""
         if self.host_budget_bytes is None or self.spill_dir is None:
             return
@@ -230,14 +337,9 @@ class IOScheduler:
                 if self._host_bytes <= self.host_budget_bytes \
                         or not self._host_lru:
                     return
-                blk = self._host_lru.pop(0)
+                blk = self._host_lru.popleft()
             self.spill_block_sync(blk)
 
-    def track_host_block(self, block: Block) -> None:
-        """Register a host-resident block as a spill candidate."""
-        if self.spill_dir is not None:
-            with self._host_lock:
-                self._host_lru.append(block)
 
     def fetch_block_host(self, block: Block
                          ) -> Optional[Dict[str, np.ndarray]]:
@@ -260,10 +362,7 @@ class IOScheduler:
                 return None
             if block.host_data is None and block.storage_path is not None:
                 block.as_event_batch()
-                with self._host_lock:
-                    self._host_bytes += block.nbytes
-                    if self.spill_dir is not None:
-                        self._host_lru.append(block)
+                self._account_host(block)
             host_data = block.host_data
         if host_data is not None and block.persisted:
             self._simulate_io(block.nbytes)
@@ -275,13 +374,19 @@ class IOScheduler:
 
         A device-resident (m-bucket) copy is returned as-is — the batched
         stack keeps it device-side (a device concat instead of a host
-        round-trip). Cold p-blocks fall through to ``fetch_block_host``
-        so the read is accounted and persisted blocks pay the simulated
-        persistent-tier cost. Returns None only if the block was purged.
+        round-trip). Pooled blocks read their arena slot (an immutable
+        device slice — no host round-trip either). Cold p-blocks fall
+        through to ``fetch_block_host`` so the read is accounted and
+        persisted blocks pay the simulated persistent-tier cost. Returns
+        None only if the block was purged.
         """
         dd = block.device_data
         if dd is not None:
             return dd
+        if self.pool is not None and block.pool_slot is not None:
+            d = self.pool.read_block(block)
+            if d is not None:
+                return d
         return self.fetch_block_host(block)
 
     def spill_block_sync(self, block: Block) -> None:
@@ -292,26 +397,52 @@ class IOScheduler:
         # spill that resurrects the .npz for a dead block
         with block.lock:
             if block.dropped or block.tier != Tier.HOST:
+                # the LRU pop consumed this block's registration but it
+                # cannot spill (purged, or re-staged to device with its
+                # host shadow kept): un-account it so the next destage
+                # re-registers — otherwise its bytes would stay counted
+                # in _host_bytes while being unevictable forever
+                with self._host_lock:
+                    if block.host_accounted:
+                        block.host_accounted = False
+                        self._host_bytes = max(
+                            self._host_bytes - block.nbytes, 0)
                 return
             nbytes = block.nbytes
             block.spill_to_storage(self.spill_dir)
         with self._host_lock:
-            self._host_bytes = max(self._host_bytes - nbytes, 0)
+            if block.host_accounted:
+                block.host_accounted = False
+                self._host_bytes = max(self._host_bytes - nbytes, 0)
         self._simulate_io(nbytes)
 
     # ------------------------------------------------------- bulk requests
+    def shard_of(self, window: WindowState) -> Optional[int]:
+        """Pool shard hint for a window's blocks (None without a sharded
+        pool): the same stable window -> shard map the batch executor's
+        pooled placement uses, so a window's arena slots always land in
+        the range of the device that will fold its block-table rows."""
+        if self.pool is None or self.pool.num_shards <= 1:
+            return None
+        from repro.distributed.sharding import shard_of_window
+        return shard_of_window(window.window_start, window.window_end,
+                               self.pool.num_shards)
+
     def request_stage(self, window: WindowState,
                       blocks: Optional[List[Block]] = None,
                       demand: bool = False) -> threading.Event:
         """Queue staging of a window's p-blocks, in chunks so independent
         DMAs can overlap (multithread-serialization analog). ``demand``:
         an executing operator is blocked on these blocks — outranks
-        speculative pre-staging."""
+        speculative pre-staging. With a block pool these are pool fills
+        (demand fills are what the batch executor overlaps with the fold
+        of the already-resident shard)."""
         blocks = blocks if blocks is not None else window.p_blocks()
+        shard = self.shard_of(window)
 
         def do():
             for blk in blocks:
-                self.stage_block_sync(blk)
+                self.stage_block_sync(blk, shard=shard)
         return self.submit(PRIO_DEMAND_STAGE if demand else PRIO_STAGE, do)
 
     def request_destage(self, window: WindowState,

@@ -87,6 +87,22 @@ def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
 SLOT_AXIS = "slots"
 
 
+def shard_of_window(start: float, end: float, num_shards: int) -> int:
+    """Stable window -> shard assignment for the pooled sharded fold.
+
+    The block pool places a window's blocks in per-device slot ranges at
+    STAGING time — before any batch composition is known — so placement
+    must be a pure function of the window identity, not of the batch.
+    Both the staging shard hint and the batch executor's pooled placement
+    call this, which is what keeps a window's block-table rows local to
+    the shard that owns its arena range. Python's float hash is
+    process-stable (PYTHONHASHSEED only perturbs str/bytes).
+    """
+    if num_shards <= 1:
+        return 0
+    return int(abs(hash((float(start), float(end))))) % num_shards
+
+
 def make_slot_mesh(num_devices: int = 0,
                    axis_name: str = SLOT_AXIS) -> Optional[Mesh]:
     """1-D mesh over local devices for slot-sharded window execution.

@@ -4,10 +4,12 @@ from repro.kernels.ops import (
     flash_attention_vjp,
     segment_aggregate,
     segment_aggregate_batched,
+    segment_aggregate_block_table,
     ssd_chunk_scan,
 )
 
 __all__ = [
     "decode_attention_paged", "flash_attention", "flash_attention_vjp",
-    "segment_aggregate", "segment_aggregate_batched", "ssd_chunk_scan",
+    "segment_aggregate", "segment_aggregate_batched",
+    "segment_aggregate_block_table", "ssd_chunk_scan",
 ]

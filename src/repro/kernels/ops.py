@@ -20,8 +20,11 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.flash_attention_bwd import flash_attention_bwd_pallas
 from repro.kernels.segment_aggregate import (
     empty_batch_identity as _empty_batch_identity,
+    norm_stats as _norm_stats,
     segment_aggregate_batched_dense, segment_aggregate_batched_pallas,
-    segment_aggregate_batched_sharded, segment_aggregate_pallas,
+    segment_aggregate_batched_sharded, segment_aggregate_block_table_dense,
+    segment_aggregate_block_table_pallas,
+    segment_aggregate_block_table_sharded, segment_aggregate_pallas,
 )
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -34,16 +37,23 @@ def _resolve(backend: str) -> str:
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "backend",
-                                             "block_n"))
+                                             "block_n", "stats"))
 def segment_aggregate(values, segment_ids, num_segments: int, valid=None,
-                      backend: str = "auto", block_n: int = 512):
+                      backend: str = "auto", block_n: int = 512,
+                      stats: tuple = ("sum", "count", "min", "max")):
+    """``stats`` selects which aggregates the kernel materializes — the
+    selection reaches the Pallas out_shapes, so sum/count-only callers
+    skip the min/max VPU broadcast-reduce on the Mosaic path too."""
+    stats = _norm_stats(stats)
     be = _resolve(backend)
     if be == "ref":
-        return _ref.ref_segment_aggregate(values, segment_ids, num_segments,
-                                          valid)
+        out = _ref.ref_segment_aggregate(values, segment_ids, num_segments,
+                                         valid)
+        return {k: v for k, v in out.items() if k in stats}
     return segment_aggregate_pallas(values, segment_ids, num_segments,
                                     valid=valid, block_n=block_n,
-                                    interpret=(be == "interpret"))
+                                    interpret=(be == "interpret"),
+                                    stats=stats)
 
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "num_slots",
@@ -74,6 +84,7 @@ def segment_aggregate_batched(values, segment_ids, num_segments: int,
     ``'ref'`` backend ignores the mesh: it is the unsharded oracle the
     sharded path is validated against.
     """
+    stats = _norm_stats(stats)
     b = values.shape[0]
     ns = num_slots if num_slots is not None else \
         (b if slot_ids is None else None)
@@ -102,12 +113,79 @@ def segment_aggregate_batched(values, segment_ids, num_segments: int,
         out = _ref.ref_segment_aggregate_batched(
             values, segment_ids, num_segments, valid=valid,
             slot_ids=slot_ids, num_slots=num_slots)
+        return {k: v for k, v in out.items() if k in stats}
+    return segment_aggregate_batched_pallas(
+        values, segment_ids, num_segments, valid=valid,
+        slot_ids=slot_ids, num_slots=num_slots, block_n=block_n,
+        interpret=(be == "interpret"), stats=stats)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "num_slots",
+                                             "backend", "stats", "mesh",
+                                             "num_cols"))
+def segment_aggregate_block_table(values_arena, segment_ids, table,
+                                  num_segments: int, valid=None,
+                                  slot_ids=None,
+                                  num_slots: Optional[int] = None,
+                                  backend: str = "auto",
+                                  stats: tuple = ("sum", "count", "min",
+                                                  "max"),
+                                  mesh=None,
+                                  num_cols: Optional[int] = None):
+    """Batched multi-window reduce-by-key over a persistent block pool.
+
+    values_arena [pool_slots, cap, W] (the device arena the staging layer
+    fills), table [R] i32 pool-slot indices, segment_ids [R, cap] i32,
+    slot_ids [R] window slots -> aggregates [num_slots, num_segments, ...]
+    in one pass. This is the zero-copy gather path of the batched engine
+    fold: rows are event tiles *referenced* out of the arena rather than
+    stacked into a fresh tensor — an in-kernel scalar-prefetch DMA on the
+    Mosaic backend, a single take along the pool axis on the dense
+    backend. Shapes depend only on the (pow2-padded) table length and the
+    fixed arena, so the jit cache stays O(log batch).
+
+    ``mesh`` routes through the sharded variant: arena and table both
+    partition across the mesh and each shard gathers only from its own
+    arena tile (see ``segment_aggregate_block_table_sharded``). The
+    ``'ref'`` backend ignores the mesh — it is the unsharded oracle.
+    ``num_cols`` restricts the fold to the leading value columns, sliced
+    AFTER the row gather (width-selecting operators pass the full arena
+    — never an arena-wide slice copy).
+    """
+    stats = _norm_stats(stats)
+    r = table.shape[0]
+    ns = num_slots if num_slots is not None else \
+        (r if slot_ids is None else None)
+    if ns is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    if r == 0 or ns == 0:
+        w_out = num_cols if num_cols is not None else values_arena.shape[2]
+        empty = _empty_batch_identity(ns, num_segments, w_out)
+        return {k: v for k, v in empty.items() if k in stats}
+    if backend == "auto":
+        be = "pallas" if jax.devices()[0].platform == "tpu" else "dense"
     else:
-        out = segment_aggregate_batched_pallas(
-            values, segment_ids, num_segments, valid=valid,
-            slot_ids=slot_ids, num_slots=num_slots, block_n=block_n,
-            interpret=(be == "interpret"))
-    return {k: v for k, v in out.items() if k in stats}
+        be = backend
+    if mesh is not None and be != "ref" and mesh.size > 1:
+        return segment_aggregate_block_table_sharded(
+            values_arena, segment_ids, table, num_segments, valid=valid,
+            slot_ids=slot_ids, num_slots=num_slots, mesh=mesh, stats=stats,
+            use_pallas=(be in ("pallas", "interpret")),
+            interpret=(be == "interpret"), num_cols=num_cols)
+    if be == "dense":
+        return segment_aggregate_block_table_dense(
+            values_arena, segment_ids, table, num_segments, valid=valid,
+            slot_ids=slot_ids, num_slots=num_slots, stats=stats,
+            num_cols=num_cols)
+    if be == "ref":
+        out = _ref.ref_segment_aggregate_block_table(
+            values_arena, segment_ids, table, num_segments, valid=valid,
+            slot_ids=slot_ids, num_slots=num_slots, num_cols=num_cols)
+        return {k: v for k, v in out.items() if k in stats}
+    return segment_aggregate_block_table_pallas(
+        values_arena, segment_ids, table, num_segments, valid=valid,
+        slot_ids=slot_ids, num_slots=num_slots,
+        interpret=(be == "interpret"), stats=stats, num_cols=num_cols)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "backend",

@@ -74,6 +74,32 @@ def ref_segment_aggregate_batched(values: jnp.ndarray,
     }
 
 
+def ref_segment_aggregate_block_table(values_arena: jnp.ndarray,
+                                      segment_ids: jnp.ndarray,
+                                      table: jnp.ndarray,
+                                      num_segments: int,
+                                      valid: Optional[jnp.ndarray] = None,
+                                      slot_ids: Optional[jnp.ndarray] = None,
+                                      num_slots: Optional[int] = None,
+                                      num_cols: Optional[int] = None
+                                      ) -> dict:
+    """Oracle for the block-table fold over a persistent device pool.
+
+    values_arena [pool_slots, cap, W]; table [R] pool-slot indices;
+    segment_ids [R, cap]; slot_ids [R] -> per-slot sum/count/min/max.
+    The gather is an explicit take along the pool axis (``num_cols``
+    keeps the leading value columns), then the batched oracle — the
+    kernels must match this regardless of whether they gather in-kernel
+    (scalar-prefetch Mosaic) or via one dense take.
+    """
+    vals = jnp.take(values_arena, table.astype(jnp.int32), axis=0)
+    if num_cols is not None:
+        vals = vals[:, :, :num_cols]
+    return ref_segment_aggregate_batched(
+        vals, segment_ids, num_segments, valid=valid, slot_ids=slot_ids,
+        num_slots=num_slots)
+
+
 def ref_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True, window: int = 0) -> jnp.ndarray:
     """q [B, Sq, H, D]; k, v [B, Sk, Hkv, D] -> [B, Sq, H, D].

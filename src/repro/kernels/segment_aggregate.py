@@ -28,6 +28,22 @@ cross-device reduction** (no psum) — the output is simply each shard's
 arrive in shard-major order (``pack_rows_shard_major``); a row whose slot
 falls outside its shard's range is defensively masked invalid rather than
 corrupting a neighbour's slot.
+
+The **block-table** entry points (``segment_aggregate_block_table_*``)
+are the zero-copy gather path over the persistent device block pool
+(``core.block_pool``): instead of stacked ``[R, cap, W]`` event tensors
+they take the whole ``[pool_slots, cap, W]`` values arena plus a ``[R]``
+table of pool-slot indices, and gather each row's event tile from the
+arena *inside* the launch — a scalar-prefetched ``index_map`` dereference
+on the Mosaic path (the flash-decoding ``block_tables`` idiom, one DMA
+per row straight out of the arena), a single ``jnp.take`` along the pool
+axis on the dense path. The sharded variant partitions BOTH the arena
+and the table over the mesh, so each device gathers only from its own
+``[pool_slots/D, ...]`` arena tile — the table stays shard-local.
+
+All Pallas entry points thread ``stats`` through their ``out_shape``s:
+sum/count-only folds (average, lrb) never allocate or compute the
+min/max VPU broadcast-reduce, matching the dense backend.
 """
 from __future__ import annotations
 
@@ -38,51 +54,111 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 from jax.sharding import PartitionSpec as P
 
+ALL_STATS = ("sum", "count", "min", "max")
 
-def _kernel(ids_ref, valid_ref, values_ref, sum_ref, cnt_ref, min_ref,
-            max_ref, *, num_segments: int, block_n: int):
+
+def norm_stats(stats) -> Tuple[str, ...]:
+    """Canonicalize a stats selection: fixed order, validated, deduped —
+    so jit caches don't fork on permutations of the same request."""
+    stats = tuple(stats)
+    for s in stats:
+        if s not in ALL_STATS:
+            raise ValueError(f"unknown stat {s!r} (of {ALL_STATS})")
+    out = tuple(s for s in ALL_STATS if s in stats)
+    if not out:
+        raise ValueError("stats selection is empty")
+    return out
+
+
+def _acc_tile(refs, ids, valid, vals, num_segments: int, n: int) -> None:
+    """Accumulate one [n] ids / [n, W] values tile into the stat refs.
+
+    Shared by the flat-grid kernel and the block-table kernel. Only the
+    requested stats exist in ``refs``; unrequested aggregates cost
+    nothing (the min/max broadcast-reduce temps are never built for
+    sum/count-only folds)."""
+    seg = jax.lax.broadcasted_iota(jnp.int32, (n, num_segments), 1)
+    onehot = (ids[:, None] == seg) & valid[:, None]     # [n, S]
+    if "sum" in refs or "count" in refs:
+        oh_f = onehot.astype(jnp.float32)
+    if "sum" in refs:
+        # MXU path: [S, n] @ [n, W]
+        refs["sum"][...] += jax.lax.dot_general(
+            oh_f, jnp.where(valid[:, None], vals, 0.0),
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    if "count" in refs:
+        refs["count"][...] += jnp.sum(oh_f, axis=0)
+    # min/max: masked broadcast-reduce over the tile (VPU path)
+    if "min" in refs:
+        big = jnp.where(onehot[:, :, None], vals[:, None, :], jnp.inf)
+        refs["min"][...] = jnp.minimum(refs["min"][...],
+                                       jnp.min(big, axis=0))
+    if "max" in refs:
+        small = jnp.where(onehot[:, :, None], vals[:, None, :], -jnp.inf)
+        refs["max"][...] = jnp.maximum(refs["max"][...],
+                                       jnp.max(small, axis=0))
+
+
+def _init_refs(refs) -> None:
+    for name, ref in refs.items():
+        if name == "min":
+            ref[...] = jnp.full_like(ref, jnp.inf)
+        elif name == "max":
+            ref[...] = jnp.full_like(ref, -jnp.inf)
+        else:
+            ref[...] = jnp.zeros_like(ref)
+
+
+def _kernel(ids_ref, valid_ref, values_ref, *out_refs, num_segments: int,
+            block_n: int, stats: Tuple[str, ...]):
+    refs = dict(zip(stats, out_refs))
     step = pl.program_id(0)
 
     @pl.when(step == 0)
     def _init():
-        sum_ref[...] = jnp.zeros_like(sum_ref)
-        cnt_ref[...] = jnp.zeros_like(cnt_ref)
-        min_ref[...] = jnp.full_like(min_ref, jnp.inf)
-        max_ref[...] = jnp.full_like(max_ref, -jnp.inf)
+        _init_refs(refs)
 
-    ids = ids_ref[...]                                  # [block_n]
-    valid = valid_ref[...] != 0                         # [block_n]
-    vals = values_ref[...]                              # [block_n, W]
+    _acc_tile(refs, ids_ref[...], valid_ref[...] != 0, values_ref[...],
+              num_segments, block_n)
 
-    seg = jax.lax.broadcasted_iota(jnp.int32, (block_n, num_segments), 1)
-    onehot = (ids[:, None] == seg) & valid[:, None]     # [block_n, S]
-    oh_f = onehot.astype(jnp.float32)
 
-    # MXU path: [S, block_n] @ [block_n, W]
-    sum_ref[...] += jax.lax.dot_general(
-        oh_f, jnp.where(valid[:, None], vals, 0.0),
-        dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    cnt_ref[...] += jnp.sum(oh_f, axis=0)
-
-    # min/max: masked broadcast-reduce over the tile (VPU path)
-    big = jnp.where(onehot[:, :, None], vals[:, None, :], jnp.inf)
-    small = jnp.where(onehot[:, :, None], vals[:, None, :], -jnp.inf)
-    min_ref[...] = jnp.minimum(min_ref[...], jnp.min(big, axis=0))
-    max_ref[...] = jnp.maximum(max_ref[...], jnp.max(small, axis=0))
+def _stat_outputs(stats: Tuple[str, ...], num_segments: int, w: int):
+    """(out_shapes, out_specs) for a stats selection; every grid step maps
+    to the same (only) block so accumulators stay VMEM-resident (the
+    variadic index_maps absorb grid indices and any scalar-prefetch
+    operands)."""
+    full2 = pl.BlockSpec((num_segments, w), lambda *a: (0, 0))
+    full1 = pl.BlockSpec((num_segments,), lambda *a: (0,))
+    shapes = []
+    specs = []
+    for s in stats:
+        if s == "count":
+            shapes.append(jax.ShapeDtypeStruct((num_segments,), jnp.float32))
+            specs.append(full1)
+        else:
+            shapes.append(jax.ShapeDtypeStruct((num_segments, w),
+                                               jnp.float32))
+            specs.append(full2)
+    return tuple(shapes), tuple(specs)
 
 
 def segment_aggregate_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
                              num_segments: int,
                              valid: Optional[jnp.ndarray] = None,
                              block_n: int = 512,
-                             interpret: bool = True):
+                             interpret: bool = True,
+                             stats: Tuple[str, ...] = ALL_STATS):
     """values [N, W] f32, segment_ids [N] i32 -> dict of [S, W]/[S] aggs.
 
     N is padded to a multiple of ``block_n``; padding rows are invalid.
+    ``stats`` selects which aggregates the kernel materializes (threaded
+    through ``out_shape`` — unrequested stats are never computed).
     """
+    stats = norm_stats(stats)
     n, w = values.shape
     if valid is None:
         valid = jnp.ones((n,), jnp.int32)
@@ -98,16 +174,9 @@ def segment_aggregate_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
     grid = (n_pad // block_n,)
 
     kernel = functools.partial(_kernel, num_segments=num_segments,
-                               block_n=block_n)
-    out_shapes = (
-        jax.ShapeDtypeStruct((num_segments, w), jnp.float32),   # sum
-        jax.ShapeDtypeStruct((num_segments,), jnp.float32),     # count
-        jax.ShapeDtypeStruct((num_segments, w), jnp.float32),   # min
-        jax.ShapeDtypeStruct((num_segments, w), jnp.float32),   # max
-    )
-    full2 = pl.BlockSpec((num_segments, w), lambda i: (0, 0))
-    full1 = pl.BlockSpec((num_segments,), lambda i: (0,))
-    s, c, mn, mx = pl.pallas_call(
+                               block_n=block_n, stats=stats)
+    out_shapes, out_specs = _stat_outputs(stats, num_segments, w)
+    outs = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -115,11 +184,11 @@ def segment_aggregate_pallas(values: jnp.ndarray, segment_ids: jnp.ndarray,
             pl.BlockSpec((block_n,), lambda i: (i,)),
             pl.BlockSpec((block_n, w), lambda i: (i, 0)),
         ],
-        out_specs=(full2, full1, full2, full2),
+        out_specs=out_specs,
         out_shape=out_shapes,
         interpret=interpret,
     )(segment_ids.astype(jnp.int32), valid, values.astype(jnp.float32))
-    return {"sum": s, "count": c, "min": mn, "max": mx}
+    return dict(zip(stats, outs))
 
 
 def segment_aggregate_batched_pallas(values: jnp.ndarray,
@@ -129,11 +198,14 @@ def segment_aggregate_batched_pallas(values: jnp.ndarray,
                                      slot_ids: Optional[jnp.ndarray] = None,
                                      num_slots: Optional[int] = None,
                                      block_n: int = 512,
-                                     interpret: bool = True):
+                                     interpret: bool = True,
+                                     stats: Tuple[str, ...] = ALL_STATS):
     """Multi-window segment aggregation in ONE kernel launch.
 
     values [B, N, W] f32, segment_ids [B, N] i32 -> per-slot aggregates
-    {sum [num_slots, S, W], count [num_slots, S], min, max}.
+    {sum [num_slots, S, W], count [num_slots, S], min, max} — restricted
+    to the requested ``stats`` (threaded through the kernel out_shapes,
+    so sum/count-only folds skip the min/max VPU work entirely).
 
     Each of the B rows is a padded event block (``valid`` masks ragged
     fills); ``slot_ids [B]`` maps rows to output window slots, so several
@@ -142,6 +214,7 @@ def segment_aggregate_batched_pallas(values: jnp.ndarray,
     into the segment axis — ``sid = slot * num_segments + key`` — and fed
     through the same one-hot-matmul grid as the single-window kernel.
     """
+    stats = norm_stats(stats)
     b, n, w = values.shape
     if valid is None:
         valid = jnp.ones((b, n), jnp.int32)
@@ -156,13 +229,14 @@ def segment_aggregate_batched_pallas(values: jnp.ndarray,
     out = segment_aggregate_pallas(
         values.reshape(b * n, w), composite.reshape(b * n),
         num_slots * num_segments, valid=valid.reshape(b * n),
-        block_n=block_n, interpret=interpret)
-    return {
-        "sum": out["sum"].reshape(num_slots, num_segments, w),
-        "count": out["count"].reshape(num_slots, num_segments),
-        "min": out["min"].reshape(num_slots, num_segments, w),
-        "max": out["max"].reshape(num_slots, num_segments, w),
-    }
+        block_n=block_n, interpret=interpret, stats=stats)
+    shaped = {}
+    for s in stats:
+        if s == "count":
+            shaped[s] = out[s].reshape(num_slots, num_segments)
+        else:
+            shaped[s] = out[s].reshape(num_slots, num_segments, w)
+    return shaped
 
 
 def segment_aggregate_batched_dense(values: jnp.ndarray,
@@ -220,6 +294,194 @@ def segment_aggregate_batched_dense(values: jnp.ndarray,
         out["max"] = jnp.max(small, axis=0).reshape(num_slots,
                                                     num_segments, w)
     return out
+
+
+def _bt_kernel(table_ref, ids_ref, valid_ref, arena_ref, *out_refs,
+               num_segments: int, cap: int, stats: Tuple[str, ...],
+               num_cols: Optional[int]):
+    """Block-table kernel body: one grid step per table row. The arena
+    BlockSpec's index_map dereferences the scalar-prefetched table, so
+    each step DMAs its event tile straight out of the pool arena — the
+    row gather happens inside the launch, not as a host/device concat.
+    ``num_cols`` selects a value-column prefix AFTER the gather (per-tile
+    slice) so width-selecting folds never materialize an arena-wide
+    slice copy."""
+    refs = dict(zip(stats, out_refs))
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _init():
+        _init_refs(refs)
+
+    vals = arena_ref[0]
+    if num_cols is not None:
+        vals = vals[:, :num_cols]
+    _acc_tile(refs, ids_ref[0], valid_ref[0] != 0, vals,
+              num_segments, cap)
+
+
+def segment_aggregate_block_table_pallas(
+        values_arena: jnp.ndarray, segment_ids: jnp.ndarray,
+        table: jnp.ndarray, num_segments: int,
+        valid: Optional[jnp.ndarray] = None,
+        slot_ids: Optional[jnp.ndarray] = None,
+        num_slots: Optional[int] = None,
+        interpret: bool = True,
+        stats: Tuple[str, ...] = ALL_STATS,
+        num_cols: Optional[int] = None):
+    """Batched fold over a persistent block pool, gathering in-kernel.
+
+    values_arena [pool_slots, cap, W] f32 (the device arena), table [R]
+    i32 pool-slot indices, segment_ids [R, cap] i32, slot_ids [R] window
+    slots -> per-slot aggregates as ``segment_aggregate_batched_pallas``.
+    The table is a scalar-prefetch operand: grid step ``r`` DMAs arena
+    row ``table[r]`` into VMEM (flash-decoding's ``block_tables`` idiom),
+    so already-resident blocks are folded with zero per-batch copies.
+    ``num_cols`` restricts the fold to the leading value columns,
+    sliced per-tile inside the kernel (width-selecting operators pass
+    the FULL arena — never an arena-wide slice copy).
+    """
+    stats = norm_stats(stats)
+    p, cap, w = values_arena.shape
+    w_out = num_cols if num_cols is not None else w
+    r = table.shape[0]
+    if valid is None:
+        valid = jnp.ones((r, cap), jnp.int32)
+    if slot_ids is None:
+        slot_ids = jnp.arange(r, dtype=jnp.int32)
+        if num_slots is None:
+            num_slots = r
+    elif num_slots is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    composite = (slot_ids.astype(jnp.int32)[:, None] * num_segments
+                 + segment_ids.astype(jnp.int32))        # [R, cap]
+    s_total = num_slots * num_segments
+    kernel = functools.partial(_bt_kernel, num_segments=s_total, cap=cap,
+                               stats=stats, num_cols=num_cols)
+    out_shapes, out_specs = _stat_outputs(stats, s_total, w_out)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(r,),
+        in_specs=[
+            pl.BlockSpec((1, cap), lambda i, tbl: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i, tbl: (i, 0)),
+            pl.BlockSpec((1, cap, w), lambda i, tbl: (tbl[i], 0, 0)),
+        ],
+        out_specs=out_specs,
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(table.astype(jnp.int32), composite,
+      valid.astype(jnp.int32), values_arena.astype(jnp.float32))
+    out = dict(zip(stats, outs))
+    shaped = {}
+    for s in stats:
+        if s == "count":
+            shaped[s] = out[s].reshape(num_slots, num_segments)
+        else:
+            shaped[s] = out[s].reshape(num_slots, num_segments, w_out)
+    return shaped
+
+
+def segment_aggregate_block_table_dense(
+        values_arena: jnp.ndarray, segment_ids: jnp.ndarray,
+        table: jnp.ndarray, num_segments: int,
+        valid: Optional[jnp.ndarray] = None,
+        slot_ids: Optional[jnp.ndarray] = None,
+        num_slots: Optional[int] = None,
+        stats: Tuple[str, ...] = ALL_STATS,
+        num_cols: Optional[int] = None):
+    """Dense-backend block-table fold: ONE ``jnp.take`` along the pool
+    axis materializes the batch (a single device gather op, replacing the
+    O(rows) per-row concat of the stacked path), then the one-hot fold.
+    ``num_cols`` slices the value columns AFTER the gather — O(rows),
+    never an arena-wide copy.
+    """
+    vals = jnp.take(values_arena, table.astype(jnp.int32), axis=0)
+    if num_cols is not None:
+        vals = vals[:, :, :num_cols]
+    return segment_aggregate_batched_dense(
+        vals, segment_ids, num_segments, valid=valid, slot_ids=slot_ids,
+        num_slots=num_slots, stats=norm_stats(stats))
+
+
+def segment_aggregate_block_table_sharded(
+        values_arena: jnp.ndarray, segment_ids: jnp.ndarray,
+        table: jnp.ndarray, num_segments: int,
+        valid: Optional[jnp.ndarray] = None,
+        slot_ids: Optional[jnp.ndarray] = None,
+        num_slots: Optional[int] = None, *, mesh,
+        stats: Tuple[str, ...] = ALL_STATS,
+        use_pallas: bool = False,
+        interpret: bool = True,
+        num_cols: Optional[int] = None):
+    """Slot-sharded block-table fold over a 1-D mesh.
+
+    Both the pool arena (slot axis) and the table rows partition across
+    the mesh: shard ``d`` receives arena tile ``[pool_slots/D, ...]`` and
+    its shard-major rows, and rewrites global pool slots / window slots to
+    shard-local indices — the block table stays local to each shard, so
+    the gather never crosses devices and the output is a pure slot-axis
+    concatenation (psum-free, as in the stacked sharded fold). The
+    executor's hash-based window placement plus the pool's per-shard slot
+    ranges guarantee well-placed rows; a misplaced row (table entry or
+    window slot outside the shard's ranges) is defensively masked invalid.
+    """
+    stats = norm_stats(stats)
+    p, cap, w = values_arena.shape
+    r = table.shape[0]
+    axis_name = mesh.axis_names[0]
+    num_devices = mesh.shape[axis_name]
+    if valid is None:
+        valid = jnp.ones((r, cap), jnp.int32)
+    if slot_ids is None:
+        slot_ids = jnp.arange(r, dtype=jnp.int32)
+        if num_slots is None:
+            num_slots = r
+    elif num_slots is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    if r % num_devices or num_slots % num_devices or p % num_devices:
+        raise ValueError(
+            f"rows ({r}), slots ({num_slots}) and pool slots ({p}) must "
+            f"all divide the slot mesh ({num_devices} devices); pad with "
+            "invalid rows (pack_rows_shard_major) and size the pool to "
+            "the mesh")
+    slots_per = num_slots // num_devices
+    pool_per = p // num_devices
+
+    def shard_fn(arena, sid, tbl, val, sl):
+        base = jax.lax.axis_index(axis_name)
+        local_tbl = tbl.astype(jnp.int32) - base * pool_per
+        own_t = (local_tbl >= 0) & (local_tbl < pool_per)
+        local_tbl = jnp.where(own_t, local_tbl, 0)
+        local_sl = sl.astype(jnp.int32) - base * slots_per
+        own_s = (local_sl >= 0) & (local_sl < slots_per)
+        local_sl = jnp.where(own_s, local_sl, 0)
+        val_own = val.astype(bool) & (own_t & own_s)[:, None]
+        if use_pallas:
+            return segment_aggregate_block_table_pallas(
+                arena, sid, local_tbl, num_segments, valid=val_own,
+                slot_ids=local_sl, num_slots=slots_per,
+                interpret=interpret, stats=stats, num_cols=num_cols)
+        return segment_aggregate_block_table_dense(
+            arena, sid, local_tbl, num_segments, valid=val_own,
+            slot_ids=local_sl, num_slots=slots_per, stats=stats,
+            num_cols=num_cols)
+
+    in_specs = (P(axis_name, None, None), P(axis_name, None),
+                P(axis_name), P(axis_name, None), P(axis_name))
+    out_specs = {k: (P(axis_name, None) if k == "count"
+                     else P(axis_name, None, None))
+                 for k in stats}
+    # local import avoids a kernels <-> distributed cycle at module load
+    from repro.distributed.sharding import shard_map_compat
+    f = shard_map_compat(shard_fn, mesh, in_specs, out_specs)
+    return f(values_arena.astype(jnp.float32),
+             segment_ids.astype(jnp.int32), table.astype(jnp.int32),
+             valid.astype(jnp.int32), slot_ids.astype(jnp.int32))
 
 
 def empty_batch_identity(num_slots: int, num_segments: int, w: int) -> dict:
@@ -281,6 +543,7 @@ def segment_aggregate_batched_sharded(values: jnp.ndarray,
     **no psum**. Misplaced rows are masked invalid inside the shard (they
     contribute nothing) instead of aliasing into a resident slot.
     """
+    stats = norm_stats(stats)
     b, n, w = values.shape
     axis_name = mesh.axis_names[0]
     num_devices = mesh.shape[axis_name]
@@ -306,10 +569,10 @@ def segment_aggregate_batched_sharded(values: jnp.ndarray,
         local = jnp.where(own, local, 0)
         val_own = val.astype(bool) & own[:, None]
         if use_pallas:
-            out = segment_aggregate_batched_pallas(
+            return segment_aggregate_batched_pallas(
                 v, sid, num_segments, valid=val_own, slot_ids=local,
-                num_slots=slots_per, block_n=block_n, interpret=interpret)
-            return {k: o for k, o in out.items() if k in stats}
+                num_slots=slots_per, block_n=block_n, interpret=interpret,
+                stats=stats)
         return segment_aggregate_batched_dense(
             v, sid, num_segments, valid=val_own, slot_ids=local,
             num_slots=slots_per, stats=stats)

@@ -20,13 +20,17 @@ N_WINDOWS = 10
 
 
 def _make_engine(op_name: str, batched: bool, block: int = 64,
-                 width: int = 2, num_keys: int = 8) -> StreamEngine:
-    aion = AionConfig(block_size=block, batched_execution=batched)
+                 width: int = 2, num_keys: int = 8,
+                 pooled: bool = True) -> StreamEngine:
+    aion = AionConfig(block_size=block, batched_execution=batched,
+                      block_pool=pooled)
     kw = {}
     if op_name == "stock":
         kw = {"num_keys": num_keys}
     elif op_name == "lrb":
         kw = {"num_segments": num_keys}
+    elif op_name == "bigrams":
+        kw = {"vocab": 16}
     op = make_operator(op_name, block, width, **kw)
     return StreamEngine(
         assigner=TumblingWindows(WINDOW), operator=op, aion=aion,
@@ -76,16 +80,24 @@ def _assert_equal_results(got, want, op_name):
                 f"{op_name} {wid}"
 
 
-@pytest.mark.parametrize("op_name", ["average", "stock", "lrb"])
-def test_batched_matches_reference_late_heavy(op_name):
-    got, m_b = _late_heavy_run(_make_engine(op_name, batched=True))
-    want, m_r = _late_heavy_run(_make_engine(op_name, batched=False))
+@pytest.mark.parametrize("pooled", [True, False])
+@pytest.mark.parametrize("op_name", ["average", "stock", "lrb", "bigrams"])
+def test_batched_matches_reference_late_heavy(op_name, pooled):
+    got, m_b = _late_heavy_run(_make_engine(op_name, batched=True,
+                                            pooled=pooled))
+    want, m_r = _late_heavy_run(_make_engine(op_name, batched=False,
+                                             pooled=pooled))
     _assert_equal_results(got, want, op_name)
     # the batched run actually used the batch path, and with real occupancy
     assert m_b.batch_executions >= 1
     assert m_b.mean_batch_occupancy > 1.0
     assert m_b.batched_windows >= N_WINDOWS
     assert m_b.batch_device_seconds > 0.0
+    if pooled:
+        # zero-copy block-table rows carried the batch
+        assert m_b.pooled_rows > 0
+    else:
+        assert m_b.pooled_rows == 0
     # the reference run never did
     assert m_r.batch_executions == 0
     # both executed every window live, and re-executed late ones

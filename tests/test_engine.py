@@ -13,8 +13,9 @@ from repro.data.generators import make_generator
 
 
 def _engine(op_name="average", budget=64 << 20, policy=None, width=4,
-            num_keys=8, trigger=None, wm_slack=0.0, block=128):
-    aion = AionConfig(block_size=block)
+            num_keys=8, trigger=None, wm_slack=0.0, block=128,
+            pooled=True):
+    aion = AionConfig(block_size=block, block_pool=pooled)
     kw = {}
     if op_name in ("stock", "lrb"):
         kw = {"num_keys": num_keys} if op_name == "stock" else \
@@ -248,23 +249,28 @@ def test_checkpoint_captures_spilled_blocks(tmp_path):
     eng2.close()
 
 
-def test_purge_releases_device_budget():
+@pytest.mark.parametrize("pooled", [True, False])
+def test_purge_releases_device_budget(pooled):
     """Predictive cleanup of a window with device-resident blocks must
     return their bytes to the budget (regression: drop_all used to clear
     the block list before the release loop could see the m-blocks)."""
-    eng = _engine()
+    eng = _engine(pooled=pooled)
     eng.cleanup.min_history = 10
     eng.cleanup.coverage = 0.9
+    # the block pool's arena reservation is permanent by design; every
+    # per-block reservation must return on purge (the pooled=False run
+    # keeps the original legacy-bytes regression coverage)
+    floor = eng.pool.arena_bytes if eng.pool is not None else 0
     eng.ingest(_uniform_batch(500, 0, 10, seed=91), now=0.0)
     eng.io.drain()
-    assert eng.budget.used_bytes > 0
+    assert eng.budget.used_bytes >= floor
     from repro.core.windows import WindowId
     eng.windows[WindowId(0.0, 10.0)].expired = True
     eng.cleanup.observe(np.random.default_rng(0).uniform(0.1, 1.0, 5000))
     eng.advance_watermark(1000.0, now=1000.0)   # way past the purge bound
     eng.poll(now=1000.0)
     assert eng.metrics.purged_windows == 1
-    assert eng.budget.used_bytes == 0
+    assert eng.budget.used_bytes == floor
     eng.close()
 
 

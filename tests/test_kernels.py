@@ -7,11 +7,28 @@ import jax.numpy as jnp
 
 from repro.kernels import (
     decode_attention_paged, flash_attention, segment_aggregate,
-    segment_aggregate_batched, ssd_chunk_scan,
+    segment_aggregate_batched, segment_aggregate_block_table,
+    ssd_chunk_scan,
 )
 from repro.kernels import ref as R
 
 RNG = np.random.default_rng(42)
+
+
+def _assert_aggs_close(out, ref, stats=("sum", "count", "min", "max")):
+    if "sum" in stats:
+        np.testing.assert_allclose(out["sum"], ref["sum"], rtol=1e-5,
+                                   atol=1e-5)
+    if "count" in stats:
+        np.testing.assert_allclose(out["count"], ref["count"], rtol=0,
+                                   atol=0)
+    for k in ("min", "max"):
+        if k not in stats:
+            continue
+        a, b = np.asarray(out[k]), np.asarray(ref[k])
+        m = np.isfinite(b)
+        assert np.array_equal(np.isfinite(a), m), k
+        np.testing.assert_allclose(a[m], b[m], rtol=1e-6)
 
 
 # ------------------------------------------------------------ segment agg
@@ -140,6 +157,156 @@ def test_segment_aggregate_batched_equals_per_window_calls():
                                    rtol=1e-5, atol=1e-5)
         np.testing.assert_allclose(out["count"][i], one["count"],
                                    rtol=0, atol=0)
+
+
+# ------------------------------------------------- block-table segment agg
+@pytest.mark.parametrize("backend", ["dense", "interpret"])
+@pytest.mark.parametrize("p,cap,w,s,r,num_slots", [
+    (8, 32, 1, 4, 6, 4),           # fewer rows than pool slots
+    (16, 64, 3, 7, 16, 8),         # repeated pool slots across rows
+    (4, 128, 2, 16, 8, 2),         # many rows per slot
+])
+def test_segment_aggregate_block_table_sweep(backend, p, cap, w, s, r,
+                                             num_slots):
+    """The zero-copy pool-gather fold vs the take-then-reduce oracle:
+    random tables (with repeats — several rows referencing the same
+    arena slot), ragged fills, shared window slots."""
+    arena = jnp.asarray(RNG.normal(size=(p, cap, w)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, s, (r, cap)), jnp.int32)
+    table = jnp.asarray(RNG.integers(0, p, r), jnp.int32)
+    fills = RNG.integers(0, cap + 1, r)            # ragged incl. empty
+    valid = jnp.asarray(np.arange(cap)[None, :] < fills[:, None])
+    slots = jnp.asarray(RNG.integers(0, num_slots, r), jnp.int32)
+    out = segment_aggregate_block_table(
+        arena, ids, table, s, valid=valid, slot_ids=slots,
+        num_slots=num_slots, backend=backend)
+    ref = R.ref_segment_aggregate_block_table(
+        arena, ids, table, s, valid=valid, slot_ids=slots,
+        num_slots=num_slots)
+    assert out["sum"].shape == (num_slots, s, w)
+    _assert_aggs_close(out, ref)
+
+
+def test_segment_aggregate_block_table_equals_stacked():
+    """Referencing rows through the table == stacking the same rows: the
+    pooled and device-concat engine paths must be interchangeable."""
+    p, cap, w, s, r = 12, 48, 2, 5, 7
+    arena = jnp.asarray(RNG.normal(size=(p, cap, w)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, s, (r, cap)), jnp.int32)
+    table = jnp.asarray(RNG.integers(0, p, r), jnp.int32)
+    fills = RNG.integers(1, cap + 1, r)
+    valid = jnp.asarray(np.arange(cap)[None, :] < fills[:, None])
+    slots = jnp.asarray(RNG.integers(0, 4, r), jnp.int32)
+    bt = segment_aggregate_block_table(
+        arena, ids, table, s, valid=valid, slot_ids=slots, num_slots=4,
+        backend="interpret")
+    stacked = segment_aggregate_batched(
+        jnp.take(arena, table, axis=0), ids, s, valid=valid,
+        slot_ids=slots, num_slots=4, backend="interpret")
+    _assert_aggs_close(bt, stacked)
+
+
+def test_segment_aggregate_block_table_empty_table():
+    out = segment_aggregate_block_table(
+        jnp.zeros((4, 16, 2), jnp.float32), jnp.zeros((0, 16), jnp.int32),
+        jnp.zeros((0,), jnp.int32), 3,
+        slot_ids=jnp.zeros((0,), jnp.int32), num_slots=2)
+    assert out["sum"].shape == (2, 3, 2)
+    assert float(jnp.abs(out["sum"]).sum()) == 0.0
+    assert bool(jnp.all(jnp.isposinf(out["min"])))
+
+
+@pytest.mark.parametrize("num_devices", [d for d in (2, 4, 8)
+                                         if d <= len(jax.devices())])
+@pytest.mark.parametrize("backend", ["dense", "interpret"])
+def test_segment_aggregate_block_table_sharded(num_devices, backend):
+    """Sharded block-table fold: the arena partitions over the mesh and
+    each shard gathers only from its own tile — vs the unsharded oracle
+    (runs under make verify-multidevice; skipped on one device)."""
+    from repro.distributed.sharding import make_slot_mesh
+    p_per, slots_per, rows_per, cap, w, s = 4, 2, 3, 32, 2, 5
+    p = num_devices * p_per
+    num_slots = num_devices * slots_per
+    r = num_devices * rows_per
+    arena = jnp.asarray(RNG.normal(size=(p, cap, w)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, s, (r, cap)), jnp.int32)
+    # shard-major rows: row block d references pool range / slot range d
+    table = np.concatenate([
+        RNG.integers(d * p_per, (d + 1) * p_per, rows_per)
+        for d in range(num_devices)]).astype(np.int32)
+    slots = np.concatenate([
+        RNG.integers(d * slots_per, (d + 1) * slots_per, rows_per)
+        for d in range(num_devices)]).astype(np.int32)
+    fills = RNG.integers(0, cap + 1, r)
+    valid = jnp.asarray(np.arange(cap)[None, :] < fills[:, None])
+    kw = dict(valid=valid, slot_ids=jnp.asarray(slots),
+              num_slots=num_slots)
+    mesh = make_slot_mesh(num_devices)
+    out = segment_aggregate_block_table(arena, ids, jnp.asarray(table), s,
+                                        mesh=mesh, backend=backend, **kw)
+    ref = R.ref_segment_aggregate_block_table(arena, ids,
+                                              jnp.asarray(table), s, **kw)
+    _assert_aggs_close(out, ref)
+
+
+@pytest.mark.parametrize("num_devices", [d for d in (2, 4, 8)
+                                         if d <= len(jax.devices())])
+def test_bigram_segment_count_sharded_matches_flat(num_devices):
+    """The big-vocab bigram scatter path shards like the dense kernel:
+    shard-major rows, slot-local scatters, psum-free — vs the flat
+    single-device scatter (runs under make verify-multidevice)."""
+    from repro.core.operators import _bigram_segment_count
+    from repro.distributed.sharding import make_slot_mesh
+    vocab, slots_per, rows_per, pairs = 64, 2, 3, 40
+    num_slots = num_devices * slots_per
+    b = num_devices * rows_per
+    ids = jnp.asarray(RNG.integers(0, vocab * vocab, (b, pairs)),
+                      jnp.int32)
+    pval = jnp.asarray(RNG.random((b, pairs)) > 0.3)
+    slots = jnp.asarray(np.concatenate([
+        RNG.integers(d * slots_per, (d + 1) * slots_per, rows_per)
+        for d in range(num_devices)]), jnp.int32)
+    mesh = make_slot_mesh(num_devices)
+    got = _bigram_segment_count(ids, pval, slots, num_slots, vocab, mesh)
+    want = _bigram_segment_count(ids, pval, slots, num_slots, vocab, None)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("stats", [("sum", "count"), ("count",),
+                                   ("min", "max"), ("sum",)])
+def test_segment_aggregate_stats_selection_pallas(stats):
+    """stats threads through the Pallas out_shapes: only the requested
+    aggregates come back, and they equal the full-run values (single,
+    batched, and block-table entry points)."""
+    n, w, s = 96, 2, 6
+    vals = jnp.asarray(RNG.normal(size=(n, w)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, s, n), jnp.int32)
+    sel = segment_aggregate(vals, ids, s, backend="interpret", stats=stats)
+    full = segment_aggregate(vals, ids, s, backend="interpret")
+    assert set(sel) == set(stats)
+    _assert_aggs_close(sel, full, stats=stats)
+
+    b, cap = 4, 24
+    bvals = jnp.asarray(RNG.normal(size=(b, cap, w)), jnp.float32)
+    bids = jnp.asarray(RNG.integers(0, s, (b, cap)), jnp.int32)
+    bsel = segment_aggregate_batched(bvals, bids, s, backend="interpret",
+                                     stats=stats)
+    bfull = segment_aggregate_batched(bvals, bids, s, backend="interpret")
+    assert set(bsel) == set(stats)
+    _assert_aggs_close(bsel, bfull, stats=stats)
+
+    table = jnp.asarray(RNG.integers(0, b, 5), jnp.int32)
+    tsel = segment_aggregate_block_table(
+        bvals, jnp.take(bids, table, axis=0), table, s,
+        slot_ids=jnp.zeros((5,), jnp.int32), num_slots=1,
+        backend="interpret", stats=stats)
+    tfull = segment_aggregate_block_table(
+        bvals, jnp.take(bids, table, axis=0), table, s,
+        slot_ids=jnp.zeros((5,), jnp.int32), num_slots=1,
+        backend="interpret")
+    assert set(tsel) == set(stats)
+    _assert_aggs_close(tsel, tfull, stats=stats)
 
 
 # --------------------------------------------------------- flash attention

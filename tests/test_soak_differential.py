@@ -5,9 +5,12 @@ lateness, random watermark advances, a mid-stream checkpoint/restore, and
 sustained spill pressure (tiny device + host budgets with a spill dir),
 then asserts that every window's final result matches a trivially-correct
 in-memory oracle — a plain numpy group-by over ALL events ever generated.
-Runs the (batched x slot-sharded) config matrix; slot sharding actually
-shards under ``make verify-multidevice`` (8 simulated CPU devices) and is
-a checked no-op on the single-device tier-1 container.
+Runs the (batched x slot-sharded x block-pool) config matrix; slot
+sharding actually shards under ``make verify-multidevice`` (8 simulated
+CPU devices) and is a checked no-op on the single-device tier-1
+container; ``block_pool`` routes the batched gather through the
+persistent device arena (block tables + demand pool-fills) under the
+same spill pressure and mid-stream restore.
 
 Railgun-style rationale (PAPERS.md): partitioned streaming state is only
 trustworthy while it is continuously validated against an oracle — the
@@ -54,9 +57,10 @@ def _cleanup() -> _NoPurgeCleanup:
 
 
 def _make_engine(op_name: str, batched: bool, sharded: bool,
-                 spill_dir, width: int) -> StreamEngine:
+                 spill_dir, width: int,
+                 pooled: bool = False) -> StreamEngine:
     aion = AionConfig(block_size=256, batched_execution=batched,
-                      slot_sharding=sharded)
+                      slot_sharding=sharded, block_pool=pooled)
     kw = {"num_keys": 8} if op_name == "stock" else {}
     return StreamEngine(
         assigner=TumblingWindows(WINDOW),
@@ -88,7 +92,8 @@ def _final_sweep(eng: StreamEngine, now: float) -> None:
 
 _COUNTERS = ("ingested", "ingested_late", "live_executions",
              "late_executions", "batch_executions",
-             "sharded_batch_executions")
+             "sharded_batch_executions", "pooled_rows", "fallback_rows",
+             "demand_pool_fills")
 
 
 class _SoakTotals:
@@ -105,11 +110,12 @@ class _SoakTotals:
 
 
 def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
-           width: int = 1):
+           width: int = 1, pooled: bool = False):
     """Run the soak; returns (results, oracle_events, counter_totals)."""
     rng = np.random.default_rng(SEED)
     totals = _SoakTotals()
-    eng = _make_engine(op_name, batched, sharded, spill_dir / "a", width)
+    eng = _make_engine(op_name, batched, sharded, spill_dir / "a", width,
+                       pooled)
     all_events = []           # oracle ledger: every event ever generated
     now = 0.0
     wm = 0.0
@@ -145,7 +151,7 @@ def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
             totals.absorb(eng.metrics)
             eng.close()
             eng = _make_engine(op_name, batched, sharded,
-                               spill_dir / "b", width)
+                               spill_dir / "b", width, pooled)
             eng.restore_state(snap)
 
     # close out: expire everything, fire remaining re-execution plans,
@@ -196,12 +202,18 @@ def _oracle_stock(keys, ts, vals, num_keys: int = 8):
     return out
 
 
-@pytest.mark.parametrize("batched,sharded", [
-    (True, True), (True, False), (False, True), (False, False),
+@pytest.mark.parametrize("batched,sharded,pooled", [
+    (True, True, True), (True, False, True),      # block-table gather
+    (True, True, False), (True, False, False),    # stacked gather
+    (False, True, False), (False, False, False),
+    # no (batched=False, pooled=True) row: the engine only builds the
+    # pool when the batched path can consume block tables, so that
+    # config is byte-identical to all-off (pooled per-window folds are
+    # covered via single-window batches inside the pooled rows above)
 ])
-def test_soak_differential_average(tmp_path, batched, sharded):
+def test_soak_differential_average(tmp_path, batched, sharded, pooled):
     results, (keys, ts, vals), totals = _drive(
-        "average", batched, sharded, tmp_path)
+        "average", batched, sharded, tmp_path, pooled=pooled)
     want = _oracle_average(keys, ts, vals)
     assert set(results) == set(want)
     for wid in want:
@@ -219,14 +231,22 @@ def test_soak_differential_average(tmp_path, batched, sharded):
         assert totals.sharded_batch_executions > 0
     else:
         assert totals.sharded_batch_executions == 0
+    if pooled and batched:
+        # the block-table path really carried rows under spill pressure
+        assert totals.pooled_rows > 0
+    else:
+        assert totals.pooled_rows == 0
 
 
-@pytest.mark.parametrize("sharded", [True, False])
-def test_soak_differential_stock_spill_pressure(tmp_path, sharded):
+@pytest.mark.parametrize("sharded,pooled", [
+    (True, True), (False, True), (True, False), (False, False),
+])
+def test_soak_differential_stock_spill_pressure(tmp_path, sharded, pooled):
     """Keyed operator under the same soak: per-key min/max/mean survive
-    spill pressure + restore, batched and (where possible) sharded."""
+    spill pressure + restore, batched, pooled and (where possible)
+    sharded."""
     results, (keys, ts, vals), totals = _drive(
-        "stock", True, sharded, tmp_path, width=1)
+        "stock", True, sharded, tmp_path, width=1, pooled=pooled)
     want = _oracle_stock(keys, ts, vals)
     assert set(results) == set(want)
     for wid, w in want.items():
@@ -241,3 +261,5 @@ def test_soak_differential_stock_spill_pressure(tmp_path, sharded):
                                    rtol=1e-5, atol=1e-5)
     # spill pressure really happened: storage-tier traffic on both runs
     assert totals.ingested == N_EVENTS
+    if pooled:
+        assert totals.pooled_rows > 0
