@@ -3,7 +3,19 @@
 # recipe line in sync with ROADMAP.md "Tier-1 verify".
 verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+	$(MAKE) verify-storage
 	$(MAKE) verify-multidevice
+
+# Persistent p-bucket store suites, tmpdir-isolated (pytest tmp_path):
+# storage unit tests (WAL group commit, footer rebuild, torn-tail
+# recovery, tombstones, compaction bound, batched reads/readahead) plus
+# the engine-level crash-recovery matrix (SIGKILL after an acknowledged
+# commit / mid-segment, reopen + restore, differential oracle parity)
+# and the compaction bound under purge soak. Also collected by plain
+# `pytest` above; this target is the focused storage gate.
+verify-storage:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
+		tests/test_storage.py tests/test_storage_recovery.py
 
 # Slot-sharding + differential-soak suites under a forced 8-device host
 # platform (XLA splits the CPU into 8 simulated devices; the slot-sharded
@@ -27,4 +39,16 @@ bench:
 bench-gather:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q2_throughput.py --gather
 
-.PHONY: verify verify-multidevice bench bench-gather
+# Memory + storage-tier benchmark; refreshes BENCH_q1_memory.json (Q1
+# rows plus log-vs-npz spill pressure: write amplification, bytes
+# written/read/compacted, batched p-bucket fetch latency)
+bench-q1:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q1_memory.py
+
+# Staleness benchmark; refreshes BENCH_q4_staleness.json (trigger rows
+# plus the store-backed late re-execution probe)
+bench-q4:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q4_staleness.py
+
+.PHONY: verify verify-storage verify-multidevice bench bench-gather \
+	bench-q1 bench-q4

@@ -3,9 +3,17 @@
 Left: max staleness vs number of executions under log-normal lateness.
 Right: minimum executions to reach bounds {0.1, 0.05, 0.01} across the
 four lateness distributions {lnorm, unif, norm, bursts}.
+
+``store_probe`` adds the engine-in-the-loop half: late re-executions
+whose state comes back through the persistent tier, per store backend —
+staleness is bounded by how fast the p-bucket serves the re-read, so the
+probe reports the storage bytes moved alongside the execution counts.
+``python benchmarks/q4_staleness.py`` emits everything machine-readable
+as ``BENCH_q4_staleness.json`` (the q2-gather convention).
 """
 from __future__ import annotations
 
+import json
 from typing import Dict, List
 
 import numpy as np
@@ -58,6 +66,75 @@ def executions_for_bounds(bounds=(0.1, 0.05, 0.01),
     return rows
 
 
+def store_probe(events: int = 10_000) -> List[Dict]:
+    """Late re-executions with p-bucket state behind each store backend:
+    execution counts, stall seconds, and the storage-tier bytes that
+    served the re-reads (staleness is bounded by that fetch path)."""
+    import tempfile
+    import time
+    from pathlib import Path
+
+    from repro.configs.base import AionConfig
+    from repro.core import StreamEngine, TumblingWindows
+    from repro.core.cleanup import PredictiveCleanup
+    from repro.core.events import EventBatch
+    from repro.core.operators import make_operator
+    from repro.core.triggers import DeltaTTrigger
+
+    root = Path(tempfile.mkdtemp(prefix="q4_store_"))
+    rows = []
+    for backend in ("log", "npz"):
+        aion = AionConfig(block_size=256, store_backend=backend,
+                          store_segment_bytes=256 << 10)
+        eng = StreamEngine(
+            assigner=TumblingWindows(10.0),
+            operator=make_operator("average", aion.block_size, 1),
+            aion=aion, value_width=1,
+            device_budget_bytes=1 << 20, host_budget_bytes=32 << 10,
+            spill_dir=root / backend,
+            cleanup=PredictiveCleanup(initial_bound=50.0,
+                                      min_history=1 << 62),
+            trigger=DeltaTTrigger(executions=3),
+        )
+        rng = np.random.default_rng(5)
+        now, emitted = 0.0, 0
+        t0 = time.time()
+        while emitted < events:
+            n = min(500, events - emitted)
+            delay = np.where(rng.random(n) < 0.5,
+                             rng.uniform(0.0, 2.0, n),
+                             rng.uniform(0.0, 30.0, n))
+            ts = np.maximum(now - delay, 0.0)
+            eng.ingest(
+                EventBatch(rng.integers(0, 8, n), ts,
+                           rng.normal(size=(n, 1)).astype(np.float32)),
+                now)
+            emitted += n
+            eng.advance_watermark(max(now - 2.0, 0.0), now)
+            eng.poll(now)
+            now += rng.uniform(1.0, 3.0)
+        for t in np.linspace(now, now + 60.0, 10):
+            eng.poll(t)
+        eng.io.drain()
+        store = eng.io.store
+        rows.append({
+            "backend": backend,
+            "events": events,
+            "wall_s": round(time.time() - t0, 4),
+            "late_executions": eng.metrics.late_executions,
+            "live_executions": eng.metrics.live_executions,
+            "fetch_stall_s": round(eng.metrics.fetch_stall_seconds, 6),
+            "store_bytes_written": int(store.stats["bytes_written"]),
+            "store_bytes_read": int(store.stats["bytes_read"]),
+            "store_bytes_compacted": int(store.stats["bytes_compacted"]),
+            "write_amplification": round(store.write_amplification, 4),
+            "readahead_hits": int(store.stats["readahead_hits"]),
+            "readahead_misses": int(store.stats["readahead_misses"]),
+        })
+        eng.close()
+    return rows
+
+
 def run() -> Dict[str, List[Dict]]:
     return {
         "staleness_vs_executions": staleness_vs_executions(),
@@ -65,8 +142,17 @@ def run() -> Dict[str, List[Dict]]:
     }
 
 
-if __name__ == "__main__":
+def main(emit_json: str = "BENCH_q4_staleness.json") -> Dict:
     out = run()
+    out["store_probe"] = store_probe()
+    if emit_json:
+        with open(emit_json, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    out = main()
     for section, rows in out.items():
         print(f"== {section}")
         for r in rows:

@@ -286,6 +286,23 @@ class AionConfig:
     # folds the newly-filled slots and merges the accumulators. False
     # restores the PR-3 behaviour (cold p-blocks read host-side).
     pool_overlap_prefetch: bool = True
+    # persistent tier of the p-bucket (repro.storage): 'log' is the
+    # log-structured store — segmented append-only value log, per-record
+    # checksums, WAL group commit (a crash loses nothing acknowledged),
+    # index rebuilt from segment footers on open, batched/readahead
+    # reads, and cleanup-driven compaction that consumes purge
+    # tombstones. 'npz' is the legacy file-per-block fallback (eager
+    # unlink on purge, no batching) kept for ablations.
+    store_backend: str = "log"
+    # value-log segment size; sealed segments carry an index footer and
+    # become compaction victims
+    store_segment_bytes: int = 1 << 20
+    # compaction bound: background compaction keeps on-disk bytes <=
+    # max(ratio x live record bytes, one segment) — the paper's §3.4
+    # "storage consumption stays bounded" claim, enforced
+    store_compact_ratio: float = 2.0
+    # store read-cache budget for batched readahead sweeps
+    store_readahead_bytes: int = 16 << 20
 
 
 def to_json(cfg: Any) -> str:

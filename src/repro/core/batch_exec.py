@@ -290,8 +290,12 @@ class BatchExecutor:
         slot_of, num_slots, slots_per = plan_slot_placement(
             len(plans), num_devices)
 
-        # gather block rows: (arrays, fill, slot) in plan order
+        # gather block rows: (arrays, fill, slot) in plan order — with
+        # one batched store readahead so cold p-blocks arrive via a
+        # sequential segment sweep instead of per-block random reads
         g0 = _time.time()
+        eng.io.readahead_blocks(
+            [blk for _, blocks in plans for blk in blocks])
         rows: List[Tuple[Dict[str, Any], int, int]] = []
         for i, (it, blocks) in enumerate(plans):
             for blk in blocks:
@@ -394,7 +398,10 @@ class BatchExecutor:
         # write here would WAIT on the fold's usage hold and serialize
         # the overlap away. Fills outside a batch (ingest, pre-staging)
         # see no pin and write donated (O(block), in place).
-        with pool.pinned():
+        # deferred_fills batches the round's cold fills into ONE scatter
+        # commit at the second snapshot — k overlapped fills cost
+        # O(arena + k*block), not k functional O(arena) copies.
+        with pool.pinned(), pool.deferred_fills():
             k_arena, v_arena, pslots = pool.snapshot_for(
                 [b for b, _ in blocks])
             arena_data = {"keys": k_arena, "values": v_arena}
@@ -470,6 +477,7 @@ class BatchExecutor:
         if fallback:
             g0 = _time.time()
             rows = []
+            eng.io.readahead_blocks([blk for blk, _ in fallback])
             for blk, wslot in fallback:
                 arrs = eng.io.fetch_block_arrays(blk)
                 if arrs is None:          # purged mid-gather

@@ -82,6 +82,17 @@ _write_donated_jit = jax.jit(_write_fn, donate_argnums=(0, 1))
 _read_jit = jax.jit(_read_fn)
 
 
+def _scatter_fn(k_arena, v_arena, slots, keys, values):
+    """Batched multi-slot commit: ONE scatter along the pool axis for a
+    whole round of fills — O(arena + k*block) instead of k functional
+    O(arena) copies when the pin forces the copy path."""
+    return k_arena.at[slots].set(keys), v_arena.at[slots].set(values)
+
+
+_scatter_jit = jax.jit(_scatter_fn)
+_scatter_donated_jit = jax.jit(_scatter_fn, donate_argnums=(0, 1))
+
+
 class DeviceBlockPool:
     """Preallocated device arena + per-shard slot free lists."""
 
@@ -114,6 +125,10 @@ class DeviceBlockPool:
         self.slots_per_shard = pool_slots // num_shards
         self._lock = threading.Lock()
         self._pins = 0                     # live snapshot sections
+        self._deferred = 0                 # live deferred-fill sections
+        # slot -> (keys, values) commits buffered while deferred; flushed
+        # as ONE batched scatter at the next snapshot/read
+        self._pending: Dict[int, Tuple[jnp.ndarray, jnp.ndarray]] = {}
         self._free: List[deque] = [
             deque(range(d * self.slots_per_shard,
                         (d + 1) * self.slots_per_shard))
@@ -123,7 +138,54 @@ class DeviceBlockPool:
         self.values = jnp.zeros((pool_slots, block_capacity, width),
                                 jnp.float32)
         self.stats = {"allocs": 0, "frees": 0, "exhausted": 0, "writes": 0,
-                      "copy_writes": 0}
+                      "copy_writes": 0, "deferred_fills": 0,
+                      "batched_fill_commits": 0}
+
+    @contextlib.contextmanager
+    def deferred_fills(self):
+        """Batch-commit lease for a fold round's cold fills: while held,
+        ``commit`` buffers (slot, data) pairs instead of writing the
+        arena per block, and the next ``snapshot_for``/``read_block`` —
+        or the lease exit — flushes them as ONE batched scatter. Under a
+        concurrent ``pinned()`` section each per-block commit would be a
+        functional O(arena) copy; the batch makes a round of k fills
+        O(arena + k*block). Slot attachment stays immediate (a pending
+        slot is resident for placement purposes); reads always flush
+        first, so no path can observe a slot without its data."""
+        with self._lock:
+            self._deferred += 1
+        try:
+            yield
+        finally:
+            with self._lock:
+                self._deferred -= 1
+                if self._deferred == 0:
+                    self._flush_pending_locked()
+
+    def _flush_pending_locked(self) -> None:
+        """One scatter commit for every buffered fill (caller holds the
+        pool lock). Functional while pinned (snapshot references stay
+        live), donated otherwise."""
+        if not self._pending:
+            return
+        slots = list(self._pending)
+        # pad the batch to a power of two by repeating the first entry
+        # (same slot, same data: an idempotent duplicate scatter row) so
+        # the jitted scatter sees O(log) distinct shapes
+        n = 1
+        while n < len(slots):
+            n <<= 1
+        slots = slots + [slots[0]] * (n - len(slots))
+        ks = jnp.stack([self._pending[s][0] for s in slots])
+        vs = jnp.stack([self._pending[s][1] for s in slots])
+        idx = jnp.asarray(slots, jnp.int32)
+        scatter = _scatter_jit if self._pins else _scatter_donated_jit
+        if self._pins:
+            self.stats["copy_writes"] += 1
+        self.keys, self.values = scatter(self.keys, self.values, idx,
+                                         ks, vs)
+        self.stats["batched_fill_commits"] += 1
+        self._pending.clear()
 
     @contextlib.contextmanager
     def pinned(self):
@@ -174,6 +236,7 @@ class DeviceBlockPool:
     def free(self, slot: int) -> None:
         """Return an unattached slot (alloc'd but never committed)."""
         with self._lock:
+            self._pending.pop(slot, None)
             self._free[self.shard_of_slot(slot)].append(slot)
             self.stats["frees"] += 1
 
@@ -182,13 +245,17 @@ class DeviceBlockPool:
 
         Callers hold ``block.lock`` (destage / drop / aborted stage), so
         concurrent surrenders serialize there; the None-check under the
-        pool lock makes a double call harmless anyway.
+        pool lock makes a double call harmless anyway. A buffered
+        deferred fill for the slot is discarded — the block is leaving
+        the device tier, its data must not land after the slot is
+        reused.
         """
         with self._lock:
             slot = block.pool_slot
             if slot is None:
                 return None
             block.pool_slot = None
+            self._pending.pop(slot, None)
             self._free[self.shard_of_slot(slot)].append(slot)
             self.stats["frees"] += 1
             return slot
@@ -212,11 +279,17 @@ class DeviceBlockPool:
         keys = jnp.asarray(np.asarray(host_data["keys"], np.int32))
         vals = jnp.asarray(np.asarray(host_data["values"], np.float32))
         with self._lock:
-            write = _write_jit if self._pins else _write_donated_jit
-            if self._pins:
-                self.stats["copy_writes"] += 1
-            self.keys, self.values = write(self.keys, self.values,
-                                           slot, keys, vals)
+            if self._deferred:
+                # a fold round's fills batch into one scatter at the
+                # next snapshot/read (see ``deferred_fills``)
+                self._pending[slot] = (keys, vals)
+                self.stats["deferred_fills"] += 1
+            else:
+                write = _write_jit if self._pins else _write_donated_jit
+                if self._pins:
+                    self.stats["copy_writes"] += 1
+                self.keys, self.values = write(self.keys, self.values,
+                                               slot, keys, vals)
             block.pool_slot = slot
             block.pool = self
             self.stats["writes"] += 1
@@ -229,6 +302,7 @@ class DeviceBlockPool:
         consuming fold is dispatched the pin can drop (usage holds take
         over) and subsequent writes may donate the buffers."""
         with self._lock:
+            self._flush_pending_locked()
             return self.keys, self.values, [b.pool_slot for b in blocks]
 
     def read_block(self, block) -> Optional[Dict[str, jnp.ndarray]]:
@@ -244,6 +318,7 @@ class DeviceBlockPool:
             slot = block.pool_slot
             if slot is None:
                 return None
+            self._flush_pending_locked()
             k, v = _read_jit(self.keys, self.values, slot)
         return {"keys": k, "values": v}
 

@@ -1,5 +1,6 @@
 """Two-tier bucket state (paper §3.1): m-bucket in device memory (HBM
-analogue), p-bucket in host memory with spill to storage files.
+analogue), p-bucket in host memory with spill to a persistent block
+store.
 
 TPU adaptation: Flink's per-record ListState becomes *block-granular*
 state — events append into fixed-capacity SoA blocks; a window's state is
@@ -7,7 +8,9 @@ an ordered list of blocks, each resident in exactly one tier:
 
     DEVICE  (m-bucket)  — jax arrays, counted against an HBM budget
     HOST    (p-bucket)  — pinned numpy arrays
-    STORAGE (p-bucket)  — .npz spill files (HDD/SSD/NAS analogue)
+    STORAGE (p-bucket)  — a ``repro.storage`` BlockStore record
+                          (log-structured value log, or the legacy
+                          file-per-block .npz fallback)
 
 Blocks move between tiers only through ``core.staging`` (the single
 prioritized I/O executor), never synchronously inside operator execution —
@@ -33,7 +36,26 @@ class Tier(enum.Enum):
     STORAGE = "storage"
 
 
-_BLOCK_IDS = iter(range(1, 1 << 62))
+class _BlockIdGen:
+    """Monotonic block-id source. ``bump_to`` lets a checkpoint restore
+    re-use the checkpointed ids (the store keys records by them) without
+    colliding with ids handed to blocks created afterwards."""
+
+    def __init__(self):
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def __next__(self) -> int:
+        with self._lock:
+            self._n += 1
+            return self._n
+
+    def bump_to(self, n: int) -> None:
+        with self._lock:
+            self._n = max(self._n, int(n))
+
+
+_BLOCK_IDS = _BlockIdGen()
 
 
 @dataclass
@@ -63,7 +85,14 @@ class Block:
     dropped: bool = False        # predictive cleanup freed this block
     host_data: Optional[Dict[str, np.ndarray]] = None
     device_data: Optional[Dict[str, object]] = None
+    # legacy direct-file path (the npz backend mirrors its ref here so
+    # file-per-block code and tests keep working)
     storage_path: Optional[Path] = None
+    # persistent store holding this block's record, and the opaque ref
+    # its ``put`` returned; the store indexes by (window_key, block_id)
+    store: Optional[object] = field(default=None, repr=False, compare=False)
+    storage_ref: Optional[object] = None
+    window_key: Optional[Tuple[float, float]] = None
     pool_slot: Optional[int] = None    # arena slot while device-resident
     pool: Optional[object] = field(default=None, repr=False, compare=False)
     # host copy counted against IOScheduler's host tier (idempotent
@@ -115,20 +144,41 @@ class Block:
                           self.host_data["timestamps"][:self.fill],
                           self.host_data["values"][:self.fill])
 
+    @property
+    def in_storage(self) -> bool:
+        """True when a persistent copy exists (store record or legacy
+        direct file)."""
+        return (self.store is not None and self.storage_ref is not None) \
+            or self.storage_path is not None
+
     def _load_from_storage(self) -> None:
-        assert self.storage_path is not None
-        with np.load(self.storage_path) as z:
-            self.host_data = {k: z[k] for k in ("keys", "timestamps", "values")}
+        if self.store is not None and self.storage_ref is not None:
+            data = self.store.get(self.window_key, self.block_id)
+            assert data is not None, \
+                f"store record missing for block {self.block_id}"
+            self.host_data = data
+        else:
+            assert self.storage_path is not None
+            with np.load(self.storage_path) as z:
+                self.host_data = {
+                    k: z[k] for k in ("keys", "timestamps", "values")}
         self.tier = Tier.HOST
 
-    def spill_to_storage(self, directory: Path) -> None:
-        assert self.tier == Tier.HOST and self.host_data is not None
-        directory.mkdir(parents=True, exist_ok=True)
-        path = directory / f"block_{self.block_id}.npz"
-        np.savez(path, **self.host_data)
-        self.storage_path = path
-        self.host_data = None
-        self.tier = Tier.STORAGE
+    def put_to_store(self, store) -> None:
+        """Write this block's current content into ``store`` (skipping
+        the write when the store already holds this exact fill — block
+        content is append-only, so fill identifies it). Durable after the
+        store's next group commit; the caller clears the host copy only
+        after that commit. Caller holds ``lock``."""
+        assert self.host_data is not None
+        if not (self.store is store
+                and store.current_fill(self.window_key,
+                                       self.block_id) == self.fill):
+            ref = store.put(self.window_key, self.block_id,
+                            self.host_data, self.fill)
+            self.store = store
+            self.storage_ref = ref
+            self.storage_path = ref if isinstance(ref, Path) else None
 
     def drop(self) -> int:
         """Free all copies (predictive cleanup). Returns the device bytes
@@ -149,8 +199,16 @@ class Block:
                 # stage that commits after this sees ``dropped`` and
                 # frees the slot it allocated instead)
                 self.pool.release_slot(self)
-            if self.storage_path is not None and self.storage_path.exists():
+            if self.store is not None and self.storage_ref is not None:
+                # predictive cleanup's purge emits a TOMBSTONE; space
+                # comes back through cleanup-driven compaction (the npz
+                # backend's delete unlinks eagerly, preserving the
+                # legacy behaviour)
+                self.store.delete(self.window_key, self.block_id)
+            elif self.storage_path is not None \
+                    and self.storage_path.exists():
                 os.unlink(self.storage_path)
+            self.storage_ref = None
             self.storage_path = None
             return device_bytes
 
@@ -224,6 +282,7 @@ class WindowState:
             start += self.blocks[-1].append(batch, start)
         while start < len(batch):
             blk = Block.new(self.block_capacity, self.width)
+            blk.window_key = (self.window_start, self.window_end)
             taken = blk.append(batch, start)
             start += taken
             self.blocks.append(blk)

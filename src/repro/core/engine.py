@@ -122,8 +122,21 @@ class StreamEngine:
                  sequential_io: bool = True,
                  chunk_blocks: int = 4,
                  punctuated: bool = False,
-                 simulated_seconds_per_byte: float = 0.0):
+                 simulated_seconds_per_byte: float = 0.0,
+                 store=None):
         self.aion = aion or AionConfig()
+        # persistent tier of the p-bucket: an explicit BlockStore, or
+        # one built from the config backend under spill_dir ('log' by
+        # default — the legacy file-per-block npz backend stays
+        # available as AionConfig.store_backend='npz')
+        if store is None and spill_dir is not None:
+            from repro.storage import make_store
+            store = make_store(
+                self.aion.store_backend, spill_dir,
+                segment_bytes=self.aion.store_segment_bytes,
+                sim_spb=simulated_seconds_per_byte,
+                readahead_bytes=self.aion.store_readahead_bytes)
+        self.store = store
         self.assigner = assigner
         self.operator = operator
         self.value_width = value_width
@@ -169,7 +182,8 @@ class StreamEngine:
             chunk_blocks=chunk_blocks, spill_dir=spill_dir,
             host_budget_bytes=host_budget_bytes,
             simulated_seconds_per_byte=simulated_seconds_per_byte,
-            pool=self.pool)
+            pool=self.pool, store=self.store,
+            compact_ratio=self.aion.store_compact_ratio)
         self.policy = policy or StandardPolicy()
         self.cleanup = cleanup or PredictiveCleanup(
             coverage=self.aion.cleanup_coverage,
@@ -421,13 +435,26 @@ class StreamEngine:
                                    now, self.prestage_margin)
 
     def _poll_tail(self, now: float) -> None:
-        # 2. due pre-staging (for future re-executions)
+        # 2. due pre-staging (for future re-executions), preceded by
+        #    store readahead for the pre-stagings coming up within the
+        #    lead margin: proactive caching drives the persistent tier's
+        #    sequential sweep BEFORE the staging deadline, so the stage
+        #    itself reads cache hits
         if self.prestage_enabled:
+            if self.io.store is not None:
+                for wid in self.prestage.upcoming(now,
+                                                  self.prestage_margin):
+                    state = self.windows.get(wid)
+                    if state is not None:
+                        self.io.request_readahead(state)
             for wid in self.prestage.due(now):
                 state = self.windows.get(wid)
                 if state is not None and state.p_blocks():
                     self.io.request_stage(state)
-        # 3. predictive cleanup
+        # 3. predictive cleanup: purge emits store tombstones; the
+        #    compaction request after the loop consumes them (bounded
+        #    storage, paper §3.4)
+        purged_any = False
         wm = self.tracker.watermark
         if np.isfinite(wm):
             for wid in list(self.windows):
@@ -443,6 +470,9 @@ class StreamEngine:
                     self.prestage.cancel(wid)
                     self.reexec_plans.pop(wid, None)
                     del self.windows[wid]
+                    purged_any = True
+        if purged_any:
+            self.io.request_compaction()
         # 4. policy tick (idle destaging / memory-pressure handling)
         self.policy.on_tick(self.windows, self.io, now)
         self.metrics.snapshot(now, self.device_bytes(), self.host_bytes())
@@ -457,44 +487,82 @@ class StreamEngine:
         """Restore from ``checkpoint_state()`` output: watermark, lateness
         histogram, and window bucket contents.
 
-        Blocks are rebuilt 1:1 — same fill boundaries and ``persisted``
-        flags as at checkpoint time — rather than re-appended (which would
-        re-pack events into different blocks and lose the on-time/late
-        provenance). All blocks restore into the host tier; device
-        placement is re-decided by the policies after restart."""
+        Blocks are rebuilt 1:1 — same fill boundaries, block ids and
+        ``persisted`` flags as at checkpoint time — rather than
+        re-appended (which would re-pack events into different blocks and
+        lose the on-time/late provenance). Inline-data blocks restore
+        into the host tier; manifest blocks (``stored: True`` — written
+        by ``checkpoint_state(include_stored_data=False)``) restore into
+        the STORAGE tier, re-linked to their records in the engine's
+        (reopened) store, and load lazily on demand. After the rebuild
+        the store is reconciled: records not referenced by any restored
+        block are orphans (post-checkpoint spills of a crashed run, or
+        purges whose tombstones never committed) and get tombstoned so
+        compaction can reclaim them."""
         import jax.numpy as _jnp
+        from repro.core.buckets import _BLOCK_IDS
+        store = self.io.store
         self.tracker.watermark = snap["watermark"]
         self.cleanup.hist.counts = _jnp.asarray(
             np.asarray(snap["hist_counts"], np.float32))
         self.cleanup.hist.total = snap["hist_total"]
         self.windows.clear()
+        max_bid = 0
+        live_keys = []
         for w in snap["windows"]:
             wid = WindowId(w["start"], w["end"])
             st = self._state_for(wid)
             st.expired = w["expired"]
             for b in w["blocks"]:
-                data = b["data"]
-                if not data or b["fill"] == 0:
+                data = b.get("data")
+                fill = int(b["fill"])
+                stored = bool(b.get("stored", False))
+                if fill == 0 or (not data and not stored):
                     continue
                 blk = Block.new(st.block_capacity, st.width)
-                fill = int(b["fill"])
-                blk.host_data["keys"][:fill] = \
-                    np.asarray(data["keys"], np.int32)[:fill]
-                blk.host_data["timestamps"][:fill] = \
-                    np.asarray(data["timestamps"], np.float64)[:fill]
-                blk.host_data["values"][:fill] = \
-                    np.asarray(data["values"], np.float32)[:fill]
+                blk.window_key = (wid.start, wid.end)
+                if "block_id" in b:
+                    blk.block_id = int(b["block_id"])
+                    max_bid = max(max_bid, blk.block_id)
                 blk.fill = fill
                 blk.persisted = bool(b.get(
                     "persisted", b.get("tier") != Tier.DEVICE.value))
+                if stored and not data:
+                    # manifest block: the record IS the data — verify it
+                    # survived (WAL recovery guarantees acknowledged
+                    # commits did) and restore cold
+                    if store is None or store.current_fill(
+                            blk.window_key, blk.block_id) != fill:
+                        raise KeyError(
+                            f"checkpoint references store record "
+                            f"{blk.window_key}/{blk.block_id} (fill "
+                            f"{fill}) that the store does not hold")
+                    blk.store = store
+                    blk.storage_ref = store.locate(blk.window_key,
+                                                   blk.block_id)
+                    blk.host_data = None
+                    blk.tier = Tier.STORAGE
+                    live_keys.append((blk.window_key, blk.block_id))
+                else:
+                    blk.host_data["keys"][:fill] = \
+                        np.asarray(data["keys"], np.int32)[:fill]
+                    blk.host_data["timestamps"][:fill] = \
+                        np.asarray(data["timestamps"], np.float64)[:fill]
+                    blk.host_data["values"][:fill] = \
+                        np.asarray(data["values"], np.float32)[:fill]
                 st.blocks.append(blk)
             st.total_events = w["total_events"]
             st.late_events = w["late_events"]
+        # new blocks must never collide with restored ids (the store
+        # keys records by them)
+        _BLOCK_IDS.bump_to(max_bid)
+        if store is not None:
+            store.reconcile(live_keys)
 
     @staticmethod
     def _block_ckpt_data(b: Block) -> Dict[str, Any]:
         """Serializable event arrays for one block, whatever its tier
-        (spilled blocks are read back from their .npz without mutating
+        (spilled blocks are read back through the store without mutating
         the block's residency).
 
         Read order is race-critical vs the concurrent destage thread:
@@ -508,12 +576,18 @@ class StreamEngine:
             return {k: np.asarray(v).tolist() for k, v in hd.items()}
         if dd is not None:
             return {k: np.asarray(v).tolist() for k, v in dd.items()}
-        if b.storage_path is not None:
-            # checked BEFORE the pool: a spilled copy carries the real
-            # timestamps, which the arena does not
-            with np.load(b.storage_path) as z:
-                return {k: z[k].tolist()
-                        for k in ("keys", "timestamps", "values")}
+        if b.in_storage:
+            # checked BEFORE the pool: a persistent copy carries the
+            # real timestamps, which the arena does not
+            if b.store is not None and b.storage_ref is not None:
+                d = b.store.get(b.window_key, b.block_id)
+                if d is not None:
+                    return {k: np.asarray(v).tolist()
+                            for k, v in d.items()}
+            if b.storage_path is not None and b.storage_path.exists():
+                with np.load(b.storage_path) as z:
+                    return {k: z[k].tolist()
+                            for k in ("keys", "timestamps", "values")}
         if b.pool is not None and b.pool_slot is not None:
             # pooled blocks normally keep their host copy; this covers a
             # defensively-rebuilt one (timestamps restore as zeros)
@@ -522,10 +596,48 @@ class StreamEngine:
                 return {k: np.asarray(v).tolist() for k, v in d.items()}
         return {}
 
-    def checkpoint_state(self) -> Dict[str, Any]:
+    def _block_ckpt_entry(self, b: Block,
+                          include_stored_data: bool) -> Dict[str, Any]:
+        entry = {"fill": b.fill, "tier": b.tier.value,
+                 "persisted": b.persisted, "block_id": b.block_id}
+        store = self.io.store
+        # manifest references require a crash-durable backend: the npz
+        # fallback loses fill/window metadata across a reopen (its
+        # on-disk layout is the bare arrays), so its checkpoints always
+        # inline the data
+        if not include_stored_data and store is not None \
+                and store.durable_writes \
+                and b.in_storage and b.store is store \
+                and store.current_fill(b.window_key,
+                                       b.block_id) == b.fill:
+            # the store's record IS this block's exact content (fill
+            # identifies it — blocks are append-only): a manifest
+            # reference replaces the inline copy, and restore reads it
+            # back from the recovered log
+            entry["stored"] = True
+            entry["data"] = {}
+        else:
+            entry["data"] = self._block_ckpt_data(b)
+        return entry
+
+    def checkpoint_state(self, include_stored_data: bool = True
+                         ) -> Dict[str, Any]:
         """Serializable engine state for fault tolerance (bucket manifests,
-        watermark, lateness histogram, re-execution plans)."""
-        return {
+        watermark, lateness histogram, re-execution plans).
+
+        ``include_stored_data=False`` writes *manifest* checkpoints:
+        blocks whose exact content is already durable in the persistent
+        store serialize as ``(window, block_id, fill)`` references
+        instead of inline arrays — the checkpoint shrinks to metadata
+        for everything the value log already holds, and restore +
+        WAL recovery reassemble the state (``tests/
+        test_storage_recovery.py`` drives the crash matrix). The final
+        group commit below makes that sound: the store index reflects
+        ``put`` (pre-ack), so a referenced record might otherwise still
+        be sitting in an unacknowledged tail a crash would truncate —
+        committing before the checkpoint is handed out guarantees every
+        reference is durable."""
+        snap = {
             "watermark": self.tracker.watermark,
             "hist_counts": np.asarray(self.cleanup.hist.counts).tolist(),
             "hist_total": self.cleanup.hist.total,
@@ -536,12 +648,13 @@ class StreamEngine:
                     "late_events": st.late_events,
                     "expired": st.expired,
                     "blocks": [
-                        {"fill": b.fill, "tier": b.tier.value,
-                         "persisted": b.persisted,
-                         "data": self._block_ckpt_data(b)}
+                        self._block_ckpt_entry(b, include_stored_data)
                         for b in st.blocks
                     ],
                 }
                 for wid, st in self.windows.items()
             ],
         }
+        if not include_stored_data and self.io.store is not None:
+            self.io.store.commit()
+        return snap

@@ -65,7 +65,8 @@ class PrestageScheduler:
         self.punctuated = punctuated
         self._heap: List[_Planned] = []
         self._planned: Dict[WindowId, float] = {}
-        self.stats = {"planned": 0, "immediate": 0}
+        self._hinted: Dict[WindowId, float] = {}
+        self.stats = {"planned": 0, "immediate": 0, "readahead_hints": 0}
 
     def plan(self, window: WindowId, state: WindowState,
              exec_time: float, now: float,
@@ -105,8 +106,28 @@ class PrestageScheduler:
             item = heapq.heappop(self._heap)
             if self._planned.get(item.window) == item.stage_at:
                 del self._planned[item.window]
+                self._hinted.pop(item.window, None)
+                out.append(item.window)
+        return out
+
+    def upcoming(self, now: float, horizon: float) -> List[WindowId]:
+        """Windows whose pre-staging starts within ``horizon`` — the
+        store-readahead hook: the engine drives the persistent tier's
+        batched prefetch for these BEFORE their staging deadline, so the
+        stage itself finds its blocks in the store's read cache. Each
+        planned staging is hinted once (re-planning re-arms it)."""
+        out = []
+        for item in self._heap:
+            stage_at = self._planned.get(item.window)
+            if stage_at != item.stage_at:
+                continue                       # superseded entry
+            if now <= stage_at <= now + horizon \
+                    and self._hinted.get(item.window) != stage_at:
+                self._hinted[item.window] = stage_at
+                self.stats["readahead_hints"] += 1
                 out.append(item.window)
         return out
 
     def cancel(self, window: WindowId) -> None:
         self._planned.pop(window, None)
+        self._hinted.pop(window, None)

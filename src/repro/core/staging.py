@@ -29,6 +29,7 @@ import jax
 import numpy as np
 
 from repro.core.buckets import Block, MemoryBudget, Tier, WindowState
+from repro.storage.blockstore import BlockStore, SimulatedCost
 
 PRIO_DEMAND_STAGE = -1    # staging an operator is *blocked on* right now
 PRIO_STAGE = 0            # proactive pre-staging
@@ -58,13 +59,35 @@ class IOScheduler:
                  chunk_blocks: int = 4, spill_dir: Optional[Path] = None,
                  host_budget_bytes: Optional[int] = None,
                  simulated_seconds_per_byte: float = 0.0,
-                 pool=None):
+                 pool=None, store: Optional[BlockStore] = None,
+                 compact_ratio: float = 2.0):
         self.budget = budget
         self.sequential_io = sequential_io
         self.chunk_blocks = max(chunk_blocks, 1)
         self.spill_dir = spill_dir
         self.host_budget_bytes = host_budget_bytes
         self.sim_spb = simulated_seconds_per_byte
+        self.compact_ratio = compact_ratio
+        # persistent tier of the p-bucket: a BlockStore (the engine
+        # builds one per AionConfig.store_backend); a bare spill_dir
+        # keeps the legacy file-per-block npz semantics
+        if store is None and spill_dir is not None:
+            from repro.storage import NpzBlockStore
+            store = NpzBlockStore(spill_dir,
+                                  sim_spb=simulated_seconds_per_byte)
+        self.store = store
+        # the simulated-cost model lives behind the store interface so
+        # every backend prices transfers identically (zero-byte
+        # transfers are free by contract); engines without a storage
+        # tier still charge destage/late-write costs through a local
+        # model
+        if store is not None:
+            if simulated_seconds_per_byte \
+                    and not store.simcost.seconds_per_byte:
+                store.simcost.seconds_per_byte = simulated_seconds_per_byte
+            self.simcost = store.simcost
+        else:
+            self.simcost = SimulatedCost(simulated_seconds_per_byte)
         # persistent device block pool (core/block_pool.py); None keeps
         # the legacy per-block device_put staging path
         self.pool = pool
@@ -88,7 +111,6 @@ class IOScheduler:
         # here. Ordering: block.lock may be held when taking _host_lock,
         # never the reverse.
         self._host_lock = threading.Lock()
-        self._sim_lock = threading.Lock()     # one persistent-tier channel
         if sequential_io:
             self._thread = threading.Thread(target=self._run, daemon=True)
             self._thread.start()
@@ -171,17 +193,24 @@ class IOScheduler:
             self._thread.join(timeout=5)
         if self._pool is not None:
             self._pool.shutdown(wait=True)
+        if self.store is not None:
+            self.store.close()         # final group commit + handles
 
     # ------------------------------------------------------------ transfers
     def _simulate_io(self, nbytes: int) -> None:
-        """Model a slow persistent tier deterministically: the transfer
-        thread really sleeps, so scheduling (priorities, preemption,
-        pre-staging lead time) — not host noise — decides who stalls."""
-        if self.sim_spb > 0:
-            dt = nbytes * self.sim_spb
-            self.stats["simulated_io_seconds"] += dt
-            with self._sim_lock:              # single channel: threads queue
-                time.sleep(dt)
+        """Model a slow persistent tier deterministically through the
+        store's cost model (one channel: the transfer thread really
+        sleeps, so scheduling — priorities, preemption, pre-staging lead
+        time — decides who stalls, not host noise). Zero-byte transfers
+        (empty blocks) are never charged."""
+        if nbytes <= 0:
+            return
+        self.stats["simulated_io_seconds"] += self.simcost.charge(nbytes)
+
+    @staticmethod
+    def _cost_bytes(block: Block) -> int:
+        """Billable transfer size: an empty block moves no event data."""
+        return block.nbytes if block.fill > 0 else 0
 
     def stage_block_sync(self, block: Block,
                          shard: Optional[int] = None) -> bool:
@@ -220,10 +249,11 @@ class IOScheduler:
 
         t0 = time.time()
         if block.tier == Tier.STORAGE:
-            # load under the block lock: a concurrent purge unlinks the
-            # .npz and would otherwise strand the slot/reservation we hold
+            # load under the block lock: a concurrent purge tombstones
+            # the store record and would otherwise strand the
+            # slot/reservation we hold
             with block.lock:
-                if block.dropped or block.storage_path is None:
+                if block.dropped or not block.in_storage:
                     return fail()
                 block.as_event_batch()                # load from file
                 self._account_host(block)
@@ -263,7 +293,7 @@ class IOScheduler:
                 block.device_data = device_data
             block.tier = Tier.DEVICE
         if block.persisted:       # reads from the persistent tier pay I/O;
-            self._simulate_io(block.nbytes)   # fresh ingest is memory-direct
+            self._simulate_io(self._cost_bytes(block))  # ingest is direct
         self.stats["staged_blocks"] += 1
         self.stats["stage_events"] += block.fill
         self.stats["stage_seconds"] += time.time() - t0
@@ -283,7 +313,7 @@ class IOScheduler:
                     block.host_data = {
                         k: np.asarray(v)
                         for k, v in block.device_data.items()}
-                elif block.storage_path is not None:
+                elif block.in_storage:
                     # a racing spill wrote the REAL arrays (incl.
                     # timestamps, which the arena does not carry) to
                     # storage; prefer them over a pool read that would
@@ -303,7 +333,7 @@ class IOScheduler:
         self._account_host(block)
         if not was_pooled:
             self.budget.release(block.nbytes)
-        self._simulate_io(block.nbytes)
+        self._simulate_io(self._cost_bytes(block))
         self.stats["destaged_blocks"] += 1
         self.stats["destage_seconds"] += time.time() - t0
         self._maybe_spill()
@@ -322,23 +352,29 @@ class IOScheduler:
                 return
             block.host_accounted = True
             self._host_bytes += block.nbytes
-            if self.spill_dir is not None:
+            if self.store is not None:
                 self._host_lru.append(block)
 
     def _maybe_spill(self) -> None:
-        """Enforce the host budget by spilling cold host blocks to storage
-        (the persistent-storage tier of the p-bucket). Candidates are
-        registered by ``_account_host`` in first-destage order (oldest =
-        coldest first)."""
-        if self.host_budget_bytes is None or self.spill_dir is None:
+        """Enforce the host budget by spilling cold host blocks to the
+        persistent store. Candidates are registered by ``_account_host``
+        in first-destage order (oldest = coldest first); each pass pops
+        the candidates needed to get under budget and spills them as ONE
+        group commit (the log store turns the batch into sequential
+        appends + one fsync)."""
+        if self.host_budget_bytes is None or self.store is None:
             return
         while True:
+            batch: List[Block] = []
             with self._host_lock:
-                if self._host_bytes <= self.host_budget_bytes \
-                        or not self._host_lru:
+                need = self._host_bytes - self.host_budget_bytes
+                if need <= 0 or not self._host_lru:
                     return
-                blk = self._host_lru.popleft()
-            self.spill_block_sync(blk)
+                while need > 0 and self._host_lru:
+                    blk = self._host_lru.popleft()
+                    batch.append(blk)
+                    need -= blk.nbytes
+            self.spill_blocks_sync(batch)
 
 
     def fetch_block_host(self, block: Block
@@ -360,13 +396,25 @@ class IOScheduler:
         with block.lock:
             if block.dropped:
                 return None
-            if block.host_data is None and block.storage_path is not None:
+            if block.host_data is None and block.in_storage:
                 block.as_event_batch()
                 self._account_host(block)
             host_data = block.host_data
         if host_data is not None and block.persisted:
-            self._simulate_io(block.nbytes)
+            self._simulate_io(self._cost_bytes(block))
         return host_data
+
+    def readahead_blocks(self, blocks: List[Block]) -> None:
+        """Prefetch storage-resident blocks into the store's read cache
+        in one batched, segment-sequential sweep — the demand loads that
+        follow become cache hits instead of per-block random reads."""
+        if self.store is None:
+            return
+        keys = [(b.window_key, b.block_id) for b in blocks
+                if b.tier == Tier.STORAGE and not b.dropped
+                and b.in_storage]
+        if keys:
+            self.store.readahead(keys)
 
     def fetch_block_arrays(self, block: Block):
         """Device-preferred read of a block's full-capacity SoA arrays
@@ -390,31 +438,63 @@ class IOScheduler:
         return self.fetch_block_host(block)
 
     def spill_block_sync(self, block: Block) -> None:
-        if self.spill_dir is None:
-            return
-        # spill under the block lock so a concurrent purge can't clear
-        # host_data mid-write or have its storage unlink undone by a
-        # spill that resurrects the .npz for a dead block
-        with block.lock:
-            if block.dropped or block.tier != Tier.HOST:
-                # the LRU pop consumed this block's registration but it
-                # cannot spill (purged, or re-staged to device with its
-                # host shadow kept): un-account it so the next destage
-                # re-registers — otherwise its bytes would stay counted
-                # in _host_bytes while being unevictable forever
-                with self._host_lock:
-                    if block.host_accounted:
-                        block.host_accounted = False
-                        self._host_bytes = max(
-                            self._host_bytes - block.nbytes, 0)
-                return
-            nbytes = block.nbytes
-            block.spill_to_storage(self.spill_dir)
+        self.spill_blocks_sync([block])
+
+    def _unaccount_unspillable(self, block: Block) -> None:
+        """The LRU pop consumed this block's registration but it cannot
+        spill (purged, empty, or re-staged to device with its host
+        shadow kept): un-account it so the next destage re-registers —
+        otherwise its bytes would stay counted in _host_bytes while
+        being unevictable forever."""
         with self._host_lock:
             if block.host_accounted:
                 block.host_accounted = False
-                self._host_bytes = max(self._host_bytes - nbytes, 0)
-        self._simulate_io(nbytes)
+                self._host_bytes = max(
+                    self._host_bytes - block.nbytes, 0)
+
+    def spill_blocks_sync(self, blocks: List[Block]) -> None:
+        """Spill a batch of host blocks to the persistent store under
+        ONE group commit: every block's record is appended (buffered),
+        the commit makes them durable, and only then are the host copies
+        dropped — a crash mid-spill loses nothing, the unacknowledged
+        blocks still hold their host data. A block whose exact content
+        is already persistent (same fill) skips the rewrite entirely."""
+        if self.store is None:
+            return
+        staged: List[Block] = []
+        for block in blocks:
+            # put under the block lock so a concurrent purge can't clear
+            # host_data mid-write or have its tombstone undone by a
+            # spill that resurrects the record for a dead block
+            with block.lock:
+                if block.dropped or block.tier != Tier.HOST \
+                        or block.fill == 0:
+                    self._unaccount_unspillable(block)
+                    continue
+                block.put_to_store(self.store)
+            staged.append(block)
+        if not staged:
+            return
+        self.store.commit()                    # durability barrier
+        total = 0
+        for block in staged:
+            with block.lock:
+                if block.dropped or block.tier != Tier.HOST:
+                    # a purge or re-stage landed between the commit and
+                    # this finalize: the record stays (purge already
+                    # tombstoned it if it ran), the residency is theirs
+                    self._unaccount_unspillable(block)
+                    continue
+                nbytes = block.nbytes
+                block.host_data = None
+                block.tier = Tier.STORAGE
+                block.persisted = True
+            with self._host_lock:
+                if block.host_accounted:
+                    block.host_accounted = False
+                    self._host_bytes = max(self._host_bytes - nbytes, 0)
+            total += nbytes
+        self._simulate_io(total)
 
     # ------------------------------------------------------- bulk requests
     def shard_of(self, window: WindowState) -> Optional[int]:
@@ -441,9 +521,42 @@ class IOScheduler:
         shard = self.shard_of(window)
 
         def do():
+            # batched store readahead first: the per-block loads below
+            # then read sequentially-swept cache entries, not one random
+            # record each (the proactive-caching path's storage half)
+            self.readahead_blocks(blocks)
             for blk in blocks:
                 self.stage_block_sync(blk, shard=shard)
         return self.submit(PRIO_DEMAND_STAGE if demand else PRIO_STAGE, do)
+
+    def request_readahead(self, window: WindowState) -> threading.Event:
+        """Queue a storage-only readahead for a window's spilled blocks
+        (no host/device residency change): proactive caching drives this
+        ahead of the actual pre-stage, so the store's sequential sweep
+        runs before the staging deadline instead of inside it."""
+        blocks = [b for b in window.blocks if b.tier == Tier.STORAGE]
+
+        def do():
+            self.readahead_blocks(blocks)
+        return self.submit(PRIO_STAGE, do)
+
+    def request_compaction(self, max_ratio: Optional[float] = None
+                           ) -> Optional[threading.Event]:
+        """Queue background compaction (lowest priority): commit any
+        pending tombstones, then reclaim dead log space until the store
+        is back under its ratio bound. Driven by the engine after
+        predictive-cleanup purges."""
+        if self.store is None:
+            return None
+        ratio = self.compact_ratio if max_ratio is None else max_ratio
+
+        def do():
+            self.store.commit()
+            reclaimed = self.store.compact_if_needed(ratio)
+            if reclaimed:
+                self.stats["compacted_bytes"] = \
+                    self.stats.get("compacted_bytes", 0) + reclaimed
+        return self.submit(PRIO_DESTAGE, do)
 
     def request_destage(self, window: WindowState,
                         keep_bootstrap: int = 0) -> threading.Event:
@@ -475,10 +588,29 @@ class IOScheduler:
                            ) -> threading.Event:
         """Late events were appended host-side; this acknowledges/persists
         them at middle priority (and spills if the host tier is over
-        budget)."""
+        budget).
+
+        With a durable store (the log backend) the write is REAL: the
+        blocks' records group-commit into the value log, so acknowledged
+        late events survive a crash even before any checkpoint. The host
+        copy stays resident (tier unchanged) — the record is the
+        p-bucket's persistent shadow. The legacy npz backend keeps the
+        seed behaviour (flag + simulated cost only)."""
+        durable = self.store is not None and self.store.durable_writes
+
         def do():
             self.stats["late_write_blocks"] += len(blocks)
+            total = 0
             for blk in blocks:
-                blk.persisted = True   # late events land in the p-bucket
-                self._simulate_io(blk.nbytes)
+                with blk.lock:
+                    if blk.dropped:
+                        continue
+                    if durable and blk.fill > 0 \
+                            and blk.host_data is not None:
+                        blk.put_to_store(self.store)
+                    blk.persisted = True  # late events land in p-bucket
+                total += self._cost_bytes(blk)
+            if durable:
+                self.store.commit()
+            self._simulate_io(total)
         return self.submit(PRIO_LATE_WRITE, do)

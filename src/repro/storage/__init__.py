@@ -1,0 +1,30 @@
+"""Persistent p-bucket storage: the BlockStore interface, the
+log-structured backend (segmented value log + WAL recovery +
+cleanup-driven compaction), and the legacy file-per-block npz fallback.
+"""
+from repro.storage.blockstore import (
+    BlockKey, BlockStore, SimulatedCost, WindowKey, normalize_window_key,
+    payload_nbytes,
+)
+from repro.storage.logstore import LogBlockStore
+from repro.storage.npzstore import NpzBlockStore
+
+
+def make_store(backend: str, directory, *, segment_bytes: int = 1 << 20,
+               sim_spb: float = 0.0,
+               readahead_bytes: int = 16 << 20) -> BlockStore:
+    """Build a store by config name (``AionConfig.store_backend``)."""
+    if backend == "log":
+        return LogBlockStore(directory, segment_bytes=segment_bytes,
+                             sim_spb=sim_spb,
+                             readahead_bytes=readahead_bytes)
+    if backend == "npz":
+        return NpzBlockStore(directory, sim_spb=sim_spb)
+    raise ValueError(f"unknown store backend: {backend!r}")
+
+
+__all__ = [
+    "BlockKey", "BlockStore", "LogBlockStore", "NpzBlockStore",
+    "SimulatedCost", "WindowKey", "make_store", "normalize_window_key",
+    "payload_nbytes",
+]

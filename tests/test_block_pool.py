@@ -102,6 +102,51 @@ def test_unpinned_writes_update_in_place():
                                       blk.host_data["keys"])
 
 
+def test_deferred_fills_batch_into_one_scatter():
+    """Inside ``deferred_fills`` commits buffer; the next snapshot/read
+    flushes them as ONE batched scatter (k fills cost one arena commit,
+    not k functional copies under a pin)."""
+    pool = DeviceBlockPool(8, CAP, W)
+    blocks = [_block(i + 1) for i in range(4)]
+    with pool.pinned(), pool.deferred_fills():
+        for blk in blocks:
+            s = pool.alloc()
+            with blk.lock:
+                pool.commit(blk, s, blk.host_data)
+        assert pool.stats["deferred_fills"] == 4
+        assert pool.stats["batched_fill_commits"] == 0
+        # reads flush first: no path observes a slot without its data
+        d = pool.read_block(blocks[0])
+        np.testing.assert_array_equal(np.asarray(d["keys"]),
+                                      blocks[0].host_data["keys"])
+        assert pool.stats["batched_fill_commits"] == 1
+        assert pool.stats["copy_writes"] == 1     # pinned -> one copy
+    for blk in blocks:
+        d = pool.read_block(blk)
+        np.testing.assert_array_equal(np.asarray(d["keys"]),
+                                      blk.host_data["keys"])
+    assert pool.stats["batched_fill_commits"] == 1  # nothing re-flushed
+
+
+def test_deferred_fill_dropped_when_slot_released():
+    """A purge racing a deferred fill discards the buffered write: the
+    slot returns free and a later occupant is never overwritten."""
+    pool = DeviceBlockPool(1, CAP, W)
+    a, b = _block(3), _block(9)
+    with pool.deferred_fills():
+        slot = pool.alloc()
+        with a.lock:
+            pool.commit(a, slot, a.host_data)
+        pool.release_slot(a)                 # purge wins the race
+        slot2 = pool.alloc()
+        assert slot2 == slot
+        with b.lock:
+            pool.commit(b, slot2, b.host_data)
+    d = pool.read_block(b)
+    np.testing.assert_array_equal(np.asarray(d["keys"]),
+                                  b.host_data["keys"])  # b, not a
+
+
 # --------------------------------------------------- exactly-once slot free
 def test_purge_while_pooled_frees_slot_exactly_once():
     pool = DeviceBlockPool(4, CAP, W)

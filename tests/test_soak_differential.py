@@ -58,9 +58,12 @@ def _cleanup() -> _NoPurgeCleanup:
 
 def _make_engine(op_name: str, batched: bool, sharded: bool,
                  spill_dir, width: int,
-                 pooled: bool = False) -> StreamEngine:
+                 pooled: bool = False,
+                 store: str = "log") -> StreamEngine:
     aion = AionConfig(block_size=256, batched_execution=batched,
-                      slot_sharding=sharded, block_pool=pooled)
+                      slot_sharding=sharded, block_pool=pooled,
+                      store_backend=store,
+                      store_segment_bytes=128 << 10)
     kw = {"num_keys": 8} if op_name == "stock" else {}
     return StreamEngine(
         assigner=TumblingWindows(WINDOW),
@@ -110,12 +113,12 @@ class _SoakTotals:
 
 
 def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
-           width: int = 1, pooled: bool = False):
+           width: int = 1, pooled: bool = False, store: str = "log"):
     """Run the soak; returns (results, oracle_events, counter_totals)."""
     rng = np.random.default_rng(SEED)
     totals = _SoakTotals()
     eng = _make_engine(op_name, batched, sharded, spill_dir / "a", width,
-                       pooled)
+                       pooled, store)
     all_events = []           # oracle ledger: every event ever generated
     now = 0.0
     wm = 0.0
@@ -151,7 +154,7 @@ def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
             totals.absorb(eng.metrics)
             eng.close()
             eng = _make_engine(op_name, batched, sharded,
-                               spill_dir / "b", width, pooled)
+                               spill_dir / "b", width, pooled, store)
             eng.restore_state(snap)
 
     # close out: expire everything, fire remaining re-execution plans,
@@ -202,18 +205,23 @@ def _oracle_stock(keys, ts, vals, num_keys: int = 8):
     return out
 
 
-@pytest.mark.parametrize("batched,sharded,pooled", [
-    (True, True, True), (True, False, True),      # block-table gather
-    (True, True, False), (True, False, False),    # stacked gather
-    (False, True, False), (False, False, False),
+@pytest.mark.parametrize("batched,sharded,pooled,store", [
+    # the default persistent tier is the log-structured store
+    (True, True, True, "log"), (True, False, True, "log"),  # block table
+    (True, True, False, "log"), (True, False, False, "log"),  # stacked
+    (False, True, False, "log"), (False, False, False, "log"),
+    # legacy npz fallback backend: the same soak over the
+    # file-per-block persistent tier (store ablation axis)
+    (True, False, True, "npz"), (True, True, False, "npz"),
     # no (batched=False, pooled=True) row: the engine only builds the
     # pool when the batched path can consume block tables, so that
     # config is byte-identical to all-off (pooled per-window folds are
     # covered via single-window batches inside the pooled rows above)
 ])
-def test_soak_differential_average(tmp_path, batched, sharded, pooled):
+def test_soak_differential_average(tmp_path, batched, sharded, pooled,
+                                   store):
     results, (keys, ts, vals), totals = _drive(
-        "average", batched, sharded, tmp_path, pooled=pooled)
+        "average", batched, sharded, tmp_path, pooled=pooled, store=store)
     want = _oracle_average(keys, ts, vals)
     assert set(results) == set(want)
     for wid in want:
