@@ -5,6 +5,7 @@ verify:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 	$(MAKE) verify-storage
 	$(MAKE) verify-multidevice
+	$(MAKE) verify-pipeline
 
 # Persistent p-bucket store suites, tmpdir-isolated (pytest tmp_path):
 # storage unit tests (WAL group commit, footer rebuild, torn-tail
@@ -31,6 +32,15 @@ verify-multidevice:
 		tests/test_kernels.py tests/test_property.py \
 		tests/test_batch_exec.py tests/test_block_pool.py
 
+# Pipelined-engine gate: ingest/stage/fold overlap (futures, watermark
+# fences, purge guard), I/O executor failure surfacing + weighted
+# round-robin fairness, and multi-tenant multiplexing parity. Also
+# collected by plain `pytest` above; this is the focused pipeline gate.
+verify-pipeline:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
+		tests/test_pipeline.py tests/test_staging_failures.py \
+		tests/test_tenancy.py
+
 # Benchmark entry point (CSV rows, one per paper table/figure).
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py
@@ -50,5 +60,10 @@ bench-q1:
 bench-q4:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q4_staleness.py
 
-.PHONY: verify verify-storage verify-multidevice bench bench-gather \
-	bench-q1 bench-q4
+# Pipelined vs synchronous fold benchmark (cold p-blocks, 8 due
+# windows); merges a "pipeline" section into BENCH_q2_gather.json
+bench-pipeline:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q2_throughput.py --pipeline
+
+.PHONY: verify verify-storage verify-multidevice verify-pipeline \
+	bench bench-gather bench-q1 bench-q4 bench-pipeline

@@ -297,6 +297,126 @@ def gather_benchmark(num_windows: int = 8, events_per_window: int = 8000,
     return out
 
 
+def pipeline_benchmark(num_windows: int = 8, num_rounds: int = 10,
+                       events_per_window: int = 4000,
+                       sim_spb: float = 8e-7, op_name: str = "lrb",
+                       num_keys: int = 256,
+                       emit_json: str = "BENCH_q2_gather.json") -> Dict:
+    """Pipelined async engine vs the synchronous loop (ISSUE 6
+    tentpole): ``num_rounds`` independent groups of ``num_windows`` due
+    windows, every p-block cold (destaged to a simulated persistent
+    tier), executed end-to-end.
+
+    The synchronous loop pays, per round, demand staging then the fold,
+    serially across rounds. The pipelined engine submits every round to
+    the fold worker up front: round k+1's staging (prefetch at
+    PRIO_STAGE, promoted to PRIO_DEMAND_STAGE when its fold starts)
+    overlaps round k's fold, so the end-to-end wall converges to
+    max(total I/O, total fold) + one pipeline fill. ``sim_spb`` is tuned
+    so staging a round costs about as much as folding it — the regime
+    the overlap targets. Acceptance: ``pipeline_vs_sync >= 1.3`` at 8
+    due windows; the result merges into ``emit_json``.
+    """
+    import json
+    import os
+
+    from repro.configs.base import AionConfig
+    from repro.core import InMemoryPolicy, StreamEngine, TumblingWindows
+    from repro.core.batch_exec import BatchWorkItem
+    from repro.core.events import EventBatch
+    from repro.core.operators import make_operator
+    from repro.core.triggers import DeltaTTrigger
+
+    wd = 10.0
+    op_kw = {}
+    if op_name == "stock":
+        op_kw = {"num_keys": num_keys}
+    elif op_name == "lrb":
+        op_kw = {"num_segments": num_keys}
+
+    def build(pipelined: bool) -> "StreamEngine":
+        aion = AionConfig(block_size=1024, batched_execution=True,
+                          block_pool=True,
+                          pipelined_execution=pipelined)
+        op = make_operator(op_name, aion.block_size, 1, **op_kw)
+        return StreamEngine(
+            assigner=TumblingWindows(wd), operator=op, aion=aion,
+            value_width=1, device_budget_bytes=512 << 20,
+            policy=InMemoryPolicy(),     # no post-execute destage noise
+            simulated_seconds_per_byte=sim_spb,
+            trigger=DeltaTTrigger(executions=1),
+        )
+
+    def rounds_of(eng):
+        """Ingest num_rounds disjoint window groups; returns the groups
+        (identical shapes round-over-round: one jit compile)."""
+        rng = np.random.default_rng(0)
+        n = num_windows * events_per_window
+        for r in range(num_rounds):
+            base = r * num_windows * wd
+            ts = np.concatenate([
+                rng.uniform(base + i * wd, base + (i + 1) * wd,
+                            events_per_window)
+                for i in range(num_windows)])
+            eng.ingest(
+                EventBatch(rng.integers(0, num_keys, n).astype(np.int32),
+                           ts, rng.normal(size=(n, 1)).astype(np.float32)),
+                now=0.0)
+        wids = sorted(eng.windows)
+        assert len(wids) == num_rounds * num_windows
+        return [[BatchWorkItem(wid, eng.windows[wid], True)
+                 for wid in wids[r * num_windows:(r + 1) * num_windows]]
+                for r in range(num_rounds)]
+
+    def make_cold(eng, items):
+        for it in items:
+            for blk in list(it.state.blocks):
+                eng.io.destage_block_sync(blk)
+
+    def drive(pipelined: bool) -> float:
+        eng = build(pipelined)
+        rounds = rounds_of(eng)
+        # warmup: compile the cold-path fold on round 0's group, then
+        # re-destage it so the measured run starts fully cold
+        make_cold(eng, rounds[0])
+        eng.batch_exec.execute(rounds[0], now=1.0)
+        for items in rounds:
+            make_cold(eng, items)
+        assert eng.io.drain(timeout=120)
+        t0 = time.time()
+        if pipelined:
+            for r, items in enumerate(rounds):
+                eng._submit_round(items, now=2.0 + r)
+            assert eng.pipeline.drain(timeout=300)
+        else:
+            for r, items in enumerate(rounds):
+                eng.batch_exec.execute(items, now=2.0 + r)
+        wall = time.time() - t0
+        assert eng.io.stats["errors"] == 0
+        eng.close()
+        return wall
+
+    sync_wall = drive(False)
+    pipe_wall = drive(True)
+    out = {
+        "num_windows": num_windows, "num_rounds": num_rounds,
+        "events_per_window": events_per_window, "workload": op_name,
+        "sim_seconds_per_byte": sim_spb,
+        "sync_wall_s": round(sync_wall, 4),
+        "pipelined_wall_s": round(pipe_wall, 4),
+        "pipeline_vs_sync": round(sync_wall / max(pipe_wall, 1e-9), 2),
+    }
+    if emit_json:
+        merged = {}
+        if os.path.exists(emit_json):
+            with open(emit_json) as f:
+                merged = json.load(f)
+        merged["pipeline"] = out
+        with open(emit_json, "w") as f:
+            json.dump(merged, f, indent=2)
+    return out
+
+
 def devices_sweep(num_windows: int = 16, events_per_window: int = 2000,
                   repeats: int = 5, op_name: str = "lrb",
                   num_keys: int = 64) -> Dict:
@@ -355,10 +475,15 @@ if __name__ == "__main__":
     ap.add_argument("--gather", action="store_true",
                     help="run the pooled vs device-concat gather "
                          "benchmark and emit BENCH_q2_gather.json")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="benchmark the pipelined async engine vs the "
+                         "synchronous loop over cold p-blocks and merge "
+                         "a pipeline_vs_sync ratio into "
+                         "BENCH_q2_gather.json")
     args = ap.parse_args()
-    if args.devices > 1 and args.gather:
-        ap.error("--gather measures the single-device gather path; "
-                 "run it without --devices")
+    if args.devices > 1 and (args.gather or args.pipeline):
+        ap.error("--gather/--pipeline measure single-device paths; "
+                 "run them without --devices")
     if args.devices > 1:
         flags = os.environ.get("XLA_FLAGS", "")
         os.environ["XLA_FLAGS"] = (
@@ -368,6 +493,10 @@ if __name__ == "__main__":
     elif args.gather:
         import json as _json
         print(_json.dumps(gather_benchmark(
+            num_windows=args.windows or 8), indent=2))
+    elif args.pipeline:
+        import json as _json
+        print(_json.dumps(pipeline_benchmark(
             num_windows=args.windows or 8), indent=2))
     else:
         for r in run():

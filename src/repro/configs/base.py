@@ -303,6 +303,32 @@ class AionConfig:
     store_compact_ratio: float = 2.0
     # store read-cache budget for batched readahead sweeps
     store_readahead_bytes: int = 16 << 20
+    # pipelined asynchronous execution (core/pipeline.py): watermark
+    # advances and due re-executions SUBMIT fold rounds to a dedicated
+    # worker instead of folding inline, so ingestion/staging overlap the
+    # previous round's fold and emission is futures-based
+    # (StreamEngine.result_futures resolve when the round's device work
+    # completes). Requires batched_execution + a batch-contract operator;
+    # otherwise the synchronous loop is kept.
+    pipelined_execution: bool = False
+    # pipelined staging lookahead: submitting a round while another is
+    # in flight immediately queues PRIO_STAGE pool fills for the new
+    # round's cold blocks, so its I/O runs while the current round folds
+    # (staging stays continuously in flight instead of fenced per round)
+    pipeline_prefetch: bool = True
+    # per-pool-slot epoch/sequence scheme (carried from PR 4's open
+    # items): under the pipelined executor, arena pins shrink to the
+    # snapshot->dispatch window and rows are validated by (slot, epoch)
+    # instead of holding the pin across the whole round — ingest-time
+    # fills that land mid-round donate in place (O(block)) rather than
+    # taking the functional copy path. Rows whose slot epoch moved
+    # between classification and dispatch demote to the stacked fallback.
+    pool_slot_epochs: bool = True
+    # bound on the engine's per-poll metrics series (batch occupancy,
+    # device/host byte samples): each series keeps at most this many
+    # recent entries (oldest half is shed when the cap is hit, so appends
+    # stay amortized O(1)). 0 disables the bound (the pre-PR-6 leak).
+    metrics_series_max: int = 4096
 
 
 def to_json(cfg: Any) -> str:

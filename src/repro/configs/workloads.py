@@ -53,3 +53,59 @@ def get_workload(name: str) -> WorkloadConfig:
     if name not in WORKLOADS:
         raise KeyError(f"unknown workload {name!r}; known: {sorted(WORKLOADS)}")
     return WORKLOADS[name]
+
+
+# --------------------------------------------------------------- tenancy
+@dataclass(frozen=True)
+class TenantProfile:
+    """Declarative description of one tenant stream for the multiplexed
+    engine (``core.pipeline.MultiTenantEngine.from_profiles``).
+
+    The ten profiles below map the repo's ten model-shaped serving
+    configs (``configs/<model>.py``) onto the paper's workloads: each
+    profile is "the event-time telemetry stream of one served model".
+    ``weight`` is the tenant's I/O fairness weight — the transfer
+    executor serves ``weight`` consecutive tasks per tenant within a
+    priority class before its round-robin cursor advances — and the
+    budget fractions slice the shared device/host totals. Bigger models
+    get larger weights and budget slices (costlier per-event serving,
+    more telemetry volume); the fractions sum to ~1.0 so the shared
+    budget is fully partitioned.
+    """
+    name: str
+    workload: WorkloadConfig
+    weight: int = 1
+    device_budget_frac: float = 0.10
+    host_budget_frac: float = 0.10
+
+
+TENANT_PROFILES: Tuple[TenantProfile, ...] = (
+    TenantProfile("mamba2_780m", AVERAGE, weight=1,
+                  device_budget_frac=0.04, host_budget_frac=0.04),
+    TenantProfile("hymba_1_5b", AVERAGE, weight=1,
+                  device_budget_frac=0.05, host_budget_frac=0.05),
+    TenantProfile("starcoder2_7b", BIGRAMS, weight=1,
+                  device_budget_frac=0.07, host_budget_frac=0.07),
+    TenantProfile("seamless_m4t_medium", BIGRAMS, weight=1,
+                  device_budget_frac=0.06, host_budget_frac=0.06),
+    TenantProfile("qwen3_moe_30b", STOCK_MARKET, weight=2,
+                  device_budget_frac=0.09, host_budget_frac=0.09),
+    TenantProfile("granite_34b", LRB, weight=2,
+                  device_budget_frac=0.10, host_budget_frac=0.10),
+    TenantProfile("command_r_35b", STOCK_MARKET, weight=2,
+                  device_budget_frac=0.10, host_budget_frac=0.10),
+    TenantProfile("phi35_moe_42b", LRB, weight=3,
+                  device_budget_frac=0.12, host_budget_frac=0.12),
+    TenantProfile("internvl2_76b", LRB, weight=3,
+                  device_budget_frac=0.17, host_budget_frac=0.17),
+    TenantProfile("mistral_large_123b", STOCK_MARKET, weight=4,
+                  device_budget_frac=0.20, host_budget_frac=0.20),
+)
+
+
+def get_tenant_profile(name: str) -> TenantProfile:
+    for p in TENANT_PROFILES:
+        if p.name == name:
+            return p
+    raise KeyError(f"unknown tenant profile {name!r}; known: "
+                   f"{[p.name for p in TENANT_PROFILES]}")

@@ -8,8 +8,14 @@ from repro.core.policies import (
     EngineOOM, GlobalMemoryPolicy, InMemoryPolicy, LocalRhoMinPolicy,
     StandardPolicy,
 )
+from repro.core.pipeline import (
+    EnginePipeline, MultiTenantEngine, PipelineError, ResultFuture,
+    TenantSpec,
+)
 from repro.core.proactive import PrestageScheduler, StagingCostModel
-from repro.core.staging import IOScheduler
+from repro.core.staging import (
+    IOScheduler, StagingError, TaskHandle, TransferExecutor,
+)
 from repro.core.staleness import (
     deltaev_times, deltat_times, executions_for_bound,
     max_staleness_of, minimize_max_staleness,
@@ -26,7 +32,10 @@ __all__ = [
     "LatenessHistogram", "PredictiveCleanup", "StreamEngine", "EventBatch",
     "make_operator", "EngineOOM", "GlobalMemoryPolicy", "InMemoryPolicy",
     "LocalRhoMinPolicy", "StandardPolicy", "PrestageScheduler",
-    "StagingCostModel", "IOScheduler", "deltaev_times", "deltat_times",
+    "StagingCostModel", "IOScheduler", "StagingError", "TaskHandle",
+    "TransferExecutor", "EnginePipeline", "MultiTenantEngine",
+    "PipelineError", "ResultFuture", "TenantSpec",
+    "deltaev_times", "deltat_times",
     "executions_for_bound", "max_staleness_of", "minimize_max_staleness",
     "PeriodicWatermarkGenerator", "WatermarkTracker", "AionStalenessTrigger",
     "DeltaEvTrigger", "DeltaTTrigger", "CountWindows", "SessionWindows",

@@ -391,6 +391,99 @@ class BatchExecutor:
         cold: List[Tuple[Any, int]] = []          # (block, window index)
         fallback: List[Tuple[Any, int]] = []      # (block, wslot)
 
+        # Pin strategy. The legacy (synchronous) path holds ONE pool pin
+        # across the whole round — including the demand-fill wait — so
+        # every fill that lands mid-round pays the functional copy path.
+        # Under the pipelined engine the per-slot epoch scheme
+        # (``pool_slot_epochs``) shrinks the pins to the
+        # snapshot->dispatch windows: rows are classified OUTSIDE any
+        # pin from a (slot, epoch) read, re-validated under a short pin
+        # at dispatch (an unchanged epoch proves the captured arena
+        # holds the classified data; moved rows demote to the stacked
+        # fallback), and the fill wait happens UNPINNED — ingest-time
+        # and overlapped demand fills donate in place, O(block).
+        epoch_mode = eng.pipeline is not None \
+            and getattr(aion, "pool_slot_epochs", True)
+
+        if epoch_mode:
+            pairs = pool.slot_epochs([b for b, _ in blocks])
+            pooled3: List[Tuple[Any, int, int, int]] = []
+            for (blk, i), (ps, ep) in zip(blocks, pairs):
+                if ps is not None and well_placed(ps, i):
+                    pooled3.append((blk, i, ps, ep))
+                elif ps is None and blk.tier != Tier.DEVICE \
+                        and aion.pool_overlap_prefetch:
+                    cold.append((blk, i))
+                else:
+                    fallback.append((blk, slot_of[i]))
+            if cold:
+                by_window: Dict[int, List[Any]] = {}
+                for blk, i in cold:
+                    by_window.setdefault(i, []).append(blk)
+                for i, blks in by_window.items():
+                    evs.append(eng.io.request_stage(plans[i][0].state,
+                                                    blks, demand=True))
+                eng.metrics.demand_pool_fills += len(cold)
+                # wait UNPINNED, BEFORE the snapshot: under the
+                # pipelined engine inter-round overlap comes from the
+                # round queue (round k+1's prefetch staged during round
+                # k's fold), so this wait is only the prefetch residual
+                # — and folding resident + freshly-filled rows as ONE
+                # table keeps the dispatch shape round-invariant (the
+                # two-table split re-jits a new staged-table shape
+                # whenever the prefetch residual changes). A failed
+                # fill aborts the round (StagingError) instead of
+                # folding stale tiers.
+                w0 = _time.time()
+                for ev in evs:
+                    ev.wait(timeout=60)
+                eng.metrics.batch_stall_seconds += _time.time() - w0
+                for ev in evs:
+                    ev.check()
+                for (blk, i), (ps, ep) in zip(
+                        cold, pool.slot_epochs([b for b, _ in cold])):
+                    if ps is not None and well_placed(ps, i):
+                        pooled3.append((blk, i, ps, ep))
+                    else:       # fill could not take a slot: host path
+                        fallback.append((blk, slot_of[i]))
+            gather_dt += _time.time() - g0
+
+            if pooled3:
+                g0 = _time.time()
+                # one short pin: capture + validate + pack + dispatch
+                with pool.pinned():
+                    k_arena, v_arena, ps_now, ep_now = \
+                        pool.snapshot_with_epochs(
+                            [b for b, _, _, _ in pooled3])
+                    pooled: List[Tuple[Any, int, int]] = []
+                    for (blk, i, ps, ep), ps2, ep2 in zip(
+                            pooled3, ps_now, ep_now):
+                        if ps2 == ps and ep2 == ep:
+                            pooled.append((blk, slot_of[i], ps))
+                        else:
+                            # destaged/purged/recycled since the
+                            # classify read: fold the block's current
+                            # truth through the stacked fallback
+                            eng.metrics.epoch_demoted_rows += 1
+                            fallback.append((blk, slot_of[i]))
+                    if pooled:
+                        table, fills, slots = self._pack_table(
+                            pooled, num_devices, slots_per)
+                        arena_data = {"keys": k_arena, "values": v_arena}
+                        gather_dt += _time.time() - g0
+                        d0 = _time.time()
+                        accs.append(op.fold_batch(
+                            arena_data, fills, slots, num_slots,
+                            mesh=use_mesh, table=table))
+                        dev_dt += _time.time() - d0
+                        ran_sharded = ran_sharded or use_mesh is not None
+                        eng.metrics.pooled_rows += len(pooled)
+                    else:
+                        gather_dt += _time.time() - g0
+            return self._fold_pooled_tail(
+                plans, accs, fallback, slot_of, num_slots, dev_dt,
+                gather_dt, ran_sharded)
+
         # the whole batch runs under ONE pool pin: any fill that lands
         # while a fold may be executing takes the functional (copy) path,
         # which (a) keeps our snapshot references live and (b) never
@@ -421,7 +514,7 @@ class BatchExecutor:
             # folds (the paper's demand-staging-outranks-prestaging rule,
             # at pool granularity)
             if cold:
-                by_window: Dict[int, List[Any]] = {}
+                by_window = {}
                 for blk, i in cold:
                     by_window.setdefault(i, []).append(blk)
                 for i, blks in by_window.items():
@@ -448,6 +541,8 @@ class BatchExecutor:
                 for ev in evs:
                     ev.wait(timeout=60)
                 eng.metrics.batch_stall_seconds += _time.time() - w0
+                for ev in evs:
+                    ev.check()       # failed demand fill aborts the round
                 g0 = _time.time()
                 k2, v2, ps2 = pool.snapshot_for([b for b, _ in cold])
                 staged: List[Tuple[Any, int, int]] = []
@@ -474,6 +569,17 @@ class BatchExecutor:
                     ran_sharded = ran_sharded or use_mesh is not None
                     eng.metrics.pooled_rows += len(staged)
 
+        return self._fold_pooled_tail(plans, accs, fallback, slot_of,
+                                      num_slots, dev_dt, gather_dt,
+                                      ran_sharded)
+
+    def _fold_pooled_tail(self, plans, accs, fallback, slot_of, num_slots,
+                          dev_dt, gather_dt, ran_sharded):
+        """Shared tail of both pooled pin strategies: fold the fallback
+        rows through the stacked gather, then merge the partial
+        accumulators into per-slot results."""
+        eng = self.engine
+        op = eng.operator
         if fallback:
             g0 = _time.time()
             rows = []

@@ -134,12 +134,29 @@ class DeviceBlockPool:
                         (d + 1) * self.slots_per_shard))
             for d in range(num_shards)]
         self._rr = 0                       # round-robin for shard=None
+        # per-slot epoch/sequence scheme (ROADMAP: carried from PR 4):
+        # a slot's epoch bumps whenever its CONTENTS or OWNERSHIP change
+        # (commit, release, free) — never on alloc, which only removes
+        # the slot from the free list. The pipelined executor classifies
+        # rows from an unpinned (slot, epoch) read, then re-validates the
+        # pairs under a short pin at dispatch: an unchanged epoch proves
+        # the captured arena holds exactly the data the row was
+        # classified against, so the pin only needs to span
+        # snapshot -> dispatch instead of the whole fold round (and
+        # ingest-time fills in between donate in place, O(block)).
+        self._slot_epoch: List[int] = [0] * pool_slots
+        self.seq = 0                       # global epoch counter
         self.keys = jnp.zeros((pool_slots, block_capacity), jnp.int32)
         self.values = jnp.zeros((pool_slots, block_capacity, width),
                                 jnp.float32)
         self.stats = {"allocs": 0, "frees": 0, "exhausted": 0, "writes": 0,
                       "copy_writes": 0, "deferred_fills": 0,
-                      "batched_fill_commits": 0}
+                      "batched_fill_commits": 0, "epoch_bumps": 0}
+
+    def _bump_epoch_locked(self, slot: int) -> None:
+        self._slot_epoch[slot] += 1
+        self.seq += 1
+        self.stats["epoch_bumps"] += 1
 
     @contextlib.contextmanager
     def deferred_fills(self):
@@ -238,6 +255,7 @@ class DeviceBlockPool:
         with self._lock:
             self._pending.pop(slot, None)
             self._free[self.shard_of_slot(slot)].append(slot)
+            self._bump_epoch_locked(slot)
             self.stats["frees"] += 1
 
     def release_slot(self, block) -> Optional[int]:
@@ -257,6 +275,7 @@ class DeviceBlockPool:
             block.pool_slot = None
             self._pending.pop(slot, None)
             self._free[self.shard_of_slot(slot)].append(slot)
+            self._bump_epoch_locked(slot)
             self.stats["frees"] += 1
             return slot
 
@@ -292,7 +311,38 @@ class DeviceBlockPool:
                                                slot, keys, vals)
             block.pool_slot = slot
             block.pool = self
+            self._bump_epoch_locked(slot)
             self.stats["writes"] += 1
+
+    def slot_epochs(self, blocks) -> List[Tuple[Optional[int], int]]:
+        """One consistent ``(pool_slot, epoch)`` read per block — NO
+        arena capture, NO pin required. The pipelined executor
+        classifies rows from this, issues demand fills, and only then
+        takes the short ``pinned()`` section: ``snapshot_with_epochs``
+        re-reads the pairs under the pin, and any row whose pair moved
+        (destaged, purged, slot recycled to another block) demotes to
+        the stacked fallback instead of folding a stale slot."""
+        with self._lock:
+            out: List[Tuple[Optional[int], int]] = []
+            for b in blocks:
+                s = b.pool_slot
+                out.append((s, self._slot_epoch[s]) if s is not None
+                           else (None, -1))
+            return out
+
+    def snapshot_with_epochs(self, blocks) -> Tuple[
+            jnp.ndarray, jnp.ndarray, List[Optional[int]], List[int]]:
+        """``snapshot_for`` + the epoch of each block's slot, one atomic
+        read. Call inside a ``pinned()`` section; comparing the returned
+        (slot, epoch) pairs against an earlier ``slot_epochs`` read
+        proves (or disproves) that the captured arena still holds the
+        data each row was classified against."""
+        with self._lock:
+            self._flush_pending_locked()
+            slots = [b.pool_slot for b in blocks]
+            epochs = [self._slot_epoch[s] if s is not None else -1
+                      for s in slots]
+            return self.keys, self.values, slots, epochs
 
     def snapshot_for(self, blocks) -> Tuple[jnp.ndarray, jnp.ndarray,
                                             List[Optional[int]]]:

@@ -239,6 +239,40 @@ class MemoryBudget:
         return self.used_bytes / max(self.capacity_bytes, 1)
 
 
+class TenantBudget(MemoryBudget):
+    """A tenant's slice of a shared device budget.
+
+    Reservations must clear BOTH limits: the tenant's own cap (fairness
+    — one tenant cannot crowd the others out of the device) and the
+    shared parent budget (physics — the device only has so many bytes).
+    ``used_bytes``/``utilization`` report the tenant's own usage, which
+    is what per-tenant memory policies (GlobalMemoryPolicy thresholds)
+    should react to."""
+
+    def __init__(self, parent: MemoryBudget, capacity_bytes: int):
+        super().__init__(capacity_bytes)
+        self.parent = parent
+
+    def try_reserve(self, n: int) -> bool:
+        if not super().try_reserve(n):
+            return False
+        if not self.parent.try_reserve(n):
+            super().release(n)
+            return False
+        return True
+
+    def release(self, n: int) -> None:
+        # release no more from the parent than this tenant actually
+        # holds (MemoryBudget.release floors at 0 locally; the parent
+        # must see the same clamped amount or shared bytes would leak
+        # back twice)
+        with self._lock:
+            freed = min(self.used_bytes, max(int(n), 0))
+            self.used_bytes -= freed
+        if freed:
+            self.parent.release(freed)
+
+
 @dataclass
 class WindowState:
     """State of one window: ordered blocks split across tiers (Figure 1).

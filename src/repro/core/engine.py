@@ -51,6 +51,23 @@ from repro.core.triggers import AionStalenessTrigger, Trigger
 from repro.core.windows import WindowAssigner, WindowId
 
 
+class BoundedSeries(list):
+    """A list whose ``append`` keeps at most ``maxlen`` entries by
+    shedding the OLDEST half when the cap is hit (amortized O(1) per
+    append, unlike a per-append ``del [0]``). Still a real list —
+    equality, slicing and ``np.mean`` behave exactly like the unbounded
+    series it replaces. ``maxlen=0`` disables the bound."""
+
+    def __init__(self, maxlen: int = 0):
+        super().__init__()
+        self.maxlen = int(maxlen)
+
+    def append(self, item) -> None:
+        super().append(item)
+        if self.maxlen and len(self) > self.maxlen:
+            del self[:len(self) - self.maxlen // 2]
+
+
 @dataclass
 class EngineMetrics:
     ingested: int = 0
@@ -77,9 +94,27 @@ class EngineMetrics:
     pooled_rows: int = 0
     fallback_rows: int = 0
     demand_pool_fills: int = 0
+    # pipelined execution: rounds folded by the pipeline worker; rows
+    # whose pool-slot epoch moved between classification and dispatch
+    # (demoted to the stacked fallback rather than folding a stale slot)
+    pipeline_rounds: int = 0
+    epoch_demoted_rows: int = 0
+    # bounded (BoundedSeries) when built via ``EngineMetrics.bounded`` —
+    # the engine does; a bare EngineMetrics() keeps plain lists
     batch_occupancy_series: List[int] = field(default_factory=list)
     device_bytes_series: List[Tuple[float, int]] = field(default_factory=list)
     host_bytes_series: List[Tuple[float, int]] = field(default_factory=list)
+
+    @classmethod
+    def bounded(cls, maxlen: int) -> "EngineMetrics":
+        """Metrics whose per-poll series hold at most ``maxlen`` recent
+        entries (``AionConfig.metrics_series_max``) — a long-running
+        engine must not leak memory through its own telemetry."""
+        m = cls()
+        m.batch_occupancy_series = BoundedSeries(maxlen)
+        m.device_bytes_series = BoundedSeries(maxlen)
+        m.host_bytes_series = BoundedSeries(maxlen)
+        return m
 
     def snapshot(self, now: float, device_bytes: int, host_bytes: int):
         self.device_bytes_series.append((now, device_bytes))
@@ -123,67 +158,82 @@ class StreamEngine:
                  chunk_blocks: int = 4,
                  punctuated: bool = False,
                  simulated_seconds_per_byte: float = 0.0,
-                 store=None):
+                 store=None,
+                 io: Optional[IOScheduler] = None,
+                 pipeline=None):
         self.aion = aion or AionConfig()
-        # persistent tier of the p-bucket: an explicit BlockStore, or
-        # one built from the config backend under spill_dir ('log' by
-        # default — the legacy file-per-block npz backend stays
-        # available as AionConfig.store_backend='npz')
-        if store is None and spill_dir is not None:
-            from repro.storage import make_store
-            store = make_store(
-                self.aion.store_backend, spill_dir,
-                segment_bytes=self.aion.store_segment_bytes,
-                sim_spb=simulated_seconds_per_byte,
-                readahead_bytes=self.aion.store_readahead_bytes)
-        self.store = store
         self.assigner = assigner
         self.operator = operator
         self.value_width = value_width
-        self.budget = MemoryBudget(device_budget_bytes)
-        # persistent device block pool: staging becomes arena fills and
-        # the batched fold consumes block tables (zero-copy gather). The
-        # pool shards its slot ranges to the slot mesh so a window's
-        # arena rows live on the device that folds them. Only built when
-        # the batched path can actually consume block tables — per-window
-        # engines (batching off, or a no-contract operator like
-        # percentile) keep the legacy device_data fast path. The arena's
-        # bytes are reserved from the device budget up front; pooled
-        # fills then cost a slot, not a second reservation.
-        self.pool = None
-        if self.aion.block_pool and self.aion.batched_execution \
-                and operator.supports_batch:
-            from repro.core.block_pool import DeviceBlockPool
-            shards = 1
-            if self.aion.slot_sharding:
-                from repro.distributed.sharding import make_slot_mesh
-                m = make_slot_mesh(self.aion.slot_shard_devices,
-                                   self.aion.slot_shard_axis)
-                shards = m.size if m is not None else 1
-            # the arena may take at most HALF the budget: the legacy
-            # per-block path keeps headroom, and utilization-driven
-            # policies (GlobalMemoryPolicy's moderate/severe thresholds)
-            # can always get below their lines by destaging per-block
-            # reservations — an arena sized to the full budget would pin
-            # utilization at 100% forever (destaging a pooled block
-            # frees a slot, not budget bytes)
-            pool = DeviceBlockPool(
-                self.aion.pool_slots, self.aion.block_size, value_width,
-                num_shards=shards,
-                max_arena_bytes=device_budget_bytes // 2)
-            if pool.pool_slots > 0 \
-                    and self.budget.try_reserve(pool.arena_bytes):
-                self.pool = pool
-            # else: a budget too small to back even one slot per shard
-            # within the half-budget cap — degrade to the legacy
-            # per-block path
-        self.io = IOScheduler(
-            self.budget, sequential_io=sequential_io,
-            chunk_blocks=chunk_blocks, spill_dir=spill_dir,
-            host_budget_bytes=host_budget_bytes,
-            simulated_seconds_per_byte=simulated_seconds_per_byte,
-            pool=self.pool, store=self.store,
-            compact_ratio=self.aion.store_compact_ratio)
+        self._owns_io = io is None
+        if io is not None:
+            # shared-infrastructure mode (MultiTenantEngine): the caller
+            # built the scheduler, and with it the budget, device pool
+            # and store this engine must use — and owns their lifecycle
+            # (close() will not shut them down)
+            self.io = io
+            self.budget = io.budget
+            self.pool = io.pool
+            self.store = io.store if store is None else store
+        else:
+            # persistent tier of the p-bucket: an explicit BlockStore,
+            # or one built from the config backend under spill_dir
+            # ('log' by default — the legacy file-per-block npz backend
+            # stays available as AionConfig.store_backend='npz')
+            if store is None and spill_dir is not None:
+                from repro.storage import make_store
+                store = make_store(
+                    self.aion.store_backend, spill_dir,
+                    segment_bytes=self.aion.store_segment_bytes,
+                    sim_spb=simulated_seconds_per_byte,
+                    readahead_bytes=self.aion.store_readahead_bytes)
+            self.store = store
+            self.budget = MemoryBudget(device_budget_bytes)
+            # persistent device block pool: staging becomes arena fills
+            # and the batched fold consumes block tables (zero-copy
+            # gather). The pool shards its slot ranges to the slot mesh
+            # so a window's arena rows live on the device that folds
+            # them. Only built when the batched path can actually
+            # consume block tables — per-window engines (batching off,
+            # or a no-contract operator like percentile) keep the legacy
+            # device_data fast path. The arena's bytes are reserved from
+            # the device budget up front; pooled fills then cost a slot,
+            # not a second reservation.
+            self.pool = None
+            if self.aion.block_pool and self.aion.batched_execution \
+                    and operator.supports_batch:
+                from repro.core.block_pool import DeviceBlockPool
+                shards = 1
+                if self.aion.slot_sharding:
+                    from repro.distributed.sharding import make_slot_mesh
+                    m = make_slot_mesh(self.aion.slot_shard_devices,
+                                       self.aion.slot_shard_axis)
+                    shards = m.size if m is not None else 1
+                # the arena may take at most HALF the budget: the legacy
+                # per-block path keeps headroom, and utilization-driven
+                # policies (GlobalMemoryPolicy's moderate/severe
+                # thresholds) can always get below their lines by
+                # destaging per-block reservations — an arena sized to
+                # the full budget would pin utilization at 100% forever
+                # (destaging a pooled block frees a slot, not budget
+                # bytes)
+                pool = DeviceBlockPool(
+                    self.aion.pool_slots, self.aion.block_size,
+                    value_width, num_shards=shards,
+                    max_arena_bytes=device_budget_bytes // 2)
+                if pool.pool_slots > 0 \
+                        and self.budget.try_reserve(pool.arena_bytes):
+                    self.pool = pool
+                # else: a budget too small to back even one slot per
+                # shard within the half-budget cap — degrade to the
+                # legacy per-block path
+            self.io = IOScheduler(
+                self.budget, sequential_io=sequential_io,
+                chunk_blocks=chunk_blocks, spill_dir=spill_dir,
+                host_budget_bytes=host_budget_bytes,
+                simulated_seconds_per_byte=simulated_seconds_per_byte,
+                pool=self.pool, store=self.store,
+                compact_ratio=self.aion.store_compact_ratio)
         self.policy = policy or StandardPolicy()
         self.cleanup = cleanup or PredictiveCleanup(
             coverage=self.aion.cleanup_coverage,
@@ -202,9 +252,25 @@ class StreamEngine:
             else self.aion.watermark_period)
         self.windows: Dict[WindowId, WindowState] = {}
         self.reexec_plans: Dict[WindowId, _ReexecPlan] = {}
-        self.metrics = EngineMetrics()
+        self.metrics = EngineMetrics.bounded(self.aion.metrics_series_max)
         self.results: Dict[WindowId, Any] = {}
         self.batch_exec = BatchExecutor(self)
+        # pipelined execution (core/pipeline.py): fold rounds submit to
+        # a worker instead of running inline; results additionally
+        # resolve through result_futures. A passed-in pipeline is shared
+        # infrastructure (multi-tenant) and not closed by this engine.
+        # Only meaningful on the batched path — a no-contract operator
+        # keeps the synchronous reference loop.
+        self._owns_pipeline = False
+        if pipeline is not None:
+            self.pipeline = pipeline if self.batching_enabled else None
+        elif self.aion.pipelined_execution and self.batching_enabled:
+            from repro.core.pipeline import EnginePipeline
+            self.pipeline = EnginePipeline()
+            self._owns_pipeline = True
+        else:
+            self.pipeline = None
+        self.result_futures: Dict[WindowId, Any] = {}
 
     @property
     def batching_enabled(self) -> bool:
@@ -244,9 +310,22 @@ class StreamEngine:
         self.metrics.ingested += len(batch)
         self.metrics.ingested_late += int(late_mask.sum())
 
+        identity = None
         for wid, idx in self.assigner.assign(batch.timestamps):
-            sub = batch.select(np.isin(np.arange(len(batch)), idx)) \
-                if len(idx) != len(batch) else batch
+            # select by the index list DIRECTLY (fancy indexing keeps
+            # order and duplicates). The old mask-based selection took
+            # the whole batch whenever len(idx) == len(batch) — which
+            # misfiles events for any assigner whose full-length index
+            # list is not the identity — and silently deduplicated
+            # repeated indices. Only a verified identity skips the copy.
+            idx = np.asarray(idx, np.intp)
+            if len(idx) == len(batch):
+                if identity is None:
+                    identity = np.arange(len(batch))
+                sub = batch if np.array_equal(idx, identity) \
+                    else batch.select(idx)
+            else:
+                sub = batch.select(idx)
             state = self._state_for(wid)
             late = wid.end <= wm
             new_blocks = state.append_events(sub, late)
@@ -287,7 +366,18 @@ class StreamEngine:
             return
         due = [wid for wid in sorted(self.windows)
                if not self.windows[wid].expired and wid.end <= wm]
-        if self.batching_enabled and len(due) > 1:
+        if self.pipeline is not None and due:
+            # pipelined: the watermark advance fences only the slots it
+            # closes — the round (and the expiry destages, which must
+            # run AFTER the fold reads the blocks) executes on the
+            # pipeline worker while ingestion keeps appending; results
+            # resolve through result_futures
+            for wid in due:
+                self.windows[wid].expired = True
+            self._submit_round(
+                [BatchWorkItem(wid, self.windows[wid], False)
+                 for wid in due], now, expiry=True)
+        elif self.batching_enabled and len(due) > 1:
             # live batch: every newly-expired window folds in one pass
             for wid in due:
                 self.windows[wid].expired = True
@@ -302,6 +392,23 @@ class StreamEngine:
                 state.expired = True
                 self.execute_window(wid, now, late=False)
                 self.policy.on_expiry(state, self.io, now)
+
+    def _submit_round(self, items: List[BatchWorkItem], now: float,
+                      expiry: bool = False) -> None:
+        """Submit one fold round to the pipeline; with ``expiry`` the
+        transfer policy's on_expiry hooks run on the worker after the
+        round folds (same order the synchronous path guarantees —
+        destaging a window before its fold read the blocks would turn
+        the whole round cold)."""
+        on_done = None
+        if expiry:
+            states = [it.state for it in items]
+
+            def on_done():
+                for st in states:
+                    self.policy.on_expiry(st, self.io, now)
+        futs = self.pipeline.submit(self, items, now, on_done=on_done)
+        self.result_futures.update(futs)
 
     # ----------------------------------------------------------- execution
     def execute_window(self, wid: WindowId, now: float, late: bool) -> Any:
@@ -322,6 +429,7 @@ class StreamEngine:
                 w0 = _time.time()
                 ev.wait(timeout=60)
                 stall += _time.time() - w0
+                ev.check()      # a failed demand stage aborts the fold
             else:
                 stage_done = self.io.request_stage(state, p_blocks,
                                                    demand=True)
@@ -341,6 +449,7 @@ class StreamEngine:
             w0 = _time.time()
             stage_done.wait(timeout=60)
             stall += max(_time.time() - w0 - 0.0, 0.0)
+            stage_done.check()  # surface a failed demand stage
         for blk in p_blocks:
             data = self.io.fetch_block_arrays(blk)
             if data is None:
@@ -426,8 +535,16 @@ class StreamEngine:
                 due.append((wid, state, plan))
         if not due:
             return
-        self.batch_exec.execute(
-            [BatchWorkItem(wid, state, True) for wid, state, _ in due], now)
+        items = [BatchWorkItem(wid, state, True) for wid, state, _ in due]
+        if self.pipeline is not None:
+            # late rounds queue behind any live round submitted this
+            # tick (FIFO worker = the paper's live-before-late rule at
+            # round granularity); plan bookkeeping advances immediately
+            # — re-execution is a pure function of bucket contents, so
+            # the fold's timing doesn't change its result
+            self._submit_round(items, now)
+        else:
+            self.batch_exec.execute(items, now)
         for wid, state, plan in due:
             plan.next_idx += 1
             if self.prestage_enabled and plan.next_idx < len(plan.times):
@@ -459,6 +576,12 @@ class StreamEngine:
         if np.isfinite(wm):
             for wid in list(self.windows):
                 state = self.windows[wid]
+                if self.pipeline is not None \
+                        and self.pipeline.window_in_flight(wid):
+                    # a queued/executing fold round references this
+                    # window — purging now would fold empty state; the
+                    # next poll retries once the round completes
+                    continue
                 if state.expired and self.cleanup.should_purge(wid.end, wm):
                     # drop_all reports the device bytes committed at drop
                     # time; an in-flight stage that commits later sees the
@@ -475,12 +598,35 @@ class StreamEngine:
             self.io.request_compaction()
         # 4. policy tick (idle destaging / memory-pressure handling)
         self.policy.on_tick(self.windows, self.io, now)
-        self.metrics.snapshot(now, self.device_bytes(), self.host_bytes())
+        # per-poll byte sample: the scheduler's O(1) tracked figure
+        # (destaged/storage-loaded host copies), NOT the O(windows)
+        # re-sum of host_bytes() — a long-running engine polls this
+        # every tick; exact full sums stay available via host_bytes()
+        self.metrics.snapshot(now, self.device_bytes(),
+                              self.io.host_bytes_tracked())
 
     # ------------------------------------------------------------ shutdown
-    def close(self) -> None:
-        self.io.drain()
-        self.io.shutdown()
+    def close(self, drain_timeout: float = 30.0) -> None:
+        """Drain pipeline + I/O and shut down owned infrastructure.
+
+        Raises: ``PipelineError`` if a pipelined round failed (or the
+        pipeline cannot drain), ``RuntimeError`` if the I/O executor
+        did not drain in time — close must not silently discard
+        in-flight work."""
+        if self.pipeline is not None:
+            from repro.core.pipeline import PipelineError
+            if not self.pipeline.drain(timeout=drain_timeout * 4,
+                                       raise_on_error=True):
+                raise PipelineError(
+                    "fold pipeline failed to drain before close")
+            if self._owns_pipeline:
+                self.pipeline.close()
+        if not self.io.drain(timeout=drain_timeout):
+            raise RuntimeError(
+                "I/O executor failed to drain before close "
+                f"(last_error={self.io.stats['last_error']!r})")
+        if self._owns_io:
+            self.io.shutdown()
 
     # -------------------------------------------------- engine checkpointing
     def restore_state(self, snap: Dict[str, Any]) -> None:
@@ -620,8 +766,8 @@ class StreamEngine:
             entry["data"] = self._block_ckpt_data(b)
         return entry
 
-    def checkpoint_state(self, include_stored_data: bool = True
-                         ) -> Dict[str, Any]:
+    def checkpoint_state(self, include_stored_data: bool = True,
+                         drain_timeout: float = 30.0) -> Dict[str, Any]:
         """Serializable engine state for fault tolerance (bucket manifests,
         watermark, lateness histogram, re-execution plans).
 
@@ -637,6 +783,26 @@ class StreamEngine:
         be sitting in an unacknowledged tail a crash would truncate —
         committing before the checkpoint is handed out guarantees every
         reference is durable."""
+        if self.pipeline is not None:
+            from repro.core.pipeline import PipelineError
+            # a checkpoint must capture post-fold state: wait out (and
+            # surface failures of) every submitted round first
+            if not self.pipeline.drain(timeout=drain_timeout * 4,
+                                       raise_on_error=True):
+                raise PipelineError(
+                    "fold pipeline failed to drain before checkpoint")
+        if not include_stored_data:
+            # manifest checkpoints reference store records by (id, fill)
+            # — an in-flight spill/late-write racing the snapshot could
+            # commit a record AFTER the manifest captured a different
+            # fill. drain() returning False used to be silently ignored
+            # here (it returned None); now a failed drain aborts the
+            # checkpoint instead of handing out racy references.
+            if not self.io.drain(timeout=drain_timeout):
+                raise RuntimeError(
+                    "I/O executor failed to drain before manifest "
+                    "checkpoint (last_error="
+                    f"{self.io.stats['last_error']!r})")
         snap = {
             "watermark": self.tracker.watermark,
             "hist_counts": np.asarray(self.cleanup.hist.counts).tolist(),

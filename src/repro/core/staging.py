@@ -15,15 +15,13 @@ TPU adaptation of the serialization ablations (§5 Q3):
 """
 from __future__ import annotations
 
-import heapq
-import itertools
 import threading
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Any, Callable, Deque, Dict, List, Optional
 
 import jax
 import numpy as np
@@ -37,13 +35,227 @@ PRIO_LATE_WRITE = 1
 PRIO_DESTAGE = 2
 
 
-@dataclass(order=True)
+class StagingError(RuntimeError):
+    """A prioritized I/O task failed.
+
+    Raised to waiters that *checked* their handle (``TaskHandle.check``):
+    a failed demand stage must abort the fold that depends on it instead
+    of silently reading stale tiers."""
+
+
+class TaskHandle(threading.Event):
+    """Completion handle for one submitted I/O task.
+
+    An ``Event`` (so legacy ``submit(...).wait()`` callers keep working)
+    plus the task's failure, if any: the executor records the exception
+    here *before* setting the event, so a waiter that observes completion
+    can always observe the error too."""
+
+    def __init__(self):
+        super().__init__()
+        self.error: Optional[BaseException] = None
+
+    def check(self) -> None:
+        """Raise ``StagingError`` if the task failed."""
+        if self.error is not None:
+            raise StagingError(
+                f"I/O task failed: {type(self.error).__name__}: "
+                f"{self.error}") from self.error
+
+    def wait_checked(self, timeout: Optional[float] = None) -> bool:
+        """``wait`` + ``check``: returns completion, raises on failure."""
+        ok = self.wait(timeout)
+        self.check()
+        return ok
+
+
+@dataclass
 class _Task:
-    priority: int
-    seq: int
-    fn: Callable = field(compare=False)
-    done: threading.Event = field(compare=False,
-                                  default_factory=threading.Event)
+    fn: Callable
+    handle: TaskHandle
+    tenant: str
+    on_error: Optional[Callable] = None
+
+
+class TransferExecutor:
+    """The shared prioritized transfer executor behind ``IOScheduler``.
+
+    One executor thread serializes transfers by priority class
+    (``sequential_io=True``); ``sequential_io=False`` reproduces the
+    paper's *no-sqntl-io* ablation (a pool, no ordering). Within a
+    priority class, tasks are **tenant-tagged** and served by weighted
+    round-robin across tenants: a tenant with weight ``w`` gets ``w``
+    consecutive tasks before the cursor moves on, so one tenant's
+    destage backlog cannot starve another's staging at the same
+    priority (cross-class, the lattice still rules: any higher-priority
+    task from any tenant goes first).
+
+    Failures are never swallowed: a task exception is recorded on its
+    ``TaskHandle`` (waiters re-raise via ``check()``), counted in
+    ``stats["errors"]``, remembered as ``stats["last_error"]``, and
+    forwarded to the submitting scheduler's ``on_error`` callback.
+    """
+
+    def __init__(self, *, sequential_io: bool = True,
+                 max_pool_workers: int = 4):
+        self.sequential_io = sequential_io
+        self._cv = threading.Condition()
+        # priority -> tenant -> FIFO of tasks
+        self._classes: Dict[int, Dict[str, Deque[_Task]]] = {}
+        self._weights: Dict[str, int] = {}
+        self._rr_tenant: Dict[int, Optional[str]] = {}
+        self._rr_served: Dict[int, int] = {}
+        self._pending = 0
+        self._inflight = 0
+        self._stop = False
+        self.stats: Dict[str, Any] = {
+            "errors": 0, "last_error": None, "executed": 0,
+            "tenant_executed": {},
+        }
+        if sequential_io:
+            self._thread = threading.Thread(target=self._run, daemon=True)
+            self._thread.start()
+            self._pool = None
+        else:
+            self._thread = None
+            self._pool = ThreadPoolExecutor(max_workers=max_pool_workers)
+
+    def set_weight(self, tenant: str, weight: int) -> None:
+        with self._cv:
+            self._weights[tenant] = max(int(weight), 1)
+
+    # ------------------------------------------------------------- submit
+    def submit(self, priority: int, fn: Callable, *,
+               tenant: str = "default",
+               on_error: Optional[Callable] = None) -> TaskHandle:
+        handle = TaskHandle()
+        task = _Task(fn=fn, handle=handle, tenant=tenant,
+                     on_error=on_error)
+        if self._pool is not None:                 # no-sqntl-io ablation
+            with self._cv:
+                self._inflight += 1
+
+            def wrap():
+                try:
+                    fn()
+                except BaseException as exc:       # record, never swallow
+                    self._record_failure(task, exc)
+                finally:
+                    handle.set()
+                    with self._cv:
+                        self._inflight -= 1
+                        self._finish_locked(task)
+            self._pool.submit(wrap)
+            return handle
+        with self._cv:
+            cls = self._classes.setdefault(priority, {})
+            cls.setdefault(tenant, deque()).append(task)
+            self._weights.setdefault(tenant, 1)
+            self._pending += 1
+            self._cv.notify()
+        return handle
+
+    def _record_failure(self, task: _Task, exc: BaseException) -> None:
+        """A task raised: remember it everywhere a caller could look —
+        the handle (demand waiters), the stats (pollers), the submitting
+        scheduler (per-tenant stats). Set BEFORE ``handle.set()`` so no
+        waiter can observe completion without the error."""
+        task.handle.error = exc
+        with self._cv:
+            self.stats["errors"] += 1
+            self.stats["last_error"] = \
+                f"{type(exc).__name__}: {exc}"
+        if task.on_error is not None:
+            try:
+                task.on_error(exc)
+            except Exception:
+                pass                       # stats callback must not kill us
+
+    def _finish_locked(self, task: _Task) -> None:
+        self.stats["executed"] += 1
+        te = self.stats["tenant_executed"]
+        te[task.tenant] = te.get(task.tenant, 0) + 1
+        if not self._pending and not self._inflight:
+            self._cv.notify_all()          # wake drain() waiters
+
+    def _pop_locked(self) -> Optional[_Task]:
+        """Next task: strictly lowest priority class first; weighted
+        round-robin across that class's tenants (``weight`` consecutive
+        pops per tenant before the cursor advances, tenant order
+        deterministic by name)."""
+        active = [p for p, cls in self._classes.items()
+                  if any(cls.values())]
+        if not active:
+            return None
+        prio = min(active)
+        cls = self._classes[prio]
+        names = sorted(t for t, q in cls.items() if q)
+        cur = self._rr_tenant.get(prio)
+        served = self._rr_served.get(prio, 0)
+        if cur not in names or served >= self._weights.get(cur, 1):
+            if cur in names:
+                cur = names[(names.index(cur) + 1) % len(names)]
+            else:
+                # stale cursor (tenant's queue emptied): resume rotation
+                # at the first name after it, wrapping
+                later = [t for t in names if cur is None or t > cur]
+                cur = later[0] if later else names[0]
+            served = 0
+        self._rr_tenant[prio] = cur
+        self._rr_served[prio] = served + 1
+        self._pending -= 1
+        return cls[cur].popleft()
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                task = self._pop_locked()
+                while task is None and not self._stop:
+                    self._cv.wait(timeout=1.0)
+                    task = self._pop_locked()
+                if task is None:                   # stopping, queue empty
+                    self._cv.notify_all()
+                    return
+                self._inflight += 1
+            try:
+                task.fn()
+            except BaseException as exc:    # record, never kill the thread
+                self._record_failure(task, exc)
+            finally:
+                task.handle.set()
+                with self._cv:
+                    self._inflight -= 1
+                    self._finish_locked(task)
+
+    # ----------------------------------------------------------- queries
+    def has_higher_priority_pending(self, priority: int) -> bool:
+        with self._cv:
+            return any(p < priority and any(cls.values())
+                       for p, cls in self._classes.items())
+
+    def drain(self, timeout: float = 30.0) -> bool:
+        """Block until no task is queued or mid-run, in BOTH modes.
+
+        Returns ``True`` on a clean drain and ``False`` on timeout —
+        callers that need an empty queue (close, checkpoint) MUST check
+        the result; proceeding after ``False`` races in-flight work."""
+        deadline = time.time() + timeout
+        with self._cv:
+            while self._pending or self._inflight:
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(timeout=remaining)
+        return True
+
+    def shutdown(self) -> None:
+        self._stop = True
+        with self._cv:
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
 
 
 class IOScheduler:
@@ -60,9 +272,24 @@ class IOScheduler:
                  host_budget_bytes: Optional[int] = None,
                  simulated_seconds_per_byte: float = 0.0,
                  pool=None, store: Optional[BlockStore] = None,
-                 compact_ratio: float = 2.0):
+                 compact_ratio: float = 2.0,
+                 executor: Optional[TransferExecutor] = None,
+                 tenant: str = "default", io_weight: int = 1,
+                 owns_store: bool = True):
         self.budget = budget
-        self.sequential_io = sequential_io
+        # the executor may be SHARED across schedulers (multi-tenant
+        # engines multiplex one transfer thread): this scheduler's tasks
+        # are tagged with its tenant name and served weighted round-robin
+        # within each priority class. A private executor is built (and
+        # later shut down) by this scheduler when none is passed.
+        self._owns_executor = executor is None
+        if executor is None:
+            executor = TransferExecutor(sequential_io=sequential_io)
+        self.executor = executor
+        self.tenant = tenant
+        self.sequential_io = executor.sequential_io
+        executor.set_weight(tenant, io_weight)
+        self._owns_store = owns_store
         self.chunk_blocks = max(chunk_blocks, 1)
         self.spill_dir = spill_dir
         self.host_budget_bytes = host_budget_bytes
@@ -91,16 +318,12 @@ class IOScheduler:
         # persistent device block pool (core/block_pool.py); None keeps
         # the legacy per-block device_put staging path
         self.pool = pool
-        self._seq = itertools.count()
-        self._queue: List[_Task] = []
-        self._cv = threading.Condition()
-        self._stop = False
-        self._inflight = 0                    # tasks mid-run (both modes)
         self.stats = {
             "staged_blocks": 0, "destaged_blocks": 0, "late_write_blocks": 0,
             "stage_seconds": 0.0, "destage_seconds": 0.0,
             "stage_events": 0, "simulated_io_seconds": 0.0,
             "preemptions": 0, "pool_fills": 0, "pool_fallbacks": 0,
+            "errors": 0, "last_error": None,
         }
         self._host_bytes = 0
         # spill candidates, cold first (deque: the spill loop pops the
@@ -111,89 +334,57 @@ class IOScheduler:
         # here. Ordering: block.lock may be held when taking _host_lock,
         # never the reverse.
         self._host_lock = threading.Lock()
-        if sequential_io:
-            self._thread = threading.Thread(target=self._run, daemon=True)
-            self._thread.start()
-            self._pool = None
-        else:
-            self._thread = None
-            self._pool = ThreadPoolExecutor(max_workers=4)
 
     # ------------------------------------------------------------- submit
-    def submit(self, priority: int, fn: Callable) -> threading.Event:
-        if self._pool is not None:                     # no-sqntl-io ablation
-            ev = threading.Event()
-            with self._cv:
-                self._inflight += 1
+    def submit(self, priority: int, fn: Callable) -> TaskHandle:
+        """Queue ``fn`` at ``priority``, tagged with this scheduler's
+        tenant. The returned ``TaskHandle`` is an Event (legacy waiters
+        keep working) that additionally carries the task's failure —
+        demand waiters call ``check()``/``wait_checked()`` so a failed
+        stage aborts the dependent fold instead of folding stale tiers."""
+        return self.executor.submit(priority, fn, tenant=self.tenant,
+                                    on_error=self._record_error)
 
-            def wrap():
-                try:
-                    fn()
-                finally:
-                    ev.set()
-                    with self._cv:
-                        self._inflight -= 1
-                        if not self._inflight:
-                            self._cv.notify_all()
-            self._pool.submit(wrap)
-            return ev
-        task = _Task(priority, next(self._seq), fn)
-        with self._cv:
-            heapq.heappush(self._queue, task)
-            self._cv.notify()
-        return task.done
+    def _record_error(self, exc: BaseException) -> None:
+        self.stats["errors"] += 1
+        self.stats["last_error"] = f"{type(exc).__name__}: {exc}"
 
-    def _run(self) -> None:
-        while True:
-            with self._cv:
-                while not self._queue and not self._stop:
-                    self._cv.wait(timeout=1.0)
-                if self._stop and not self._queue:
-                    self._cv.notify_all()
-                    return
-                task = heapq.heappop(self._queue)
-                self._inflight += 1
-            try:
-                task.fn()
-            except Exception:                      # never kill the executor
-                self.stats["errors"] = self.stats.get("errors", 0) + 1
-            finally:
-                task.done.set()
-                with self._cv:
-                    self._inflight -= 1
-                    if not self._queue and not self._inflight:
-                        self._cv.notify_all()      # wake drain() waiters
+    @property
+    def last_error(self) -> Optional[str]:
+        """Most recent task failure of THIS scheduler (None if clean)."""
+        return self.stats["last_error"]
 
     def has_higher_priority_pending(self, priority: int) -> bool:
-        with self._cv:
-            return bool(self._queue) and self._queue[0].priority < priority
+        return self.executor.has_higher_priority_pending(priority)
 
-    def drain(self, timeout: float = 30.0) -> None:
-        """Block until the queue is empty and no task is mid-run — in
-        BOTH modes (the thread-pool ablation tracks in-flight tasks
-        through the same counter).
+    def host_bytes_tracked(self) -> int:
+        """The host-tier byte figure this scheduler already maintains
+        (``_account_host``/spill bookkeeping): destaged + storage-loaded
+        host copies. O(1) — metric polls use this instead of re-summing
+        every window's blocks per poll. (Fresh ingest-tier host blocks
+        are not in it until they first destage; ``StreamEngine.
+        host_bytes()`` stays the exact full-sum for callers that need
+        that.)"""
+        with self._host_lock:
+            return self._host_bytes
 
-        Waits on the executor's condition variable — workers notify when
-        the last task finishes — instead of the old 1 ms sleep-poll loop
-        (which burned a syscall per millisecond for the whole drain and
-        could return while a task was still executing)."""
-        deadline = time.time() + timeout
-        with self._cv:
-            while self._queue or self._inflight:
-                remaining = deadline - time.time()
-                if remaining <= 0:
-                    return
-                self._cv.wait(timeout=remaining)
+    def drain(self, timeout: float = 30.0) -> bool:
+        """Block until the executor's queue is empty and no task is
+        mid-run — in BOTH modes (the thread-pool ablation tracks
+        in-flight tasks through the same counter).
+
+        Returns ``True`` on a clean drain, ``False`` on timeout. Callers
+        that require an empty queue (engine close, checkpoint) must not
+        proceed on ``False`` — a checkpoint taken then would race
+        in-flight spills. NOTE: with a shared executor (multi-tenant)
+        this waits for ALL tenants' queues, which is what the barrier
+        callers need."""
+        return self.executor.drain(timeout)
 
     def shutdown(self) -> None:
-        self._stop = True
-        with self._cv:
-            self._cv.notify_all()
-        if self._thread is not None:
-            self._thread.join(timeout=5)
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
-        if self.store is not None:
+        if self._owns_executor:
+            self.executor.shutdown()
+        if self.store is not None and self._owns_store:
             self.store.close()         # final group commit + handles
 
     # ------------------------------------------------------------ transfers

@@ -397,3 +397,82 @@ def test_punctuated_mode_stages_on_late_event():
     eng.ingest(_uniform_batch(50, 0, 10, seed=51), now=12.0)
     assert eng.prestage.stats["immediate"] >= 1
     eng.close()
+
+
+def test_ingest_full_length_index_list_is_selected_not_aliased():
+    """Regression (ISSUE 6 satellite): sub-batch selection used to take
+    the WHOLE batch whenever ``len(idx) == len(batch)`` — wrong for any
+    full-length index list that permutes or repeats rows. Only a
+    verified identity may skip the copy."""
+    from repro.core import EventBatch
+
+    class RepeatingAssigner:
+        """Assigns every batch to one window via a full-length,
+        non-identity index list (row 0 twice, row 1 never)."""
+        def assign(self, timestamps):
+            n = len(timestamps)
+            idx = np.arange(n)
+            if n >= 2:
+                idx[1] = 0
+            from repro.core.windows import WindowId
+            yield WindowId(0.0, 10.0), idx
+
+    aion = AionConfig(block_size=32)
+    eng = StreamEngine(
+        assigner=RepeatingAssigner(),
+        operator=make_operator("average", aion.block_size, 1),
+        aion=aion, value_width=1, device_budget_bytes=64 << 20,
+    )
+    keys = np.array([7, 3, 5], np.int64)
+    vals = np.array([[1.0], [100.0], [4.0]], np.float32)
+    eng.ingest(EventBatch(keys, np.array([1.0, 2.0, 3.0]), vals), now=0.0)
+    st = next(iter(eng.windows.values()))
+    got = st.blocks[0].as_event_batch()
+    np.testing.assert_array_equal(got.keys, [7, 7, 5])      # not [7, 3, 5]
+    np.testing.assert_allclose(got.values[:, 0], [1.0, 1.0, 4.0])
+    eng.advance_watermark(20.0, 20.0)
+    wid = next(iter(eng.results))
+    assert eng.results[wid] == pytest.approx(2.0)   # mean(1, 1, 4)
+    eng.close()
+
+
+def test_ingest_identity_full_length_index_still_zero_copy():
+    """The common case — one window takes the whole batch — must keep
+    skipping the select()."""
+    eng = _engine(width=1)
+    b = _uniform_batch(100, 0, 10, width=1, seed=60)
+    eng.ingest(b, now=0.0)
+    st = next(iter(eng.windows.values()))
+    assert st.total_events == 100
+    eng.advance_watermark(20.0, 20.0)
+    wid = next(iter(eng.results))
+    assert eng.results[wid] == pytest.approx(float(np.mean(b.values[:, 0])),
+                                             rel=1e-4, abs=1e-5)
+    eng.close()
+
+
+def test_metrics_series_bounded_by_config():
+    """Regression (ISSUE 6 satellite): per-poll series grew without
+    bound on long-running engines; ``AionConfig.metrics_series_max``
+    now caps them while keeping plain-list semantics."""
+    from repro.core.engine import BoundedSeries
+
+    s = BoundedSeries(maxlen=8)
+    for i in range(100):
+        s.append(i)
+    assert len(s) <= 8
+    assert s[-1] == 99                     # newest entries survive shedding
+    assert isinstance(s, list) and s == list(s)
+
+    aion = AionConfig(block_size=128, metrics_series_max=16)
+    eng = StreamEngine(
+        assigner=TumblingWindows(10.0),
+        operator=make_operator("average", aion.block_size, 1),
+        aion=aion, value_width=1, device_budget_bytes=64 << 20,
+    )
+    eng.ingest(_uniform_batch(64, 0, 10, width=1, seed=61), now=0.0)
+    for i in range(100):
+        eng.poll(now=float(i))
+    assert len(eng.metrics.device_bytes_series) <= 16
+    assert len(eng.metrics.host_bytes_series) <= 16
+    eng.close()

@@ -1,0 +1,286 @@
+"""Pipelined fold execution (ISSUE 6 tentpole): parity with the
+synchronous engine, genuine ingest/fold overlap, futures-based emission,
+the per-slot epoch scheme's demotion path, and the cleanup purge guard.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.base import AionConfig
+from repro.core import (
+    EventBatch, PipelineError, StreamEngine, TumblingWindows, make_operator,
+)
+from repro.core.batch_exec import BatchWorkItem
+from repro.core.pipeline import EnginePipeline
+
+
+def _batch(n, width=1, seed=0, lo=0.0, hi=10.0):
+    rng = np.random.default_rng(seed)
+    return EventBatch(rng.integers(0, 8, n), rng.uniform(lo, hi, n),
+                      rng.normal(size=(n, width)).astype(np.float32))
+
+
+def _engine(pipelined, tmp_path=None, **aion_kw):
+    aion = AionConfig(block_size=64, pipelined_execution=pipelined,
+                      **aion_kw)
+    return StreamEngine(
+        assigner=TumblingWindows(10.0),
+        operator=make_operator("average", aion.block_size, 1),
+        aion=aion, value_width=1, spill_dir=tmp_path)
+
+
+def _drive(eng, n_rounds=15, seed=7):
+    rng = np.random.default_rng(seed)
+    now = 0.0
+    for _ in range(n_rounds):
+        n = 150
+        ts = rng.uniform(max(now - 12, 0), now + 1, n)
+        eng.ingest(EventBatch(rng.integers(0, 6, n), ts,
+                              rng.normal(size=(n, 1)).astype(np.float32)),
+                   now)
+        eng.advance_watermark(now - 4, now)
+        eng.poll(now)
+        now += 3.0
+    eng.advance_watermark(now + 100, now)
+    if eng.pipeline is not None:
+        assert eng.pipeline.drain()
+    assert eng.io.drain()
+    # forced final sweep: both modes converge to the fold over ALL events
+    items = [BatchWorkItem(wid=wid, state=st, late=True)
+             for wid, st in sorted(eng.windows.items())]
+    return dict(eng.batch_exec.execute(items, now))
+
+
+def test_pipelined_matches_sync():
+    e_sync = _engine(False)
+    e_pipe = _engine(True)
+    r_sync = _drive(e_sync)
+    r_pipe = _drive(e_pipe)
+    assert set(r_sync) == set(r_pipe)
+    for wid in r_sync:
+        np.testing.assert_allclose(r_sync[wid], r_pipe[wid], atol=1e-5)
+    assert e_pipe.metrics.pipeline_rounds > 0
+    assert e_pipe.io.stats["errors"] == 0
+    e_sync.close()
+    e_pipe.close()
+
+
+def test_pipelined_matches_sync_with_spill(tmp_path):
+    e_sync = _engine(False, tmp_path / "sync")
+    e_pipe = _engine(True, tmp_path / "pipe")
+    r_sync = _drive(e_sync, seed=11)
+    r_pipe = _drive(e_pipe, seed=11)
+    for wid in r_sync:
+        np.testing.assert_allclose(r_sync[wid], r_pipe[wid], atol=1e-5)
+    e_sync.close()
+    e_pipe.close()
+
+
+def test_watermark_returns_before_fold_completes():
+    """The tentpole behavior: advance_watermark submits the round and
+    returns while the fold is still running; the result arrives through
+    the window's future."""
+    eng = _engine(True)
+    eng.ingest(_batch(300, seed=1), now=1.0)
+    started = threading.Event()
+    release = threading.Event()
+    real_execute = eng.batch_exec.execute
+
+    def slow_execute(items, now):
+        started.set()
+        release.wait(10.0)
+        return real_execute(items, now)
+    eng.batch_exec.execute = slow_execute
+    t0 = time.time()
+    eng.advance_watermark(20.0, now=2.0)   # closes window [0, 10)
+    submit_latency = time.time() - t0
+    assert started.wait(5.0)
+    # the caller did not block on the (held-open) fold
+    assert submit_latency < 1.0
+    wid = next(iter(eng.result_futures))
+    fut = eng.result_futures[wid]
+    assert not fut.done()
+    release.set()
+    res = fut.result(timeout=10.0)
+    assert res is not None
+    assert eng.pipeline.drain()
+    assert eng.results[wid] == res
+    eng.close()
+
+
+def test_ingest_during_inflight_fold_keeps_rows():
+    """Rows appended while a round is in flight survive: the fold
+    snapshots fills, so late rows land in the next execution instead of
+    being lost or corrupting the running one."""
+    eng = _engine(True)
+    eng.ingest(_batch(200, seed=2), now=1.0)
+    release = threading.Event()
+    real_execute = eng.batch_exec.execute
+
+    def slow_execute(items, now):
+        release.wait(10.0)
+        return real_execute(items, now)
+    eng.batch_exec.execute = slow_execute
+    eng.advance_watermark(20.0, now=2.0)
+    # ingest more rows for the SAME window while its fold is queued
+    eng.ingest(_batch(100, seed=3), now=2.5)
+    release.set()
+    assert eng.pipeline.drain()
+    eng.batch_exec.execute = real_execute
+    wid = next(iter(eng.windows))
+    st = eng.windows[wid]
+    assert st.total_events == 300
+    # a fresh fold over everything matches the numpy oracle
+    out = eng.batch_exec.execute(
+        [BatchWorkItem(wid=wid, state=st, late=True)], 3.0)
+    all_vals = np.concatenate([
+        _batch(200, seed=2).values[:, 0], _batch(100, seed=3).values[:, 0]])
+    np.testing.assert_allclose(out[wid], all_vals.mean(), atol=1e-4)
+    eng.close()
+
+
+def test_round_failure_surfaces_via_futures_and_drain():
+    eng = _engine(True)
+    eng.ingest(_batch(100, seed=4), now=1.0)
+
+    def boom(items, now):
+        raise IOError("injected fold failure")
+    eng.batch_exec.execute = boom
+    eng.advance_watermark(20.0, now=2.0)
+    wid = next(iter(eng.result_futures))
+    with pytest.raises(PipelineError, match="injected fold failure"):
+        eng.result_futures[wid].result(timeout=10.0)
+    with pytest.raises(PipelineError, match="injected fold failure"):
+        eng.pipeline.drain()
+    # error was consumed by the raise; a clean close is now possible
+    del eng.batch_exec.execute
+    eng.close()
+
+
+def test_close_raises_on_failed_round():
+    eng = _engine(True)
+    eng.ingest(_batch(100, seed=5), now=1.0)
+    eng.batch_exec.execute = \
+        lambda items, now: (_ for _ in ()).throw(RuntimeError("dead fold"))
+    eng.advance_watermark(20.0, now=2.0)
+    with pytest.raises(PipelineError, match="dead fold"):
+        eng.close()
+    del eng.batch_exec.execute
+    eng.close()
+
+
+def test_window_in_flight_guard_bookkeeping():
+    pipe = EnginePipeline()
+    try:
+        eng = _engine(False)               # engine used only as executor
+        eng.ingest(_batch(100, seed=6), now=1.0)
+        wid = next(iter(eng.windows))
+        release = threading.Event()
+        real_execute = eng.batch_exec.execute
+
+        def slow_execute(items, now):
+            release.wait(10.0)
+            return real_execute(items, now)
+        eng.batch_exec.execute = slow_execute
+        items = [BatchWorkItem(wid=wid, state=eng.windows[wid], late=False)]
+        futs = pipe.submit(eng, items, 2.0)
+        assert pipe.window_in_flight(wid)
+        release.set()
+        assert futs[wid].result(timeout=10.0) is not None
+        assert pipe.drain()
+        assert not pipe.window_in_flight(wid)
+        eng.batch_exec.execute = real_execute
+        eng.close()
+    finally:
+        pipe.close()
+
+
+def test_purge_guard_skips_inflight_windows():
+    """Predictive cleanup must not purge a window referenced by a
+    queued/executing round."""
+    eng = _engine(True)
+    eng.ingest(_batch(100, seed=8), now=1.0)
+    wid = next(iter(eng.windows))
+    release = threading.Event()
+    real_execute = eng.batch_exec.execute
+
+    def slow_execute(items, now):
+        release.wait(10.0)
+        return real_execute(items, now)
+    eng.batch_exec.execute = slow_execute
+    eng.advance_watermark(20.0, now=2.0)
+    assert eng.pipeline.window_in_flight(wid)
+    # force cleanup to claim the window is purgeable: the guard must win
+    eng.cleanup.should_purge = lambda *a, **kw: True
+    eng.poll(now=3.0)
+    assert wid in eng.windows              # still alive: fold in flight
+    release.set()
+    assert eng.pipeline.drain()
+    eng.batch_exec.execute = real_execute
+    eng.close()
+
+
+def test_epoch_demotion_falls_back_without_corruption():
+    """Rows whose pool slot epoch moved between classification and the
+    pinned snapshot must demote to the stacked fallback — results stay
+    exact, and the demotion is visible in metrics."""
+    aion = AionConfig(block_size=64, pipelined_execution=True,
+                      pool_slot_epochs=True)
+    eng = StreamEngine(
+        assigner=TumblingWindows(10.0),
+        operator=make_operator("average", aion.block_size, 1),
+        aion=aion, value_width=1)
+    if eng.pool is None:
+        pytest.skip("block pool disabled in this config")
+    # two windows: a single-item round takes the per-window path and
+    # never reaches the pooled block-table fold
+    b = _batch(400, seed=9, lo=0.0, hi=19.9)
+    eng.ingest(b, now=1.0)
+    assert len(eng.windows) == 2
+    # poison classification: report an epoch one behind the real one so
+    # the pinned validation sees a mismatch for every pooled row
+    real_slot_epochs = eng.pool.slot_epochs
+
+    def stale_epochs(blocks):
+        return [(s, e - 1) for s, e in real_slot_epochs(blocks)]
+    eng.pool.slot_epochs = stale_epochs
+    items = [BatchWorkItem(wid=wid, state=st, late=False)
+             for wid, st in sorted(eng.windows.items())]
+    out = eng.batch_exec.execute(items, 2.0)
+    eng.pool.slot_epochs = real_slot_epochs
+    assert eng.metrics.epoch_demoted_rows > 0
+    for wid in eng.windows:
+        mask = (b.timestamps >= wid.start) & (b.timestamps < wid.end)
+        np.testing.assert_allclose(
+            out[wid], b.values[mask, 0].mean(), atol=1e-4)
+    eng.close()
+
+
+def test_prefetch_stages_next_round_while_busy(tmp_path):
+    """A round submitted while the worker is busy pre-stages its cold
+    blocks at PRIO_STAGE instead of waiting for its turn."""
+    eng = _engine(True, tmp_path)
+    # window A: live, will hold the worker; window B: cold p-blocks
+    eng.ingest(_batch(100, seed=10, lo=0.0, hi=9.9), now=1.0)
+    eng.ingest(_batch(100, seed=11, lo=10.0, hi=19.9), now=1.0)
+    wids = sorted(eng.windows)
+    st_b = eng.windows[wids[1]]
+    for blk in list(st_b.blocks):
+        eng.io.destage_block_sync(blk)
+    assert st_b.p_blocks()
+    release = threading.Event()
+    real_execute = eng.batch_exec.execute
+
+    def slow_execute(items, now):
+        release.wait(10.0)
+        return real_execute(items, now)
+    eng.batch_exec.execute = slow_execute
+    eng.advance_watermark(10.0, now=2.0)   # round 1: window A (worker busy)
+    eng.advance_watermark(20.0, now=2.1)   # round 2: window B -> prefetch
+    assert eng.pipeline.stats["prefetched_rounds"] >= 1
+    release.set()
+    assert eng.pipeline.drain()
+    eng.batch_exec.execute = real_execute
+    eng.close()

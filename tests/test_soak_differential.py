@@ -59,11 +59,13 @@ def _cleanup() -> _NoPurgeCleanup:
 def _make_engine(op_name: str, batched: bool, sharded: bool,
                  spill_dir, width: int,
                  pooled: bool = False,
-                 store: str = "log") -> StreamEngine:
+                 store: str = "log",
+                 pipelined: bool = False) -> StreamEngine:
     aion = AionConfig(block_size=256, batched_execution=batched,
                       slot_sharding=sharded, block_pool=pooled,
                       store_backend=store,
-                      store_segment_bytes=128 << 10)
+                      store_segment_bytes=128 << 10,
+                      pipelined_execution=pipelined)
     kw = {"num_keys": 8} if op_name == "stock" else {}
     return StreamEngine(
         assigner=TumblingWindows(WINDOW),
@@ -83,7 +85,9 @@ def _final_sweep(eng: StreamEngine, now: float) -> None:
     """Re-execute every window through the engine's own (batched or
     reference) path so final results reflect all folded-in late events —
     including plans lost at the mid-stream restore."""
-    eng.io.drain()
+    if eng.pipeline is not None:
+        assert eng.pipeline.drain(), "fold pipeline failed to drain"
+    assert eng.io.drain(), "I/O executor failed to drain"
     items = [BatchWorkItem(wid, eng.windows[wid], True)
              for wid in sorted(eng.windows)]
     if eng.batching_enabled and len(items) > 1:
@@ -96,7 +100,7 @@ def _final_sweep(eng: StreamEngine, now: float) -> None:
 _COUNTERS = ("ingested", "ingested_late", "live_executions",
              "late_executions", "batch_executions",
              "sharded_batch_executions", "pooled_rows", "fallback_rows",
-             "demand_pool_fills")
+             "demand_pool_fills", "pipeline_rounds", "epoch_demoted_rows")
 
 
 class _SoakTotals:
@@ -106,19 +110,22 @@ class _SoakTotals:
     def __init__(self):
         for k in _COUNTERS:
             setattr(self, k, 0)
+        self.io_errors = 0
 
-    def absorb(self, metrics) -> None:
+    def absorb(self, eng) -> None:
         for k in _COUNTERS:
-            setattr(self, k, getattr(self, k) + getattr(metrics, k))
+            setattr(self, k, getattr(self, k) + getattr(eng.metrics, k))
+        self.io_errors += eng.io.stats["errors"]
 
 
 def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
-           width: int = 1, pooled: bool = False, store: str = "log"):
+           width: int = 1, pooled: bool = False, store: str = "log",
+           pipelined: bool = False):
     """Run the soak; returns (results, oracle_events, counter_totals)."""
     rng = np.random.default_rng(SEED)
     totals = _SoakTotals()
     eng = _make_engine(op_name, batched, sharded, spill_dir / "a", width,
-                       pooled, store)
+                       pooled, store, pipelined)
     all_events = []           # oracle ledger: every event ever generated
     now = 0.0
     wm = 0.0
@@ -151,10 +158,11 @@ def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
             # mid-stream crash/restore: serialize, rebuild, resume
             restored = True
             snap = eng.checkpoint_state()
-            totals.absorb(eng.metrics)
+            totals.absorb(eng)
             eng.close()
             eng = _make_engine(op_name, batched, sharded,
-                               spill_dir / "b", width, pooled, store)
+                               spill_dir / "b", width, pooled, store,
+                               pipelined)
             eng.restore_state(snap)
 
     # close out: expire everything, fire remaining re-execution plans,
@@ -165,7 +173,7 @@ def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
         eng.poll(t)
     _final_sweep(eng, now + 70.0)
     results = dict(eng.results)
-    totals.absorb(eng.metrics)
+    totals.absorb(eng)
     eng.close()
     keys = np.concatenate([k for k, _, _ in all_events])
     tss = np.concatenate([t for _, t, _ in all_events])
@@ -269,5 +277,31 @@ def test_soak_differential_stock_spill_pressure(tmp_path, sharded, pooled):
                                    rtol=1e-5, atol=1e-5)
     # spill pressure really happened: storage-tier traffic on both runs
     assert totals.ingested == N_EVENTS
+    if pooled:
+        assert totals.pooled_rows > 0
+
+
+@pytest.mark.parametrize("pooled", [True, False])
+def test_soak_differential_pipelined(tmp_path, pooled):
+    """ISSUE 6: the pipelined engine — folds submitted to the async
+    round worker while ingestion continues, per-slot epoch validation on
+    the pooled path — must stay oracle-exact under the same lateness +
+    spill + restore pressure, with zero silently-absorbed I/O failures.
+    """
+    results, (keys, ts, vals), totals = _drive(
+        "average", True, False, tmp_path, pooled=pooled,
+        pipelined=True)
+    want = _oracle_average(keys, ts, vals)
+    assert set(results) == set(want)
+    for wid in want:
+        assert results[wid] == pytest.approx(want[wid], rel=2e-4,
+                                             abs=2e-4), wid
+    assert totals.ingested == N_EVENTS
+    assert totals.ingested_late > N_EVENTS // 10
+    # rounds really flowed through the async worker, and every task the
+    # I/O executor ran either succeeded or would have raised (satellite:
+    # no swallowed failures)
+    assert totals.pipeline_rounds > 0
+    assert totals.io_errors == 0
     if pooled:
         assert totals.pooled_rows > 0

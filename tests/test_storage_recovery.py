@@ -66,11 +66,7 @@ def _sigkill(eng: StreamEngine) -> None:
     file handles WITHOUT the final group commit a clean close performs —
     anything unacknowledged must behave as lost."""
     io = eng.io
-    with io._cv:
-        io._stop = True
-        io._cv.notify_all()
-    if io._thread is not None:
-        io._thread.join(timeout=5)
+    io.executor.shutdown()             # stop + join, no drain, no commit
     store = io.store
     if store._active_f is not None:
         store._active_f.close()

@@ -1,0 +1,180 @@
+"""Multi-tenant multiplexing (ISSUE 6 tentpole): N keyed streams on one
+engine's worth of shared resources — parity with standalone engines,
+per-tenant budget caps, I/O fairness accounting, and the declarative
+profile table in ``configs.workloads``.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.base import AionConfig
+from repro.configs.workloads import TENANT_PROFILES, get_tenant_profile
+from repro.core import (
+    EventBatch, MultiTenantEngine, StreamEngine, TenantSpec,
+    TumblingWindows, make_operator,
+)
+from repro.core.batch_exec import BatchWorkItem
+from repro.core.buckets import MemoryBudget, TenantBudget
+
+
+def _stream(tenant_seed, n, width, lo, hi):
+    rng = np.random.default_rng(tenant_seed)
+    return EventBatch(rng.integers(0, 8, n), rng.uniform(lo, hi, n),
+                      rng.normal(size=(n, width)).astype(np.float32))
+
+
+def _specs(aion):
+    return [
+        TenantSpec(name="alpha", assigner=TumblingWindows(10.0),
+                   operator=make_operator("average", aion.block_size, 1),
+                   value_width=1, weight=2,
+                   device_budget_bytes=32 << 20),
+        TenantSpec(name="beta", assigner=TumblingWindows(5.0),
+                   operator=make_operator("average", aion.block_size, 2),
+                   value_width=2, weight=1,
+                   device_budget_bytes=32 << 20),
+        TenantSpec(name="gamma", assigner=TumblingWindows(20.0),
+                   operator=make_operator("average", aion.block_size, 1),
+                   value_width=1, weight=1,
+                   device_budget_bytes=32 << 20),
+    ]
+
+
+def _drive_one(eng, seed, width, n_rounds=10):
+    rng = np.random.default_rng(seed)
+    now = 0.0
+    for _ in range(n_rounds):
+        n = 120
+        ts = rng.uniform(max(now - 8, 0), now + 1, n)
+        eng.ingest(EventBatch(rng.integers(0, 6, n), ts,
+                              rng.normal(size=(n, width))
+                              .astype(np.float32)), now)
+        eng.advance_watermark(now - 3, now)
+        eng.poll(now)
+        now += 2.5
+    eng.advance_watermark(now + 100, now)
+    return now
+
+
+def _final_results(eng, now):
+    if eng.pipeline is not None:
+        assert eng.pipeline.drain()
+    assert eng.io.drain()
+    items = [BatchWorkItem(wid=wid, state=st, late=True)
+             for wid, st in sorted(eng.windows.items())]
+    return dict(eng.batch_exec.execute(items, now))
+
+
+@pytest.mark.parametrize("pipelined", [False, True])
+def test_multi_tenant_parity_with_standalone(pipelined, tmp_path):
+    aion = AionConfig(block_size=64, pipelined_execution=pipelined)
+    mt = MultiTenantEngine(_specs(aion), device_budget_bytes=256 << 20,
+                           spill_dir=tmp_path / "mt", aion=aion)
+    widths = {"alpha": 1, "beta": 2, "gamma": 1}
+    seeds = {"alpha": 21, "beta": 22, "gamma": 23}
+    ends = {}
+    for name in mt.engines:
+        ends[name] = _drive_one(mt.engine(name), seeds[name], widths[name])
+    mt_results = {name: _final_results(mt.engine(name), ends[name])
+                  for name in mt.engines}
+
+    # reference: one standalone synchronous engine per tenant
+    ref_aion = AionConfig(block_size=64)
+    for spec in _specs(ref_aion):
+        ref = StreamEngine(assigner=spec.assigner, operator=spec.operator,
+                           aion=ref_aion, value_width=spec.value_width,
+                           spill_dir=tmp_path / f"ref_{spec.name}")
+        end = _drive_one(ref, seeds[spec.name], widths[spec.name])
+        ref_results = _final_results(ref, end)
+        got = mt_results[spec.name]
+        assert set(got) == set(ref_results)
+        for wid in ref_results:
+            np.testing.assert_allclose(got[wid], ref_results[wid],
+                                       atol=1e-4)
+        ref.close()
+    assert mt.executor.stats["errors"] == 0
+    mt.close()
+
+
+def test_tenant_budget_caps_inside_shared_parent():
+    parent = MemoryBudget(1000)
+    a = TenantBudget(parent, 400)
+    b = TenantBudget(parent, 800)
+    # own cap binds before the parent does
+    assert a.try_reserve(400)
+    assert not a.try_reserve(1)
+    # parent pool is shared: b sees what a consumed
+    assert b.try_reserve(600)
+    assert not b.try_reserve(200)          # parent exhausted, cap not
+    assert parent.used_bytes == 1000
+    a.release(400)
+    assert b.try_reserve(200)              # a's release refills the parent
+    b.release(800)
+    assert parent.used_bytes == 0
+    assert a.used_bytes == 0 and b.used_bytes == 0
+
+
+def test_tenant_budget_rolls_back_own_on_parent_failure():
+    parent = MemoryBudget(100)
+    a = TenantBudget(parent, 500)
+    assert parent.try_reserve(80)          # someone else took the room
+    assert not a.try_reserve(50)
+    assert a.used_bytes == 0               # failed reserve left no residue
+
+
+def test_fairness_stats_count_per_tenant_io(tmp_path):
+    aion = AionConfig(block_size=64)
+    mt = MultiTenantEngine(_specs(aion)[:2],
+                           device_budget_bytes=128 << 20,
+                           spill_dir=tmp_path, aion=aion)
+    widths = {"alpha": 1, "beta": 2}
+    for name, eng in mt.engines.items():
+        eng.ingest(_stream(31, 300, widths[name], 0.0, 9.9), now=1.0)
+        # force tenant-tagged I/O through the shared executor
+        eng.io.request_destage(next(iter(eng.windows.values())))
+    assert mt.executor.drain(timeout=10.0)
+    stats = mt.fairness_stats()
+    assert stats.get("alpha", 0) > 0
+    assert stats.get("beta", 0) > 0
+    mt.close()
+
+
+def test_duplicate_tenant_names_rejected():
+    aion = AionConfig(block_size=64)
+    specs = _specs(aion)[:1] * 2
+    with pytest.raises(ValueError, match="duplicate"):
+        MultiTenantEngine(specs, aion=aion)
+
+
+# ------------------------------------------------------------- profiles
+def test_tenant_profiles_table_is_well_formed():
+    names = [p.name for p in TENANT_PROFILES]
+    assert len(names) == 10 and len(set(names)) == 10
+    assert abs(sum(p.device_budget_frac for p in TENANT_PROFILES)
+               - 1.0) < 1e-9
+    assert abs(sum(p.host_budget_frac for p in TENANT_PROFILES)
+               - 1.0) < 1e-9
+    assert all(p.weight >= 1 for p in TENANT_PROFILES)
+    assert get_tenant_profile("mistral_large_123b").weight == 4
+    with pytest.raises(KeyError):
+        get_tenant_profile("nonexistent_model")
+
+
+def test_from_profiles_builds_and_streams(tmp_path):
+    aion = AionConfig(block_size=64)
+    profiles = [get_tenant_profile("mamba2_780m"),
+                get_tenant_profile("qwen3_moe_30b")]
+    mt = MultiTenantEngine.from_profiles(
+        profiles, device_budget_bytes=256 << 20,
+        host_budget_bytes=256 << 20, spill_dir=tmp_path, aion=aion)
+    for p in profiles:
+        eng = mt.engine(p.name)
+        width = p.workload.resolved_value_width()
+        mt.ingest(p.name, _stream(41, 200, width, 0.0,
+                                  p.workload.window_duration - 0.1),
+                  now=1.0)
+        assert eng.metrics.ingested == 200
+    mt.advance_watermark(1e6, now=2.0, tenant="mamba2_780m")
+    mt.poll(now=2.0)
+    assert len(mt.results("mamba2_780m")) >= 1
+    assert mt.results("qwen3_moe_30b") == {}   # other tenant untouched
+    mt.close()
