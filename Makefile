@@ -6,6 +6,7 @@ verify:
 	$(MAKE) verify-storage
 	$(MAKE) verify-multidevice
 	$(MAKE) verify-pipeline
+	$(MAKE) verify-prefetch
 
 # Persistent p-bucket store suites, tmpdir-isolated (pytest tmp_path):
 # storage unit tests (WAL group commit, footer rebuild, torn-tail
@@ -41,6 +42,16 @@ verify-pipeline:
 		tests/test_pipeline.py tests/test_staging_failures.py \
 		tests/test_tenancy.py
 
+# Learned-prefetch gate: lateness model CDFs, segment-sweep planning
+# (EDF + budget/slack defer + coalesce nomination), LogBlockStore
+# segment queries/sweeps/coalescing, WAL-coalesced group commits, and
+# the fixed-vs-learned engine differential with readahead hit
+# accounting. Also collected by plain `pytest` above; this is the
+# focused prefetch gate.
+verify-prefetch:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
+		tests/test_prefetch.py tests/test_cleanup_proactive.py
+
 # Benchmark entry point (CSV rows, one per paper table/figure).
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py
@@ -60,10 +71,17 @@ bench-q1:
 bench-q4:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q4_staleness.py
 
+# Fixed-vs-learned prefetch probe only; merges a "prefetch_probe"
+# section (readahead hit rate, learned_vs_fixed staleness ratio) into
+# the existing BENCH_q4_staleness.json
+bench-prefetch:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q4_staleness.py --prefetch
+
 # Pipelined vs synchronous fold benchmark (cold p-blocks, 8 due
 # windows); merges a "pipeline" section into BENCH_q2_gather.json
 bench-pipeline:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q2_throughput.py --pipeline
 
 .PHONY: verify verify-storage verify-multidevice verify-pipeline \
-	bench bench-gather bench-q1 bench-q4 bench-pipeline
+	verify-prefetch bench bench-gather bench-q1 bench-q4 \
+	bench-prefetch bench-pipeline

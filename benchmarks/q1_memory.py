@@ -105,14 +105,17 @@ def run(workload_names=("average", "stock_market"),
 
 # --------------------------------------------------------- storage tier
 def _storage_drive(backend: str, spill_dir, events: int = 16_000,
-                   fetch_rounds: int = 5) -> Dict:
+                   fetch_rounds: int = 5,
+                   prefetch: str = "fixed", **aion_extra) -> Dict:
     """Drive one backend through sustained spill pressure + purges, then
     time the batched p-bucket fetch path (``store.get_many`` over the
     spilled working set)."""
     from repro.core.cleanup import PredictiveCleanup
 
-    aion = AionConfig(block_size=256, store_backend=backend,
-                      store_segment_bytes=32 << 10)
+    aion_extra.setdefault("block_size", 256)
+    aion_extra.setdefault("store_segment_bytes", 32 << 10)
+    aion = AionConfig(store_backend=backend,
+                      prefetch_backend=prefetch, **aion_extra)
     eng = StreamEngine(
         assigner=TumblingWindows(10.0),
         operator=make_operator("average", aion.block_size, 1),
@@ -170,6 +173,7 @@ def _storage_drive(backend: str, spill_dir, events: int = 16_000,
         fetch_per_block = float(np.median(per_round))
     out = {
         "backend": backend,
+        "prefetch": prefetch,
         "events": events,
         "ingest_wall_s": round(ingest_wall, 4),
         "purged_windows": eng.metrics.purged_windows,
@@ -184,6 +188,9 @@ def _storage_drive(backend: str, spill_dir, events: int = 16_000,
         "live_bytes": int(store.live_bytes()),
         "batched_fetch_s_per_block": fetch_per_block,
         "group_commits": int(store.stats["commits"]),
+        "coalesced_windows": int(store.stats.get("coalesced_windows", 0)),
+        "coalesce_bytes": int(store.stats.get("coalesce_bytes", 0)),
+        "segment_sweeps": int(store.stats.get("segment_sweeps", 0)),
     }
     eng.close()
     return out
@@ -209,8 +216,76 @@ def storage_pressure_run(spill_root=None) -> Dict:
     return out
 
 
+def coalescing_run(spill_root=None) -> Dict:
+    """The log store under the learned prefetch backend: coalescing
+    rewrites (scattered hot windows -> one dense run) and WAL-coalesced
+    group commits are bounded-overhead — total write amplification must
+    stay <= 1.1 (acceptance bar) while readahead turns segment-granular.
+    """
+    import tempfile
+    from pathlib import Path
+    root = Path(spill_root or tempfile.mkdtemp(prefix="q1_coalesce_"))
+    out: Dict = {}
+    for prefetch in ("fixed", "learned"):
+        # larger segments than the compaction-focused storage run: a hot
+        # window's records must fit one segment for a dense rewrite to
+        # be profitable (the store-side guard skips it otherwise)
+        out[prefetch] = _storage_drive(
+            "log", root / prefetch, prefetch=prefetch,
+            store_segment_bytes=256 << 10,
+            prefetch_coalesce_probability=0.1)
+    out["write_amplification_with_coalescing"] = \
+        out["learned"]["write_amplification"]
+    out["acceptance_write_amplification_max"] = 1.1
+    # the engine drives above spill each window's blocks contiguously
+    # (group commit), so coalescing correctly no-ops there; the layout
+    # demo below interleaves windows on purpose to measure the rewrite
+    # itself: scatter before/after and the write-amp it costs
+    out["layout_rewrite"] = layout_rewrite_demo(root / "rewrite")
+    return out
+
+
+def layout_rewrite_demo(path, windows: int = 4, rounds: int = 6) -> Dict:
+    """Interleave several windows' block writes (worst-case scatter),
+    coalesce them, and report the dense layout + total write
+    amplification including the rewrite bytes."""
+    from repro.storage import LogBlockStore
+
+    rng = np.random.default_rng(3)
+    store = LogBlockStore(path, segment_bytes=1 << 20)
+    wks = [(i * 10.0, (i + 1) * 10.0) for i in range(windows)]
+    bid = 0
+    for _ in range(rounds):
+        for wk in wks:                       # round-robin: scattered
+            arrays = {
+                "keys": rng.integers(0, 99, 256).astype(np.int32),
+                "timestamps": rng.uniform(0, 100, 256),
+                "values": rng.normal(size=(256, 1)).astype(np.float32),
+            }
+            store.put(wk, bid, arrays, 256)
+            bid += 1
+        store.commit()
+    before = {f"{wk}": store.window_scatter(wk) for wk in wks}
+    rewritten = store.coalesce_windows(wks)
+    after = {f"{wk}": store.window_scatter(wk) for wk in wks}
+    out = {
+        "windows": windows,
+        "records_per_window": rounds,
+        "rewritten_windows": int(rewritten),
+        "span_over_record_bytes_before": round(float(np.mean(
+            [s[2] / max(s[3], 1) for s in before.values()])), 3),
+        "span_over_record_bytes_after": round(float(np.mean(
+            [s[2] / max(s[3], 1) for s in after.values()])), 3),
+        "coalesce_bytes": int(store.stats["coalesce_bytes"]),
+        "write_amplification": round(store.write_amplification, 4),
+    }
+    store.close()
+    return out
+
+
 def main(emit_json: str = "BENCH_q1_memory.json") -> Dict:
-    out = {"memory_rows": run(), "storage": storage_pressure_run()}
+    out = {"memory_rows": run(), "storage": storage_pressure_run(),
+           "coalescing": coalescing_run()}
     if emit_json:
         with open(emit_json, "w") as f:
             json.dump(out, f, indent=2)

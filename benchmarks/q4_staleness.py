@@ -135,6 +135,111 @@ def store_probe(events: int = 10_000) -> List[Dict]:
     return rows
 
 
+def _prefetch_run(backend: str, events: int, root) -> Dict:
+    import time
+
+    from repro.configs.base import AionConfig
+    from repro.core import StreamEngine, TumblingWindows
+    from repro.core.cleanup import PredictiveCleanup
+    from repro.core.events import EventBatch
+    from repro.core.operators import make_operator
+    from repro.core.triggers import DeltaTTrigger
+
+    aion = AionConfig(block_size=64, store_backend="log",
+                      store_segment_bytes=64 << 10,
+                      prefetch_backend=backend)
+    eng = StreamEngine(
+        assigner=TumblingWindows(10.0),
+        operator=make_operator("average", aion.block_size, 1),
+        aion=aion, value_width=1,
+        # equal memory for both backends: tiny host tier forces the
+        # p-buckets through storage, so readahead is load-bearing
+        device_budget_bytes=1 << 19, host_budget_bytes=1 << 15,
+        spill_dir=root,
+        cleanup=PredictiveCleanup(initial_bound=80.0,
+                                  min_history=1 << 62),
+        trigger=DeltaTTrigger(executions=3),
+    )
+    rng = np.random.default_rng(11)
+    now, emitted = 0.0, 0
+    t0 = time.time()
+    while emitted < events:
+        n = min(250, events - emitted)
+        late = rng.random(n) < 0.45
+        delay = np.where(late, rng.lognormal(0.0, 1.0, n) * 8.0,
+                         rng.uniform(0.0, 1.5, n))
+        ts = np.maximum(now - delay, 0.0)
+        eng.ingest(
+            EventBatch(rng.integers(0, 64, n), ts,
+                       np.ones((n, 1), np.float32)), now)
+        emitted += n
+        eng.advance_watermark(max(now - 2.0, 0.0), now)
+        eng.poll(now)
+        now += rng.uniform(0.2, 0.5)
+    for t in np.linspace(now, now + 80.0, 12):
+        eng.poll(t)
+    eng.io.drain()
+    store = eng.io.store
+    hits = int(store.stats["readahead_hits"])
+    misses = int(store.stats["readahead_misses"])
+    row = {
+        "prefetch": backend,
+        "events": events,
+        "wall_s": round(time.time() - t0, 4),
+        "late_executions": eng.metrics.late_executions,
+        "fetch_stall_s": round(eng.metrics.fetch_stall_seconds, 6),
+        "readahead_hits": hits,
+        "readahead_misses": misses,
+        "readahead_hit_rate": round(hits / max(hits + misses, 1), 4),
+        "segment_sweeps": int(store.stats["segment_sweeps"]),
+        "sweep_bytes_read": int(store.stats["sweep_bytes_read"]),
+        "coalesced_windows": int(store.stats["coalesced_windows"]),
+        "write_amplification": round(store.write_amplification, 4),
+    }
+    eng.close()
+    return row
+
+
+def prefetch_probe(events: int = 12_000, repeats: int = 3) -> Dict:
+    """Fixed vs learned prefetch at equal memory on the log store under
+    log-normal lateness: the learned backend's lateness-model-driven
+    segment sweeps should serve the late re-reads from the read cache
+    (high readahead hit rate) without making staleness worse. Each
+    backend runs ``repeats`` times (interleaved) and the median fetch
+    stall is the staleness proxy — single runs are noise-dominated at
+    this scale. Reports per-backend median rows plus the headline
+    ``readahead_hit_rate`` (learned) and the ``learned_vs_fixed``
+    staleness ratio (<= 1 means the learned path is no worse)."""
+    import tempfile
+    from pathlib import Path
+
+    root = Path(tempfile.mkdtemp(prefix="q4_prefetch_"))
+    trials = {"fixed": [], "learned": []}
+    for rep in range(repeats):
+        for backend in ("fixed", "learned"):
+            trials[backend].append(
+                _prefetch_run(backend, events, root / f"{backend}{rep}"))
+
+    def median_row(rows):
+        rows = sorted(rows, key=lambda r: r["fetch_stall_s"])
+        row = dict(rows[len(rows) // 2])
+        row["fetch_stall_s"] = round(float(np.median(
+            [r["fetch_stall_s"] for r in rows])), 6)
+        return row
+
+    fixed = median_row(trials["fixed"])
+    learned = median_row(trials["learned"])
+    return {
+        "rows": [fixed, learned],
+        "repeats": repeats,
+        "readahead_hit_rate": learned["readahead_hit_rate"],
+        # staleness proxy at equal memory: learned / fixed fetch stall
+        "learned_vs_fixed": round(
+            learned["fetch_stall_s"] / max(fixed["fetch_stall_s"], 1e-9),
+            4),
+    }
+
+
 def run() -> Dict[str, List[Dict]]:
     return {
         "staleness_vs_executions": staleness_vs_executions(),
@@ -142,9 +247,21 @@ def run() -> Dict[str, List[Dict]]:
     }
 
 
-def main(emit_json: str = "BENCH_q4_staleness.json") -> Dict:
-    out = run()
-    out["store_probe"] = store_probe()
+def main(emit_json: str = "BENCH_q4_staleness.json",
+         prefetch_only: bool = False) -> Dict:
+    if prefetch_only:
+        # --prefetch: run just the prefetch probe and merge it into the
+        # existing JSON (keeps the analytic sections from the last full
+        # run instead of recomputing them)
+        import os
+        out = {}
+        if emit_json and os.path.exists(emit_json):
+            with open(emit_json) as f:
+                out = json.load(f)
+    else:
+        out = run()
+        out["store_probe"] = store_probe()
+    out["prefetch_probe"] = prefetch_probe()
     if emit_json:
         with open(emit_json, "w") as f:
             json.dump(out, f, indent=2)
@@ -152,8 +269,12 @@ def main(emit_json: str = "BENCH_q4_staleness.json") -> Dict:
 
 
 if __name__ == "__main__":
-    out = main()
+    import sys
+    out = main(prefetch_only="--prefetch" in sys.argv[1:])
     for section, rows in out.items():
         print(f"== {section}")
-        for r in rows:
-            print(r)
+        if isinstance(rows, dict):
+            print(rows)
+        else:
+            for r in rows:
+                print(r)

@@ -329,6 +329,39 @@ class AionConfig:
     # recent entries (oldest half is shed when the cap is hit, so appends
     # stay amortized O(1)). 0 disables the bound (the pre-PR-6 leak).
     metrics_series_max: int = 4096
+    # ---- learned prefetch subsystem (repro/prefetch, ROADMAP item 3) --
+    # 'fixed' keeps the paper's fixed-margin proactive caching (whole
+    # windows, one EWMA Δt lead) — the differential-testing baseline;
+    # 'learned' swaps in the lateness-model-driven, segment-granular
+    # readahead planner (per-key-class empirical-CDF re-execution
+    # probabilities, per-segment sequential sweeps priced against a
+    # bandwidth/slack cost model, coalescing rewrites of scattered hot
+    # windows)
+    prefetch_backend: str = "fixed"
+    # readahead planning horizon in event-time seconds (how far past the
+    # staging margin the planner looks for prefetch-worthy windows);
+    # 0 = auto (4x the pre-stage margin)
+    prefetch_horizon: float = 0.0
+    # prior store bandwidth for the sweep cost model until measured
+    # sweeps take over (EWMA)
+    prefetch_bandwidth_bytes_per_s: float = 64e6
+    # per-drive cap on issued sweep bytes; 0 = the store read-cache
+    # budget (issuing more than the cache holds evicts our own work)
+    prefetch_budget_bytes: int = 0
+    # windows whose predicted re-execution probability falls below this
+    # are not swept (their keys went quiet; re-evaluated every drive)
+    prefetch_min_probability: float = 0.05
+    # number of key classes the lateness model fits separate CDFs for
+    prefetch_key_classes: int = 8
+    # coalescing rewrites: scattered windows predicted to re-execute
+    # (probability >= the threshold) are rewritten into one contiguous
+    # run, once, so the re-stage becomes a single dense sweep
+    prefetch_coalesce: bool = True
+    prefetch_coalesce_probability: float = 0.25
+    # WAL commit coalescing: spill batches and late-write tasks share
+    # one group commit (fsync) via a deferred flush task instead of
+    # each paying their own
+    wal_coalesce_commits: bool = True
 
 
 def to_json(cfg: Any) -> str:

@@ -233,7 +233,8 @@ class StreamEngine:
                 host_budget_bytes=host_budget_bytes,
                 simulated_seconds_per_byte=simulated_seconds_per_byte,
                 pool=self.pool, store=self.store,
-                compact_ratio=self.aion.store_compact_ratio)
+                compact_ratio=self.aion.store_compact_ratio,
+                wal_coalesce=self.aion.wal_coalesce_commits)
         self.policy = policy or StandardPolicy()
         self.cleanup = cleanup or PredictiveCleanup(
             coverage=self.aion.cleanup_coverage,
@@ -243,13 +244,19 @@ class StreamEngine:
         self.watermark_gen = watermark_gen
         self.tracker = WatermarkTracker()
         self.prestage_enabled = prestage_enabled
-        self.prestage = PrestageScheduler(StagingCostModel(),
-                                          punctuated=punctuated)
         # pre-stage lead time floor: a quarter of the watermark period
         # (the paper starts the first pre-staging a full window early)
         self.prestage_margin = 0.25 * (
             watermark_gen.period if watermark_gen is not None
             else self.aion.watermark_period)
+        if self.aion.prefetch_backend == "learned":
+            from repro.prefetch import LearnedPrestageScheduler
+            self.prestage = LearnedPrestageScheduler(
+                self.aion, punctuated=punctuated,
+                margin=self.prestage_margin)
+        else:
+            self.prestage = PrestageScheduler(StagingCostModel(),
+                                              punctuated=punctuated)
         self.windows: Dict[WindowId, WindowState] = {}
         self.reexec_plans: Dict[WindowId, _ReexecPlan] = {}
         self.metrics = EngineMetrics.bounded(self.aion.metrics_series_max)
@@ -333,6 +340,12 @@ class StreamEngine:
             if late:
                 self.io.request_late_write(state, new_blocks)
                 self._plan_reexecutions(wid, state, now)
+                if self.prestage_enabled and len(sub) and np.isfinite(wm):
+                    # per-key lateness samples for the learned prefetch
+                    # backend's CDF fits (no-op on the fixed scheduler)
+                    self.prestage.observe_late(
+                        wid, sub.keys,
+                        np.maximum(wm - sub.timestamps, 1e-9))
                 if self.prestage_enabled:
                     plan = self.reexec_plans.get(wid)
                     if plan and plan.next_idx < len(plan.times):
@@ -551,6 +564,23 @@ class StreamEngine:
                 self.prestage.plan(wid, state, plan.times[plan.next_idx],
                                    now, self.prestage_margin)
 
+    def prefetch_round(self, items) -> None:
+        """Pipelined staging lookahead (``EnginePipeline.submit`` while
+        a round is in flight): start staging the new round's cold blocks
+        so their I/O overlaps the running fold. With the learned
+        prefetch backend the storage half goes first — one sequential
+        sweep per log segment, queued in the SAME priority class as the
+        stage tasks that follow (FIFO runs the sweeps first), so the
+        pool fills read cache hits instead of per-record seeks."""
+        states = [it.state for it in items if it.state.p_blocks()]
+        if not states:
+            return
+        readahead_now = getattr(self.prestage, "readahead_now", None)
+        if readahead_now is not None and self.io.store is not None:
+            readahead_now(self.io, states)
+        for state in states:
+            self.io.request_stage(state)
+
     def _poll_tail(self, now: float) -> None:
         # 2. due pre-staging (for future re-executions), preceded by
         #    store readahead for the pre-stagings coming up within the
@@ -558,12 +588,10 @@ class StreamEngine:
         #    sequential sweep BEFORE the staging deadline, so the stage
         #    itself reads cache hits
         if self.prestage_enabled:
-            if self.io.store is not None:
-                for wid in self.prestage.upcoming(now,
-                                                  self.prestage_margin):
-                    state = self.windows.get(wid)
-                    if state is not None:
-                        self.io.request_readahead(state)
+            # polymorphic seam: the fixed scheduler issues per-window
+            # point readahead; the learned one plans segment sweeps +
+            # coalescing against its lateness/bandwidth models
+            self.prestage.drive_readahead(self, now, self.prestage_margin)
             for wid in self.prestage.due(now):
                 state = self.windows.get(wid)
                 if state is not None and state.p_blocks():

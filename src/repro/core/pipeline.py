@@ -137,9 +137,7 @@ class EnginePipeline:
             self._cv.notify()
         if busy and getattr(engine.aion, "pipeline_prefetch", True):
             self.stats["prefetched_rounds"] += 1
-            for it in items:
-                if it.state.p_blocks():
-                    engine.io.request_stage(it.state)
+            engine.prefetch_round(items)
         return futures
 
     def window_in_flight(self, wid: WindowId) -> bool:

@@ -10,6 +10,12 @@ and pre-stage its p-bucket state Δt ahead of that time.
 * Punctuated watermarks carry no period: pre-staging starts as soon as a
   late event for w arrives (the re-execution it predicts may be delayed
   until pre-staging concludes).
+
+This module is the paper's *fixed-margin* scheme: whole windows,
+a Δt lead from one EWMA. The learned, segment-granular upgrade lives in
+``repro.prefetch`` (``AionConfig.prefetch_backend="learned"``) and keeps
+this scheduler's interface — the engine talks to either through the same
+five methods (plan / on_late_event / due / drive_readahead / cancel).
 """
 from __future__ import annotations
 
@@ -22,14 +28,30 @@ import numpy as np
 from repro.core.buckets import WindowState
 from repro.core.windows import WindowId
 
+# rebuild the plan heap once dead (superseded/cancelled) entries
+# outnumber live ones AND there are enough of them to matter — lazy
+# compaction keeps plan()/cancel() O(log n) while bounding the garbage
+# that due()/upcoming() would otherwise scan forever
+_HEAP_COMPACT_MIN = 16
+
 
 @dataclass
 class StagingCostModel:
     """Online Δt estimate: EWMA of staging seconds per event (the paper's
-    'overall time taken weighted by the number of staged events')."""
+    'overall time taken weighted by the number of staged events').
+
+    Before the FIRST observation the model is deliberately pessimistic:
+    ``delta_t`` returns ``+inf`` so the first pre-staging starts as early
+    as possible (the paper starts it when the preceding window fully
+    expires). Afterwards the lead is clamped to ``floor_seconds`` —
+    ``observe`` ignores zero-event stagings, so without the floor a
+    window whose p-bucket happens to be empty at plan time would collapse
+    the margin to exactly ``min_margin`` (or zero)."""
     seconds_per_event: float = 1e-6
     alpha: float = 0.3
     observations: int = 0
+    # lower bound on the per-staging lead once observations exist
+    floor_seconds: float = 1e-3
 
     def observe(self, seconds: float, events: int) -> None:
         if events <= 0:
@@ -43,7 +65,12 @@ class StagingCostModel:
         self.observations += 1
 
     def delta_t(self, events: int) -> float:
-        return self.seconds_per_event * max(events, 0)
+        if self.observations == 0:
+            # first re-execution: no measurement yet — pre-stage as early
+            # as the plan allows (pessimistic lead, paper §3.2)
+            return float("inf")
+        return max(self.seconds_per_event * max(events, 0),
+                   self.floor_seconds)
 
 
 @dataclass(order=True)
@@ -66,7 +93,10 @@ class PrestageScheduler:
         self._heap: List[_Planned] = []
         self._planned: Dict[WindowId, float] = {}
         self._hinted: Dict[WindowId, float] = {}
-        self.stats = {"planned": 0, "immediate": 0, "readahead_hints": 0}
+        # superseded/cancelled entries still sitting in _heap
+        self._dead = 0
+        self.stats = {"planned": 0, "immediate": 0, "readahead_hints": 0,
+                      "heap_compactions": 0}
 
     def plan(self, window: WindowId, state: WindowState,
              exec_time: float, now: float,
@@ -84,21 +114,50 @@ class PrestageScheduler:
         p_events = sum(b.fill for b in state.p_blocks())
         dt = max(self.cost.delta_t(p_events), min_margin)
         stage_at = max(exec_time - dt, now)
-        prev = self._planned.get(window)
-        if prev is not None and prev <= stage_at:
-            return
-        self._planned[window] = stage_at
-        heapq.heappush(self._heap, _Planned(stage_at, window))
-        self.stats["planned"] += 1
+        self._push(window, stage_at, "planned")
 
     def on_late_event(self, window: WindowId, state: WindowState,
                       now: float) -> None:
         """Punctuated mode: a late event predicts an upcoming re-execution."""
         if self._planned.get(window) == now:
             return
-        self._planned[window] = now
-        heapq.heappush(self._heap, _Planned(now, window))
-        self.stats["immediate"] += 1
+        self._push(window, now, "immediate", supersede_later=True)
+
+    def observe_late(self, window: WindowId, keys: np.ndarray,
+                     delays: np.ndarray) -> None:
+        """Lateness observations (per-key delay samples). The fixed
+        scheduler has no lateness model — the learned scheduler
+        (``repro.prefetch``) overrides this hook."""
+
+    def _push(self, window: WindowId, stage_at: float, stat: str,
+              supersede_later: bool = False) -> None:
+        prev = self._planned.get(window)
+        if prev is not None:
+            if not supersede_later and prev <= stage_at:
+                return
+            # the old heap entry becomes a tombstone
+            self._dead += 1
+        self._planned[window] = stage_at
+        heapq.heappush(self._heap, _Planned(stage_at, window))
+        self.stats[stat] += 1
+        self._compact_heap()
+
+    def _compact_heap(self) -> None:
+        """Lazy tombstone reclamation: superseded plans and ``cancel``ed
+        windows leave dead entries in ``_heap`` (a binary heap has no
+        O(log n) remove). Once they dominate, rebuild the heap from the
+        live plan map — keeps ``upcoming``'s scan and ``due``'s pops
+        proportional to live plans instead of all plans ever made."""
+        if self._dead < _HEAP_COMPACT_MIN or self._dead * 2 < len(self._heap):
+            return
+        self._heap = [_Planned(t, w) for w, t in self._planned.items()]
+        heapq.heapify(self._heap)
+        self._dead = 0
+        self.stats["heap_compactions"] += 1
+
+    def planned_stage_at(self, window: WindowId) -> Optional[float]:
+        """Live staging deadline for ``window`` (None if not planned)."""
+        return self._planned.get(window)
 
     def due(self, now: float) -> List[WindowId]:
         out = []
@@ -108,6 +167,8 @@ class PrestageScheduler:
                 del self._planned[item.window]
                 self._hinted.pop(item.window, None)
                 out.append(item.window)
+            else:
+                self._dead = max(self._dead - 1, 0)    # popped a tombstone
         return out
 
     def upcoming(self, now: float, horizon: float) -> List[WindowId]:
@@ -120,7 +181,7 @@ class PrestageScheduler:
         for item in self._heap:
             stage_at = self._planned.get(item.window)
             if stage_at != item.stage_at:
-                continue                       # superseded entry
+                continue                       # tombstone (dead entry)
             if now <= stage_at <= now + horizon \
                     and self._hinted.get(item.window) != stage_at:
                 self._hinted[item.window] = stage_at
@@ -128,6 +189,20 @@ class PrestageScheduler:
                 out.append(item.window)
         return out
 
+    def drive_readahead(self, engine, now: float, horizon: float) -> None:
+        """Fixed-margin readahead: point (per-window) store prefetch for
+        the stagings coming up within the lead margin. The learned
+        scheduler replaces this with segment-granular sweeps planned
+        against a bandwidth/slack cost model."""
+        if engine.io.store is None:
+            return
+        for wid in self.upcoming(now, horizon):
+            state = engine.windows.get(wid)
+            if state is not None:
+                engine.io.request_readahead(state)
+
     def cancel(self, window: WindowId) -> None:
-        self._planned.pop(window, None)
+        if self._planned.pop(window, None) is not None:
+            self._dead += 1                    # heap entry left behind
         self._hinted.pop(window, None)
+        self._compact_heap()

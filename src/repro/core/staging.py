@@ -1,11 +1,13 @@
 """Staging/destaging: the single prioritized I/O executor (paper §4).
 
 All tier transfers flow through one executor thread that serializes and
-prioritizes requests: **staging (p->m) > late-event writes > destaging
-(m->p)** — staging data is needed imminently by an executing operator,
-while destaging is a background memory-saving activity. Destage operations
-are *preemptible at block granularity*: between blocks the executor yields
-to any queued higher-priority work (the paper's "interleaved" operations).
+prioritizes requests: **demand staging > pre-staging > readahead >
+late-event writes > destaging (m->p)** — staging data is needed
+imminently by an executing operator, speculative store readahead should
+not delay a concrete staging deadline, and destaging is a background
+memory-saving activity. Destage operations are *preemptible at block
+granularity*: between blocks the executor yields to any queued
+higher-priority work (the paper's "interleaved" operations).
 
 TPU adaptation of the serialization ablations (§5 Q3):
   * multithreaded JSON serialization  ->  chunked multi-buffer transfers
@@ -31,8 +33,9 @@ from repro.storage.blockstore import BlockStore, SimulatedCost
 
 PRIO_DEMAND_STAGE = -1    # staging an operator is *blocked on* right now
 PRIO_STAGE = 0            # proactive pre-staging
-PRIO_LATE_WRITE = 1
-PRIO_DESTAGE = 2
+PRIO_READAHEAD = 1        # speculative store->cache sweeps (prefetch)
+PRIO_LATE_WRITE = 2
+PRIO_DESTAGE = 3
 
 
 class StagingError(RuntimeError):
@@ -258,6 +261,62 @@ class TransferExecutor:
             self._pool.shutdown(wait=True)
 
 
+class _CommitCoalescer:
+    """Group-commits the WAL across I/O tasks.
+
+    Without it, every spill batch and every late-write task pays its own
+    ``store.commit()`` (flush + fsync + WAL ack). With it, writer tasks
+    append their records, register a *finalizer*, and return; one
+    deferred flush task per batch issues a single commit and then runs
+    every finalizer with the commit outcome (``ok=False`` on a commit
+    failure — finalizers must not acknowledge durability then). FIFO
+    order within the flush priority class means every put queued before
+    the flush ran is covered by its commit."""
+
+    def __init__(self, scheduler: "IOScheduler", priority: int):
+        self.sched = scheduler
+        self.priority = priority
+        self._lock = threading.Lock()
+        self._fins: List[Callable[[bool], None]] = []
+        self._flush_queued = False
+        self.stats = {"coalesced_commits": 0, "joined_tasks": 0}
+
+    def after_commit(self, fin: Callable[[bool], None]) -> None:
+        """Run ``fin(ok)`` after the next group commit (covering every
+        record the caller already appended). Queues one flush task per
+        batch."""
+        with self._lock:
+            self._fins.append(fin)
+            self.stats["joined_tasks"] += 1
+            if self._flush_queued:
+                return
+            self._flush_queued = True
+        self.sched.submit(self.priority, self._flush)
+
+    def _flush(self) -> None:
+        with self._lock:
+            fins = self._fins
+            self._fins = []
+            self._flush_queued = False
+        if not fins:
+            return
+        ok = False
+        try:
+            self.sched.store.commit()
+            ok = True
+            self.stats["coalesced_commits"] += 1
+        finally:
+            # on failure the exception propagates to the flush task's
+            # handle/stats; finalizers still run with ok=False so
+            # deferred-spill accounting unwinds and no host copy is
+            # dropped without durability
+            for fin in fins:
+                try:
+                    fin(ok)
+                except Exception as exc:       # keep remaining finalizers
+                    self.sched._record_error(exc)
+
+
 class IOScheduler:
     """Single-threaded prioritized transfer executor.
 
@@ -275,7 +334,7 @@ class IOScheduler:
                  compact_ratio: float = 2.0,
                  executor: Optional[TransferExecutor] = None,
                  tenant: str = "default", io_weight: int = 1,
-                 owns_store: bool = True):
+                 owns_store: bool = True, wal_coalesce: bool = False):
         self.budget = budget
         # the executor may be SHARED across schedulers (multi-tenant
         # engines multiplex one transfer thread): this scheduler's tasks
@@ -326,6 +385,18 @@ class IOScheduler:
             "errors": 0, "last_error": None,
         }
         self._host_bytes = 0
+        # bytes whose spill records are appended but whose group commit
+        # (and host-copy drop) is deferred to a coalesced flush —
+        # _maybe_spill subtracts them so it doesn't re-spill the same
+        # pressure every pass while a flush is queued
+        self._pending_spill_bytes = 0
+        # WAL commit coalescing across I/O tasks (spills + late writes
+        # share one fsync); only meaningful on durable sequential-io
+        # stores — the thread-pool ablation has no FIFO commit cover
+        self._coalescer: Optional[_CommitCoalescer] = None
+        if wal_coalesce and store is not None and store.durable_writes \
+                and self.sequential_io:
+            self._coalescer = _CommitCoalescer(self, PRIO_LATE_WRITE)
         # spill candidates, cold first (deque: the spill loop pops the
         # head, O(1) instead of list.pop(0)'s O(n))
         self._host_lru: Deque[Block] = deque()
@@ -558,14 +629,20 @@ class IOScheduler:
         while True:
             batch: List[Block] = []
             with self._host_lock:
-                need = self._host_bytes - self.host_budget_bytes
+                # bytes already riding a deferred (coalesced) commit are
+                # as good as spilled for pressure purposes — without the
+                # subtraction every pass until the flush runs would
+                # re-spill fresh victims for the same overage
+                need = (self._host_bytes - self._pending_spill_bytes
+                        - self.host_budget_bytes)
                 if need <= 0 or not self._host_lru:
                     return
                 while need > 0 and self._host_lru:
                     blk = self._host_lru.popleft()
                     batch.append(blk)
                     need -= blk.nbytes
-            self.spill_blocks_sync(batch)
+            self.spill_blocks_sync(batch,
+                                   coalesce=self._coalescer is not None)
 
 
     def fetch_block_host(self, block: Block
@@ -643,13 +720,20 @@ class IOScheduler:
                 self._host_bytes = max(
                     self._host_bytes - block.nbytes, 0)
 
-    def spill_blocks_sync(self, blocks: List[Block]) -> None:
+    def spill_blocks_sync(self, blocks: List[Block],
+                          coalesce: bool = False) -> None:
         """Spill a batch of host blocks to the persistent store under
         ONE group commit: every block's record is appended (buffered),
         the commit makes them durable, and only then are the host copies
         dropped — a crash mid-spill loses nothing, the unacknowledged
         blocks still hold their host data. A block whose exact content
-        is already persistent (same fill) skips the rewrite entirely."""
+        is already persistent (same fill) skips the rewrite entirely.
+
+        ``coalesce=True`` (only the budget-pressure path passes it)
+        defers the commit + finalize to the WAL coalescer so several
+        spill batches and late-write tasks share one fsync; direct
+        callers keep the synchronous contract (STORAGE tier on
+        return)."""
         if self.store is None:
             return
         staged: List[Block] = []
@@ -666,7 +750,32 @@ class IOScheduler:
             staged.append(block)
         if not staged:
             return
+        if coalesce and self._coalescer is not None:
+            deferred = sum(b.nbytes for b in staged)
+            with self._host_lock:
+                self._pending_spill_bytes += deferred
+
+            def fin(ok: bool, staged=staged, deferred=deferred) -> None:
+                with self._host_lock:
+                    self._pending_spill_bytes = max(
+                        self._pending_spill_bytes - deferred, 0)
+                self._finalize_spill(staged, ok)
+            self._coalescer.after_commit(fin)
+            return
         self.store.commit()                    # durability barrier
+        self._finalize_spill(staged, True)
+
+    def _finalize_spill(self, staged: List[Block], ok: bool) -> None:
+        """Post-commit half of a spill: drop host copies and flip tiers.
+        ``ok=False`` (a coalesced commit failed) keeps every host copy —
+        durability was not achieved, so the blocks go back on the spill
+        candidate list for a later retry."""
+        if not ok:
+            with self._host_lock:
+                for block in staged:
+                    if block.host_accounted:
+                        self._host_lru.append(block)
+            return
         total = 0
         for block in staged:
             with block.lock:
@@ -729,7 +838,45 @@ class IOScheduler:
 
         def do():
             self.readahead_blocks(blocks)
-        return self.submit(PRIO_STAGE, do)
+        return self.submit(PRIO_READAHEAD, do)
+
+    def request_segment_readahead(self, sid: int, keys: List,
+                                  on_swept: Optional[Callable] = None,
+                                  priority: int = PRIO_READAHEAD
+                                  ) -> threading.Event:
+        """Queue ONE sequential sweep over log segment ``sid`` caching
+        ``keys``'s records (the learned planner's unit of readahead).
+        ``on_swept(seconds, nbytes)`` feeds the measured sweep back into
+        the planner's bandwidth model. ``priority`` defaults to the
+        speculative readahead class; the pipelined prefetch hook passes
+        ``PRIO_STAGE`` so its sweeps run (FIFO) before the stage tasks
+        they feed."""
+        def do():
+            if self.store is None:
+                return
+            before = self.store.stats.get("sweep_bytes_read", 0)
+            t0 = time.time()
+            self.store.readahead_segments(sid, keys)
+            if on_swept is not None:
+                nbytes = self.store.stats.get("sweep_bytes_read", 0) \
+                    - before
+                if nbytes > 0:
+                    on_swept(time.time() - t0, nbytes)
+        return self.submit(priority, do)
+
+    def request_coalesce(self, window_keys: List) -> Optional[threading.Event]:
+        """Queue a storage-layout coalescing pass (background priority):
+        rewrite the given windows' scattered records into contiguous
+        runs so their predicted re-stages become single dense sweeps."""
+        if self.store is None:
+            return None
+
+        def do():
+            n = self.store.coalesce_windows(window_keys)
+            if n:
+                self.stats["coalesced_windows"] = \
+                    self.stats.get("coalesced_windows", 0) + n
+        return self.submit(PRIO_DESTAGE, do)
 
     def request_compaction(self, max_ratio: Optional[float] = None
                            ) -> Optional[threading.Event]:
@@ -792,6 +939,7 @@ class IOScheduler:
         def do():
             self.stats["late_write_blocks"] += len(blocks)
             total = 0
+            wrote: List[Block] = []
             for blk in blocks:
                 with blk.lock:
                     if blk.dropped:
@@ -799,9 +947,23 @@ class IOScheduler:
                     if durable and blk.fill > 0 \
                             and blk.host_data is not None:
                         blk.put_to_store(self.store)
-                    blk.persisted = True  # late events land in p-bucket
+                    wrote.append(blk)
                 total += self._cost_bytes(blk)
-            if durable:
-                self.store.commit()
-            self._simulate_io(total)
+
+            def fin(ok: bool) -> None:
+                if not ok:
+                    return       # commit failed: nothing is acknowledged
+                for blk in wrote:
+                    with blk.lock:
+                        if not blk.dropped:
+                            blk.persisted = True  # landed in p-bucket
+                self._simulate_io(total)
+            if durable and self._coalescer is not None:
+                # join the coalesced group commit: one fsync covers this
+                # late write and any spill batches queued around it
+                self._coalescer.after_commit(fin)
+            else:
+                if durable:
+                    self.store.commit()
+                fin(True)
         return self.submit(PRIO_LATE_WRITE, do)

@@ -139,6 +139,34 @@ class BlockStore:
         """Prefetch hint: bring these blocks toward memory (into the
         read cache) ahead of demand. Best-effort; default no-op."""
 
+    # ------------------------------------------- segment-granular prefetch
+    # (learned prefetch planner; only log-structured backends have a
+    # physical segment layout — the defaults make everything else report
+    # "no segments" so planners fall back to point readahead)
+    def segments_for(self, keys: Iterable[BlockKey]
+                     ) -> Dict[int, List[Tuple[BlockKey, int, int]]]:
+        """Physical placement of live records: ``segment_id -> [(key,
+        offset, record_len)]``. Index-only — no payload reads."""
+        return {}
+
+    def readahead_segments(self, sid: int,
+                           keys: Iterable[BlockKey]) -> int:
+        """One sequential sweep over segment ``sid`` caching ``keys``'s
+        records. Returns blocks cached (0: backend has no segments)."""
+        return 0
+
+    def window_scatter(self, window_key: Optional[WindowKey]
+                       ) -> Tuple[int, int, int, int]:
+        """Physical scatter of a window's live records: ``(records,
+        segments, span_bytes, record_bytes)`` — the coalescing
+        planner's rewrite-worthiness signal."""
+        return (0, 0, 0, 0)
+
+    def coalesce_windows(self, window_keys: Iterable[WindowKey]) -> int:
+        """Rewrite each window's scattered live records into one
+        contiguous run at the log tail. Returns windows rewritten."""
+        return 0
+
     # ---------------------------------------------------------- inventory
     def contains(self, window_key: Optional[WindowKey],
                  block_id: int) -> bool:

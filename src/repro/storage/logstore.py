@@ -176,6 +176,8 @@ class LogBlockStore(BlockStore):
         self.stats.update({
             "recovered_records": 0, "recovery_truncated_bytes": 0,
             "segments_sealed": 0, "wal_commits": 0,
+            "segment_sweeps": 0, "sweep_bytes_read": 0,
+            "coalesced_windows": 0, "coalesce_bytes": 0,
         })
         self._recover()
 
@@ -494,6 +496,16 @@ class LogBlockStore(BlockStore):
                 payload[n1:], np.float32).reshape(e.fill, e.width)
         return {"keys": keys, "timestamps": ts, "values": vals}
 
+    @staticmethod
+    def _record_payload(rec: bytes) -> Optional[bytes]:
+        """CRC-validated payload of one raw record, or None if torn or
+        corrupt."""
+        payload = rec[_REC_HDR.size:-_CRC.size]
+        (crc,) = _CRC.unpack(rec[-_CRC.size:])
+        want = zlib.crc32(rec[4:_REC_HDR.size]) & 0xFFFFFFFF
+        want = zlib.crc32(payload, want) & 0xFFFFFFFF
+        return payload if crc == want else None
+
     def _read_records(self, locs: List[Tuple[BlockKey, int, _Entry]]
                       ) -> Dict[BlockKey, dict]:
         """Batched record reads, one sequential sweep per segment."""
@@ -513,11 +525,8 @@ class LogBlockStore(BlockStore):
                     rec = f.read(e.rec_len)
                     if len(rec) < e.rec_len:
                         continue
-                    payload = rec[_REC_HDR.size:-_CRC.size]
-                    (crc,) = _CRC.unpack(rec[-_CRC.size:])
-                    want = zlib.crc32(rec[4:_REC_HDR.size]) & 0xFFFFFFFF
-                    want = zlib.crc32(payload, want) & 0xFFFFFFFF
-                    if crc != want:
+                    payload = self._record_payload(rec)
+                    if payload is None:
                         continue
                     out[key] = self._decode(e, payload)
                     self.stats["bytes_read"] += e.rec_len
@@ -602,6 +611,163 @@ class LogBlockStore(BlockStore):
                     decoded = payload_nbytes(e.cap, e.width)
                     self._cache_add(key, arrays, decoded)
                     self.stats["readahead_bytes"] += e.rec_len
+
+    # ------------------------------------------- segment-granular prefetch
+    def segments_for(self, keys):
+        """Physical placement of the live records behind ``keys``:
+        ``segment_id -> [(key, offset, record_len)]``, offsets ascending.
+        Pure index query (no payload reads) — the learned prefetch
+        planner merges this across windows into per-segment sweeps."""
+        out: Dict[int, List[Tuple[BlockKey, int, int]]] = {}
+        with self._lock:
+            for wk, bid in keys:
+                key = (normalize_window_key(wk), int(bid))
+                loc = self._index.get(key)
+                if loc is None:
+                    continue
+                sid, e = loc
+                out.setdefault(sid, []).append((key, e.offset, e.rec_len))
+        for items in out.values():
+            items.sort(key=lambda it: it[1])
+        return out
+
+    def readahead_segments(self, sid, keys):
+        """Sweep segment ``sid`` once — one contiguous read spanning
+        ``keys``'s records — and cache the decoded blocks. Records whose
+        live copy moved to another segment (re-put, compaction) since
+        planning are skipped; a very sparse span degrades gracefully to
+        the per-record batched path. Returns blocks cached."""
+        with self._lock:
+            seg = self._segs.get(sid)
+            if seg is None:
+                return 0
+            want: List[Tuple[BlockKey, _Entry]] = []
+            for wk, bid in keys:
+                key = (normalize_window_key(wk), int(bid))
+                loc = self._index.get(key)
+                if loc is None or loc[0] != sid:
+                    continue
+                self._readahead_wanted.add(key)
+                if key in self._cache:
+                    continue
+                want.append((key, loc[1]))
+            if not want:
+                return 0
+            want.sort(key=lambda it: it[1].offset)
+            lo = want[0][1].offset
+            hi = max(e.offset + e.rec_len for _, e in want)
+            rec_bytes = sum(e.rec_len for _, e in want)
+            span = hi - lo
+            if span > 4 * rec_bytes and span - rec_bytes > (64 << 10):
+                # plan went stale (compaction/superseding holes): the
+                # sequential read would mostly drag dead bytes — fall
+                # back to the per-record sweep
+                got = self._read_records([(k, sid, e) for k, e in want])
+            else:
+                if sid == self._active_sid:
+                    self._active_f.flush()
+                with open(seg.path, "rb") as f:
+                    f.seek(lo)
+                    blob = f.read(span)
+                self.stats["bytes_read"] += len(blob)
+                self.stats["sweep_bytes_read"] += len(blob)
+                got = {}
+                for key, e in want:
+                    rec = blob[e.offset - lo:e.offset - lo + e.rec_len]
+                    if len(rec) < e.rec_len:
+                        continue
+                    payload = self._record_payload(rec)
+                    if payload is not None:
+                        got[key] = self._decode(e, payload)
+            self.stats["segment_sweeps"] += 1
+            for key, e in want:
+                arrays = got.get(key)
+                if arrays is not None:
+                    decoded = payload_nbytes(e.cap, e.width)
+                    self._cache_add(key, arrays, decoded)
+                    self.stats["readahead_bytes"] += e.rec_len
+            return len(got)
+
+    def _window_locs(self, wk: WindowKey
+                     ) -> List[Tuple[BlockKey, int, _Entry]]:
+        return sorted(((key, sid, e)
+                       for key, (sid, e) in self._index.items()
+                       if key[0] == wk),
+                      key=lambda t: (t[1], t[2].offset))
+
+    def window_scatter(self, window_key):
+        """(records, segments, span_bytes, record_bytes) for a window's
+        live records — span is summed per segment, so a freshly
+        coalesced window reports span == record_bytes."""
+        wk = normalize_window_key(window_key)
+        with self._lock:
+            locs = self._window_locs(wk)
+            if not locs:
+                return (0, 0, 0, 0)
+            per_seg: Dict[int, List[_Entry]] = {}
+            for _, sid, e in locs:
+                per_seg.setdefault(sid, []).append(e)
+            span = sum(max(e.offset + e.rec_len for e in es)
+                       - min(e.offset for e in es)
+                       for es in per_seg.values())
+            rec_bytes = sum(e.rec_len for _, _, e in locs)
+            return (len(locs), len(per_seg), span, rec_bytes)
+
+    def coalesce_windows(self, window_keys) -> int:
+        """Rewrite each window's scattered live records into one
+        contiguous run at the log tail, so a predicted re-stage becomes
+        a single dense sequential sweep. Windows already dense in one
+        segment are skipped (idempotent); the superseded copies become
+        dead bytes that cleanup-driven compaction reclaims. Commits
+        before returning."""
+        rewrote = 0
+        with self._lock:
+            for window_key in window_keys:
+                wk = normalize_window_key(window_key)
+                locs = self._window_locs(wk)
+                if len(locs) < 2:
+                    continue
+                _, n_segs, span, rec_bytes = self.window_scatter(wk)
+                if rec_bytes >= self.segment_bytes:
+                    continue    # bigger than a segment: can't be one run
+                # already dense: contiguous per segment, in at most two
+                # segments (a tail rewrite may straddle one roll) —
+                # rewriting again would churn bytes for no read benefit
+                if n_segs <= 2 and span <= 1.5 * rec_bytes:
+                    continue
+                by_seg: Dict[int, List[Tuple[BlockKey, _Entry]]] = {}
+                for key, sid, e in locs:
+                    by_seg.setdefault(sid, []).append((key, e))
+                for sid in sorted(by_seg):
+                    seg = self._segs.get(sid)
+                    if seg is None:
+                        continue
+                    if sid == self._active_sid:
+                        self._active_f.flush()
+                    with open(seg.path, "rb") as f:
+                        for key, e in by_seg[sid]:
+                            loc = self._index.get(key)
+                            if loc is None or loc[0] != sid \
+                                    or loc[1].offset != e.offset:
+                                continue       # raced with a re-put
+                            f.seek(e.offset)
+                            rec = f.read(e.rec_len)
+                            if len(rec) < e.rec_len:
+                                continue
+                            payload = self._record_payload(rec)
+                            if payload is None:
+                                continue
+                            self._cache_drop(key)
+                            # raw payload re-append: the new record
+                            # supersedes the scattered copy in-index
+                            self._append_record(REC_VALUE, key, e.fill,
+                                                e.cap, e.width, payload)
+                rewrote += 1
+                self.stats["coalesced_windows"] += 1
+                self.stats["coalesce_bytes"] += rec_bytes
+            if rewrote:
+                self._commit_locked()
+        return rewrote
 
     # ---------------------------------------------------------- inventory
     def current_fill(self, window_key, block_id):

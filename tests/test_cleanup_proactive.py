@@ -59,8 +59,14 @@ def test_staging_cost_model_ewma():
     assert m.delta_t(500) == pytest.approx(1.0)
 
 
+def _observed_model(seconds_per_event: float) -> StagingCostModel:
+    m = StagingCostModel()
+    m.observe(seconds_per_event * 1000, 1000)
+    return m
+
+
 def test_prestage_scheduler_plans_delta_t_ahead():
-    sched = PrestageScheduler(StagingCostModel(seconds_per_event=1e-3))
+    sched = PrestageScheduler(_observed_model(1e-3))
     st = WindowState(0, 10, width=1, block_capacity=8)
     from repro.core.events import EventBatch
     st.append_events(EventBatch(np.zeros(80, np.int32),
@@ -72,9 +78,106 @@ def test_prestage_scheduler_plans_delta_t_ahead():
     assert sched.due(99.95) == [wid]
 
 
+def test_prestage_first_lead_is_pessimistic():
+    """Before ANY staging observation delta_t is +inf (paper §3.2: the
+    first pre-staging starts as early as the plan allows), so an
+    unobserved model must schedule staging immediately, not 0s ahead."""
+    m = StagingCostModel(seconds_per_event=1e-3)     # never observed
+    assert m.delta_t(80) == float("inf")
+    sched = PrestageScheduler(m)
+    st = WindowState(0, 10, width=1, block_capacity=8)
+    wid = WindowId(0, 10)
+    sched.plan(wid, st, exec_time=100.0, now=0.0)
+    assert sched.due(0.0) == [wid]        # stage_at clamped to now
+
+
+def test_staging_cost_floor_guards_zero_event_plans():
+    """observe() ignores zero-event stagings, but a window whose
+    p-bucket is empty at plan time must still get a nonzero lead — the
+    floor, not delta_t(0) == 0 collapsing the margin to min_margin."""
+    m = _observed_model(1e-3)
+    assert m.delta_t(0) == pytest.approx(m.floor_seconds)
+    m.observe(0.5, 0)                     # ignored: no events
+    assert m.observations == 1
+    sched = PrestageScheduler(m)
+    st = WindowState(0, 10, width=1, block_capacity=8)   # empty p-bucket
+    wid = WindowId(0, 10)
+    sched.plan(wid, st, exec_time=100.0, now=0.0)
+    assert sched.due(100.0 - 2 * m.floor_seconds) == []
+    assert sched.due(100.0) == [wid]
+
+
 def test_prestage_punctuated_immediate():
     sched = PrestageScheduler(punctuated=True)
     st = WindowState(0, 10, width=1, block_capacity=8)
     wid = WindowId(0, 10)
     sched.plan(wid, st, exec_time=100.0, now=5.0)
     assert sched.due(5.0) == [wid]        # stages as soon as late event seen
+
+
+def test_prestage_punctuated_late_event_dedup():
+    """Punctuated mode: repeated late events at the same instant arm one
+    staging, a later instant re-arms (satellite: punctuated coverage)."""
+    sched = PrestageScheduler(punctuated=True)
+    st = WindowState(0, 10, width=1, block_capacity=8)
+    wid = WindowId(0, 10)
+    sched.on_late_event(wid, st, now=5.0)
+    sched.on_late_event(wid, st, now=5.0)          # deduped
+    assert sched.stats["immediate"] == 1
+    assert sched.due(5.0) == [wid]
+    sched.on_late_event(wid, st, now=6.0)          # re-arms after due
+    assert sched.due(6.0) == [wid]
+
+
+def test_upcoming_hint_rearms_after_replanning():
+    """upcoming() hints each planned staging once; re-planning to an
+    earlier deadline re-arms the hint (the readahead must re-issue for
+    the new, earlier sweep)."""
+    sched = PrestageScheduler(_observed_model(1e-3))
+    st = WindowState(0, 10, width=1, block_capacity=8)
+    from repro.core.events import EventBatch
+    st.append_events(EventBatch(np.zeros(80, np.int32),
+                                np.zeros(80), np.zeros((80, 1))), late=True)
+    wid = WindowId(0, 10)
+    sched.plan(wid, st, exec_time=100.0, now=0.0)
+    assert sched.upcoming(99.5, 1.0) == [wid]
+    assert sched.upcoming(99.5, 1.0) == []         # hinted once
+    sched.plan(wid, st, exec_time=50.0, now=0.0)   # earlier: supersedes
+    assert sched.upcoming(49.5, 1.0) == [wid]      # re-armed
+    # the superseded (later) entry is a tombstone, not a due staging
+    assert sched.due(49.95) == [wid]
+    assert sched.due(101.0) == []
+
+
+def test_prestage_cancel_removes_plan():
+    sched = PrestageScheduler(_observed_model(1e-3))
+    st = WindowState(0, 10, width=1, block_capacity=8)
+    wid = WindowId(0, 10)
+    sched.plan(wid, st, exec_time=100.0, now=0.0)
+    assert sched.planned_stage_at(wid) is not None
+    sched.cancel(wid)
+    assert sched.planned_stage_at(wid) is None
+    assert sched.due(200.0) == []
+    assert sched.upcoming(0.0, 1e6) == []
+
+
+def test_prestage_heap_compacts_dead_entries():
+    """Superseded and cancelled plans leave tombstones in the heap; once
+    they dominate, the heap is rebuilt from the live plan map instead of
+    growing forever (satellite: heap-growth fix)."""
+    sched = PrestageScheduler(_observed_model(1e-3))
+    st = WindowState(0, 10, width=1, block_capacity=8)
+    for i in range(200):
+        wid = WindowId(i * 10.0, (i + 1) * 10.0)
+        # each re-plan to an earlier time supersedes the previous entry
+        sched.plan(wid, st, exec_time=1e6 - i, now=0.0)
+        sched.plan(wid, st, exec_time=1e5 - i, now=0.0)
+        sched.plan(wid, st, exec_time=1e4 - i, now=0.0)
+    assert sched.stats["heap_compactions"] > 0
+    # bounded: proportional to live plans, not all plans ever made
+    assert len(sched._heap) < 2 * 200 + 32
+    # cancel the lot: the heap compacts toward empty, due() stays clean
+    for i in range(200):
+        sched.cancel(WindowId(i * 10.0, (i + 1) * 10.0))
+    assert sched.due(1e7) == []
+    assert len(sched._heap) <= 32

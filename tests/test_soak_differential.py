@@ -60,12 +60,14 @@ def _make_engine(op_name: str, batched: bool, sharded: bool,
                  spill_dir, width: int,
                  pooled: bool = False,
                  store: str = "log",
-                 pipelined: bool = False) -> StreamEngine:
+                 pipelined: bool = False,
+                 prefetch: str = "fixed") -> StreamEngine:
     aion = AionConfig(block_size=256, batched_execution=batched,
                       slot_sharding=sharded, block_pool=pooled,
                       store_backend=store,
                       store_segment_bytes=128 << 10,
-                      pipelined_execution=pipelined)
+                      pipelined_execution=pipelined,
+                      prefetch_backend=prefetch)
     kw = {"num_keys": 8} if op_name == "stock" else {}
     return StreamEngine(
         assigner=TumblingWindows(WINDOW),
@@ -120,12 +122,12 @@ class _SoakTotals:
 
 def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
            width: int = 1, pooled: bool = False, store: str = "log",
-           pipelined: bool = False):
+           pipelined: bool = False, prefetch: str = "fixed"):
     """Run the soak; returns (results, oracle_events, counter_totals)."""
     rng = np.random.default_rng(SEED)
     totals = _SoakTotals()
     eng = _make_engine(op_name, batched, sharded, spill_dir / "a", width,
-                       pooled, store, pipelined)
+                       pooled, store, pipelined, prefetch)
     all_events = []           # oracle ledger: every event ever generated
     now = 0.0
     wm = 0.0
@@ -162,7 +164,7 @@ def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
             eng.close()
             eng = _make_engine(op_name, batched, sharded,
                                spill_dir / "b", width, pooled, store,
-                               pipelined)
+                               pipelined, prefetch)
             eng.restore_state(snap)
 
     # close out: expire everything, fire remaining re-execution plans,
@@ -305,3 +307,24 @@ def test_soak_differential_pipelined(tmp_path, pooled):
     assert totals.io_errors == 0
     if pooled:
         assert totals.pooled_rows > 0
+
+
+@pytest.mark.parametrize("batched,pipelined", [
+    (True, False), (True, True), (False, False),
+])
+def test_soak_differential_learned_prefetch(tmp_path, batched, pipelined):
+    """ISSUE 7: the learned prefetch backend (lateness-model-driven
+    segment sweeps + coalescing rewrites + WAL-coalesced commits) is a
+    pure I/O-scheduling change — results must stay oracle-exact under
+    the same lateness + spill + restore pressure."""
+    results, (keys, ts, vals), totals = _drive(
+        "average", batched, False, tmp_path, pipelined=pipelined,
+        prefetch="learned")
+    want = _oracle_average(keys, ts, vals)
+    assert set(results) == set(want)
+    for wid in want:
+        assert results[wid] == pytest.approx(want[wid], rel=2e-4,
+                                             abs=2e-4), wid
+    assert totals.ingested == N_EVENTS
+    assert totals.ingested_late > N_EVENTS // 10
+    assert totals.io_errors == 0
