@@ -7,6 +7,7 @@ verify:
 	$(MAKE) verify-multidevice
 	$(MAKE) verify-pipeline
 	$(MAKE) verify-prefetch
+	$(MAKE) verify-splitk
 
 # Persistent p-bucket store suites, tmpdir-isolated (pytest tmp_path):
 # storage unit tests (WAL group commit, footer rebuild, torn-tail
@@ -52,6 +53,18 @@ verify-prefetch:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
 		tests/test_prefetch.py tests/test_cleanup_proactive.py
 
+# Split-K gate on 8 simulated devices: chunked partial-accumulator
+# kernel parity sweeps (padded-row bit-exactness, empty/zero-chunk
+# guards, merge identities, row-balanced sharded fold) plus the
+# executor's split-K matrix and the skewed soak rows (splitk on/off,
+# percentile's sorted-run batch contract).
+verify-splitk:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8$${XLA_FLAGS:+ $$XLA_FLAGS}" \
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
+		tests/test_kernels.py tests/test_batch_exec.py \
+		tests/test_soak_differential.py \
+		-k "splitk or merge_partials or pack_rows or percentile"
+
 # Benchmark entry point (CSV rows, one per paper table/figure).
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py
@@ -82,6 +95,11 @@ bench-prefetch:
 bench-pipeline:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q2_throughput.py --pipeline
 
+# Split-K vs stripe fold on the Zipf-skewed growing-late-table workload;
+# merges a "splitk_vs_stripe" section into BENCH_q2_gather.json
+bench-skew:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q2_throughput.py --skew
+
 .PHONY: verify verify-storage verify-multidevice verify-pipeline \
-	verify-prefetch bench bench-gather bench-q1 bench-q4 \
-	bench-prefetch bench-pipeline
+	verify-prefetch verify-splitk bench bench-gather bench-q1 bench-q4 \
+	bench-prefetch bench-pipeline bench-skew

@@ -417,6 +417,141 @@ def pipeline_benchmark(num_windows: int = 8, num_rounds: int = 10,
     return out
 
 
+def skew_benchmark(num_windows: int = 8, rounds: int = 10,
+                   chunk: int = 16, zipf_a: float = 1.4,
+                   op_name: str = "stock", num_keys: int = 256,
+                   emit_json: str = "BENCH_q2_gather.json") -> Dict:
+    """Split-K chunked fold vs the stripe fold on a Zipf-skewed,
+    growing-late-table workload (ISSUE 8 tentpole).
+
+    ``num_windows`` due windows whose block tables grow every round —
+    late waves dealt across windows by Zipf(``zipf_a``) weights, so one
+    hot window owns most rows — then the whole due set re-executes
+    (the batched late path). The stripe fold pads the table to the next
+    power of two (up to 2x wasted rows) and re-jits every time growth
+    crosses a pow2 boundary; the split-K fold decomposes every round
+    into {1,2,4,8} x ``chunk``-row launch groups, so after one warmup
+    every shape is cached: **zero recompiles as the batch grows** and
+    padding bounded by chunk-1 rows.
+
+    Reported per mode: fold seconds, fold row-throughput, recompiles
+    during the measured rounds (jit cache-size delta on the operator's
+    ``fold_batch``), padded-vs-real row ratio. Acceptance:
+    ``splitk_vs_stripe >= 1.5`` at 8 due windows with
+    ``recompiles == 0`` on the split-K side; the section merges into
+    ``emit_json``."""
+    import json
+    import os
+
+    from repro.configs.base import AionConfig
+    from repro.core import InMemoryPolicy, StreamEngine, TumblingWindows
+    from repro.core.batch_exec import BatchWorkItem
+    from repro.core.events import EventBatch
+    from repro.core.operators import make_operator
+    from repro.core.triggers import DeltaTTrigger
+
+    wd = 10.0
+    horizon = num_windows * wd
+    bs = 256
+    # both modes warm at 15*chunk rows (the split-K side needs one round
+    # that decomposes 8+4+2+1 to cache every launch shape); measured
+    # rounds then grow THROUGH the 256 and 512 pow2 boundaries, so the
+    # stripe fold re-jits mid-run and pads up to ~2x, while every
+    # split-K decomposition reuses the warmed {1,2,4,8}*chunk shapes
+    warm_rows = 15 * chunk
+    row_targets = [250, 270, 300, 340, 390, 450, 510, 580, 660, 750,
+                   850, 960][:rounds]
+    weights = 1.0 / np.arange(1, num_windows + 1) ** zipf_a
+    weights /= weights.sum()
+
+    def drive(splitk: int) -> Dict:
+        aion = AionConfig(block_size=bs, batched_execution=True,
+                          block_pool=True, pool_slots=2048,
+                          splitk_chunk_rows=splitk)
+        op = make_operator(op_name, bs, 1, num_keys=num_keys)
+        eng = StreamEngine(
+            assigner=TumblingWindows(wd), operator=op, aion=aion,
+            value_width=1, device_budget_bytes=512 << 20,
+            policy=InMemoryPolicy(),      # hot arena: fold-bound
+            trigger=DeltaTTrigger(executions=1),
+        )
+        rng = np.random.default_rng(0)
+
+        def grow_to(target_rows: int, have: np.ndarray):
+            """Late wave in whole blocks, dealt by Zipf weights."""
+            want = np.floor(weights * target_rows).astype(int)
+            want[0] += target_rows - want.sum()        # hot window
+            delta = np.maximum(want - have, 0)
+            parts = []
+            for i, d in enumerate(delta):
+                if d == 0:
+                    continue
+                n = d * bs                  # whole blocks: rows == n/bs
+                parts.append(EventBatch(
+                    rng.integers(0, num_keys, n).astype(np.int32),
+                    rng.uniform(i * wd, (i + 1) * wd, n),
+                    rng.normal(size=(n, 1)).astype(np.float32)))
+            for b in parts:
+                eng.ingest(b, now=horizon + 1.0)
+            return have + delta
+
+        def late_batch(r):
+            items = [BatchWorkItem(wid, eng.windows[wid], True)
+                     for wid in sorted(eng.windows)]
+            eng.batch_exec.execute(items, now=horizon + 2.0 + r)
+
+        have = np.zeros(num_windows, int)
+        have = grow_to(warm_rows, have)
+        eng.advance_watermark(horizon, now=horizon)    # live + compile
+        eng.io.drain()
+        late_batch(-1)                                 # warm the late path
+        m = eng.metrics
+        cache0 = op.fold_batch._cache_size()
+        m.batch_device_seconds = 0.0
+        m.pooled_rows = 0
+        launches0 = m.splitk_launches
+        rows_folded = 0
+        t0 = time.time()
+        for r, target in enumerate(row_targets):
+            have = grow_to(max(target, int(have.sum())), have)
+            late_batch(r)
+            rows_folded += int(have.sum())
+        wall = time.time() - t0
+        out = {
+            "fold_s": round(m.batch_device_seconds, 6),
+            "wall_s": round(wall, 6),
+            "rows_folded": rows_folded,
+            "fold_rows_per_sec": round(
+                rows_folded / max(m.batch_device_seconds, 1e-9)),
+            "recompiles": op.fold_batch._cache_size() - cache0,
+            "splitk_launches": m.splitk_launches - launches0,
+        }
+        eng.close()
+        return out
+
+    stripe = drive(0)
+    splitk_out = drive(chunk)
+    out: Dict = {
+        "num_windows": num_windows, "rounds": len(row_targets),
+        "block_size": bs, "chunk_rows": chunk, "zipf_a": zipf_a,
+        "workload": op_name, "num_keys": num_keys,
+        "hot_window_share": round(float(weights[0]), 3),
+        "stripe": stripe, "splitk": splitk_out,
+        "splitk_vs_stripe": round(
+            splitk_out["fold_rows_per_sec"]
+            / max(stripe["fold_rows_per_sec"], 1e-9), 2),
+    }
+    if emit_json:
+        merged = {}
+        if os.path.exists(emit_json):
+            with open(emit_json) as f:
+                merged = json.load(f)
+        merged["splitk_vs_stripe"] = out
+        with open(emit_json, "w") as f:
+            json.dump(merged, f, indent=2)
+    return out
+
+
 def devices_sweep(num_windows: int = 16, events_per_window: int = 2000,
                   repeats: int = 5, op_name: str = "lrb",
                   num_keys: int = 64) -> Dict:
@@ -480,10 +615,15 @@ if __name__ == "__main__":
                          "synchronous loop over cold p-blocks and merge "
                          "a pipeline_vs_sync ratio into "
                          "BENCH_q2_gather.json")
+    ap.add_argument("--skew", action="store_true",
+                    help="benchmark the split-K chunked fold vs the "
+                         "stripe fold on a Zipf-skewed growing-late-"
+                         "table workload and merge a splitk_vs_stripe "
+                         "section into BENCH_q2_gather.json")
     args = ap.parse_args()
-    if args.devices > 1 and (args.gather or args.pipeline):
-        ap.error("--gather/--pipeline measure single-device paths; "
-                 "run them without --devices")
+    if args.devices > 1 and (args.gather or args.pipeline or args.skew):
+        ap.error("--gather/--pipeline/--skew measure single-device "
+                 "paths; run them without --devices")
     if args.devices > 1:
         flags = os.environ.get("XLA_FLAGS", "")
         os.environ["XLA_FLAGS"] = (
@@ -497,6 +637,10 @@ if __name__ == "__main__":
     elif args.pipeline:
         import json as _json
         print(_json.dumps(pipeline_benchmark(
+            num_windows=args.windows or 8), indent=2))
+    elif args.skew:
+        import json as _json
+        print(_json.dumps(skew_benchmark(
             num_windows=args.windows or 8), indent=2))
     else:
         for r in run():

@@ -280,6 +280,19 @@ class AionConfig:
     # arena capacity in blocks; rounded up to a multiple of the slot-shard
     # count, and clamped so the arena never exceeds the device budget
     pool_slots: int = 256
+    # split-K chunked fold over the block table (flash-decoding part 2):
+    # > 0 partitions a round's pooled rows into fixed-shape chunks of
+    # this many rows, folds each chunk into its own partial accumulator,
+    # and merges partials through the operator's merge identity. Launch
+    # shapes then depend only on the chunk repertoire ({1,2,4,8} chunks
+    # per launch), never the raw batch size — zero recompiles as batches
+    # vary, and a Zipf-hot window's rows fold across chunk programs
+    # instead of serializing one segment stripe. Under slot sharding the
+    # executor instead deals rows round-robin across the mesh (balanced
+    # split-K) when the operator supports it. 0 disables (one stripe per
+    # window, pow2-bucketed shapes); auto-disabled for rounds smaller
+    # than one chunk per device.
+    splitk_chunk_rows: int = 0
     # overlap demand pool-fills of cold p-blocks with the fold of the
     # already-resident shard: the executor issues PRIO_DEMAND_STAGE fills,
     # folds the resident block table while the I/O thread stages, then

@@ -51,6 +51,20 @@ a window on its hash shard is what keeps its block-table rows local to
 the device whose arena tile holds them. Rows whose pool slot lands
 outside their window's shard (stale placement, cross-range restores) fall
 back to the stacked gather rather than being misfolded.
+
+Split-K chunk planning (``AionConfig.splitk_chunk_rows > 0``, operators
+with ``supports_splitk``): instead of one stripe per window padded to the
+next power of two, a round's pooled rows pad to a multiple of the chunk
+size and decompose greedily into launch groups of {8, 4, 2, 1} chunks
+(``_plan_table_groups``); each group folds through the split-K kernel
+(fixed-shape per-chunk partials, merged on-device) and the cross-group
+partial accumulators merge via ``WindowOperator.merge_acc``. Every launch
+shape is drawn from a fixed repertoire of at most four, so batch-size
+changes across rounds never recompile — the stripe path re-jits at every
+new pow2 bucket. Under slot sharding the STACKED fold instead deals rows
+round-robin across the mesh (``pack_rows_shard_major(balance=True)``) and
+folds full per-slot partials per device — a skewed window's rows spread
+over every device instead of serializing on its owner.
 """
 from __future__ import annotations
 
@@ -67,6 +81,12 @@ from repro.core.windows import WindowId
 from repro.kernels.segment_aggregate import (
     next_pow2, pack_rows_shard_major,
 )
+
+
+# largest split-K launch group, in chunks: greedy pow2 decomposition of a
+# round's chunk count into groups of {8, 4, 2, 1} chunks caps the shape
+# repertoire at four launch shapes total (e.g. 13 chunks -> 8 + 4 + 1)
+_SPLITK_MAX_CHUNKS = 8
 
 
 @dataclass
@@ -233,7 +253,79 @@ class BatchExecutor:
             eng.metrics.sharded_batch_executions += 1
         return out
 
-    def _stack_rows(self, rows, num_devices: int, slots_per: int):
+    # ------------------------------------------------------ splitk planning
+    def _splitk_chunk(self, num_rows: int, num_devices: int) -> int:
+        """Effective split-K chunk size for a round of ``num_rows`` rows,
+        or 0 when disabled: the knob is off, the operator's accumulator
+        cannot merge arbitrary row partials (``supports_splitk`` False),
+        or the round is smaller than one chunk per device (chunking a
+        sub-chunk round would only add merge overhead)."""
+        op = self.engine.operator
+        chunk = getattr(self.engine.aion, "splitk_chunk_rows", 0)
+        if chunk <= 0 or not getattr(op, "supports_splitk", False):
+            return 0
+        if num_rows <= chunk * max(num_devices, 1):
+            return 0
+        return chunk
+
+    def _plan_table_groups(self, rows, num_devices: int, slots_per: int):
+        """Launch groups ``[(table, fills, slots, splitk)]`` for pooled
+        (block, window_slot, pool_slot) rows.
+
+        Split-K disabled (or sharded — the sharded layout keeps the
+        ownership packing and chunks per shard inside the kernel): one
+        legacy pow2-padded group. Single-device split-K: rows pad to a
+        chunk multiple (pool slot 0, fill 0 — invalid everywhere,
+        including the ±inf min/max identities) and the chunk count
+        decomposes greedily into groups of {8, 4, 2, 1} chunks, so every
+        launch shape is one of at most four ``{1,2,4,8} * chunk_rows``
+        shapes regardless of batch size — zero recompiles as rounds vary,
+        where the stripe path re-jits per pow2 bucket. Cross-group
+        partials merge via ``op.merge_acc`` in the shared tail."""
+        chunk = self._splitk_chunk(len(rows), num_devices)
+        if chunk == 0 or num_devices > 1:
+            tbl, fills, slots = self._pack_table(rows, num_devices,
+                                                 slots_per)
+            return [(tbl, fills, slots, chunk)]
+        table = [ps for _, _, ps in rows]
+        fills = [blk.fill for blk, _, _ in rows]
+        slots = [ws for _, ws, _ in rows]
+        for _ in range((-len(rows)) % chunk):
+            table.append(0)
+            fills.append(0)
+            slots.append(0)
+        groups = []
+        off = 0
+        remaining = len(table) // chunk
+        while remaining:
+            g = min(_SPLITK_MAX_CHUNKS, 1 << (remaining.bit_length() - 1))
+            n = g * chunk
+            groups.append((jnp.asarray(table[off:off + n], jnp.int32),
+                           jnp.asarray(fills[off:off + n], jnp.int32),
+                           jnp.asarray(slots[off:off + n], jnp.int32),
+                           chunk))
+            off += n
+            remaining -= g
+        return groups
+
+    def _fold_table_groups(self, groups, arena_data, num_slots, use_mesh,
+                           accs):
+        """Dispatch every launch group against one arena snapshot; the
+        group accumulators append to ``accs`` (merged in the shared
+        tail). Returns the device seconds spent."""
+        eng = self.engine
+        op = eng.operator
+        d0 = _time.time()
+        for table, fills, slots, sk in groups:
+            accs.append(op.fold_batch(arena_data, fills, slots, num_slots,
+                                      mesh=use_mesh, table=table,
+                                      splitk=sk))
+            if sk:
+                eng.metrics.splitk_launches += 1
+        return _time.time() - d0
+
+    def _stack_rows(self, rows, num_devices: int, slots_per: int,
+                    balance: bool = False):
         """Stacked (data, fills, slots) tensors from (arrays, fill,
         window_slot) rows.
 
@@ -242,17 +334,22 @@ class BatchExecutor:
         power-of-two row count (invalid rows: fill 0, slot = shard's
         base slot) so row counts divide the mesh and the jitted fold
         sees O(log) distinct shapes. ``num_devices == 1`` degenerates to
-        the PR-1 layout (one group, rows padded to pow2). The stack
-        carries keys + values only: no batch fold is time-dependent
-        within a window, and stacking timestamps would force a D2H pull
-        of every hot device-resident row (f64 on host, f32 on device —
-        see the fold_batch contract).
+        the PR-1 layout (one group, rows padded to pow2). ``balance``
+        deals rows round-robin across shards instead (the split-K
+        layout): callers must fold through the row-balanced kernel,
+        which has no ownership precondition; padding rows take slot 0
+        with fill 0 — invalid everywhere. The stack carries keys +
+        values only: no batch fold is time-dependent within a window,
+        and stacking timestamps would force a D2H pull of every hot
+        device-resident row (f64 on host, f32 on device — see the
+        fold_batch contract).
         """
         eng = self.engine
         cap = eng.aion.block_size
         w = eng.value_width
         per_shard, rows_per_shard = pack_rows_shard_major(
-            [slot for _, _, slot in rows], num_devices, slots_per)
+            [slot for _, _, slot in rows], num_devices, slots_per,
+            balance=balance)
         pad_arrs = {
             "keys": np.zeros((cap,), np.int32),
             "values": np.zeros((cap, w), np.float32),
@@ -261,7 +358,8 @@ class BatchExecutor:
         fills: List[int] = []
         slots: List[int] = []
         for d, idxs in enumerate(per_shard):
-            base_slot = d * slots_per if num_devices > 1 else 0
+            base_slot = d * slots_per \
+                if num_devices > 1 and not balance else 0
             for r in idxs:
                 arrs, fill, slot = rows[r]
                 keys_rows.append(arrs["keys"])
@@ -284,11 +382,25 @@ class BatchExecutor:
     # ----------------------------------------------------- stacked gather
     def _fold_stacked(self, plans, mesh, num_devices):
         """Legacy gather: re-materialize the batch as stacked tensors
-        (device concat of resident rows; host reads of cold p-blocks)."""
+        (device concat of resident rows; host reads of cold p-blocks).
+
+        With split-K on under a mesh (operator permitting), the layout
+        switches to **row-balanced**: identity slot placement (no per-
+        device slot inflation), rows dealt round-robin across devices,
+        and the fold runs the balanced sharded kernel — full per-slot
+        partials per device, merged after the shard_map — so a skewed
+        window's rows never serialize on one device."""
         eng = self.engine
         op = eng.operator
-        slot_of, num_slots, slots_per = plan_slot_placement(
-            len(plans), num_devices)
+        chunk = getattr(eng.aion, "splitk_chunk_rows", 0)
+        balanced = num_devices > 1 and chunk > 0 \
+            and getattr(op, "supports_splitk", False)
+        if balanced:
+            slot_of, num_slots, slots_per = plan_slot_placement(
+                len(plans), 1)
+        else:
+            slot_of, num_slots, slots_per = plan_slot_placement(
+                len(plans), num_devices)
 
         # gather block rows: (arrays, fill, slot) in plan order — with
         # one batched store readahead so cold p-blocks arrive via a
@@ -310,13 +422,17 @@ class BatchExecutor:
         dev_dt = 0.0
         if rows:
             data, fills, slots = self._stack_rows(rows, num_devices,
-                                                  slots_per)
+                                                  slots_per,
+                                                  balance=balanced)
             gather_dt = _time.time() - g0
             dev_t0 = _time.time()
             results = op.run_batch(data, fills, slots, num_slots,
-                                   mesh=mesh)
+                                   mesh=mesh,
+                                   splitk=chunk if balanced else 0)
             dev_dt = _time.time() - dev_t0
             ran_sharded = mesh is not None
+            if balanced:
+                eng.metrics.splitk_launches += 1
         else:
             gather_dt = _time.time() - g0
             # every window empty: finalize the identity accumulator
@@ -467,15 +583,13 @@ class BatchExecutor:
                             eng.metrics.epoch_demoted_rows += 1
                             fallback.append((blk, slot_of[i]))
                     if pooled:
-                        table, fills, slots = self._pack_table(
+                        groups = self._plan_table_groups(
                             pooled, num_devices, slots_per)
                         arena_data = {"keys": k_arena, "values": v_arena}
                         gather_dt += _time.time() - g0
-                        d0 = _time.time()
-                        accs.append(op.fold_batch(
-                            arena_data, fills, slots, num_slots,
-                            mesh=use_mesh, table=table))
-                        dev_dt += _time.time() - d0
+                        dev_dt += self._fold_table_groups(
+                            groups, arena_data, num_slots, use_mesh,
+                            accs)
                         ran_sharded = ran_sharded or use_mesh is not None
                         eng.metrics.pooled_rows += len(pooled)
                     else:
@@ -525,14 +639,12 @@ class BatchExecutor:
 
             if pooled:
                 g0 = _time.time()
-                table, fills, slots = self._pack_table(
-                    pooled, num_devices, slots_per)
+                groups = self._plan_table_groups(pooled, num_devices,
+                                                 slots_per)
                 gather_dt += _time.time() - g0
-                d0 = _time.time()
-                accs.append(op.fold_batch(arena_data, fills, slots,
-                                          num_slots, mesh=use_mesh,
-                                          table=table))
-                dev_dt += _time.time() - d0
+                dev_dt += self._fold_table_groups(groups, arena_data,
+                                                  num_slots, use_mesh,
+                                                  accs)
                 ran_sharded = ran_sharded or use_mesh is not None
                 eng.metrics.pooled_rows += len(pooled)
 
@@ -557,15 +669,12 @@ class BatchExecutor:
                 gather_dt += _time.time() - g0
                 if staged:
                     g0 = _time.time()
-                    table, fills, slots = self._pack_table(
+                    groups = self._plan_table_groups(
                         staged, num_devices, slots_per)
                     arena2 = {"keys": k2, "values": v2}
                     gather_dt += _time.time() - g0
-                    d0 = _time.time()
-                    accs.append(op.fold_batch(arena2, fills, slots,
-                                              num_slots, mesh=use_mesh,
-                                              table=table))
-                    dev_dt += _time.time() - d0
+                    dev_dt += self._fold_table_groups(
+                        groups, arena2, num_slots, use_mesh, accs)
                     ran_sharded = ran_sharded or use_mesh is not None
                     eng.metrics.pooled_rows += len(staged)
 

@@ -99,6 +99,9 @@ class EngineMetrics:
     # (demoted to the stacked fallback rather than folding a stale slot)
     pipeline_rounds: int = 0
     epoch_demoted_rows: int = 0
+    # split-K chunked fold: launches that folded fixed-shape chunked
+    # partials (AionConfig.splitk_chunk_rows > 0)
+    splitk_launches: int = 0
     # bounded (BoundedSeries) when built via ``EngineMetrics.bounded`` —
     # the engine does; a bare EngineMetrics() keeps plain lists
     batch_occupancy_series: List[int] = field(default_factory=list)

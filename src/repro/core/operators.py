@@ -17,10 +17,11 @@ Batched contract: operators may additionally implement ``fold_batch`` /
 ``finalize_batch`` — a vectorized path that folds the blocks of MANY
 windows in one device pass by reducing over composite ``(window_slot,
 key)`` segment ids through the batched segment-aggregate kernel.
-``average``, ``bigrams``, ``stock``, and ``lrb`` implement it; the
-blocking ``percentile`` falls back to the per-window reference path.
+All five operators implement it — including the blocking ``percentile``,
+whose accumulator is a per-slot sorted run merged by sorted-merge.
 
-  fold_batch(data, fills, slots, num_slots, mesh=None, table=None) -> acc
+  fold_batch(data, fills, slots, num_slots, mesh=None, table=None,
+             splitk=0) -> acc
       data   table is None: {"keys": [B, cap] i32, "values": [B, cap, W]
              f32} — B stacked blocks, padded (the legacy device-concat /
              host-stack gather).
@@ -43,17 +44,28 @@ blocking ``percentile`` falls back to the per-window reference path.
              the fold gathers event tiles straight from the arena —
              in-kernel on the Mosaic backend, one take along the pool
              axis on the dense backend (zero per-batch host copies)
+      splitk optional chunk size (static): > 0 routes block-table folds
+             through the split-K kernel (fixed-shape chunks of ``splitk``
+             rows, per-chunk partial accumulators merged on-device), and
+             with a mesh routes stacked folds through the row-balanced
+             sharded variant. Operators whose fold cannot reduce into
+             plain per-slot partials must ignore it and declare
+             ``supports_splitk=False`` (the bigram scatter masks rows by
+             slot ownership — balanced rows would be silently dropped).
   finalize_batch(acc, num_slots) -> [per-window result] * num_slots
       element i is equal (up to float assoc.) to the per-window
       ``finalize(fold(...))`` over slot i's blocks.
   merge_acc(a, b) -> acc
       combines two partial batch accumulators over the SAME slot layout —
       what lets the executor fold the already-resident block table while
-      demand pool-fills are in flight, then fold the newly-filled slots
-      and merge. Default (``default_merge_acc``): dict values merge by
+      demand pool-fills are in flight (then fold the newly-filled slots
+      and merge), and what merges the split-K executor's per-chunk-group
+      partials. Default (``default_merge_acc``): dict values merge by
       key — 'min' -> elementwise minimum, 'max' -> maximum, everything
-      else adds; correct for every built-in accumulator, override via
-      the ``merge`` field otherwise.
+      else adds; correct for every built-in *reduction* accumulator.
+      Accumulators with a different merge identity MUST override via the
+      ``merge`` field — percentile's sorted runs concatenate and re-sort
+      (adding them would corrupt the state).
 """
 from __future__ import annotations
 
@@ -96,6 +108,12 @@ class WindowOperator:
     # partial-accumulator combine for the overlapped pooled fold; None ->
     # ``default_merge_acc`` (dict accs merging by key semantics)
     merge: Optional[Callable[[Any, Any], Any]] = None
+    # split-K safety: True when fold_batch reduces into plain per-slot
+    # partial accumulators, so rows may be chunked/balanced arbitrarily
+    # and partials merged via merge_acc. False for folds that mask rows
+    # by slot ownership (the big-vocab bigram scatter) — the executor
+    # must not balance their rows or chunk their tables.
+    supports_splitk: bool = False
 
     @property
     def supports_batch(self) -> bool:
@@ -115,15 +133,16 @@ class WindowOperator:
         return self.finalize(acc)
 
     def run_batch(self, data, fills, slots, num_slots: int,
-                  mesh=None, table=None) -> list:
+                  mesh=None, table=None, splitk: int = 0) -> list:
         """Batched path: one device pass over the blocks of many windows;
         returns one finalized result per slot. ``mesh`` routes the fold
         through the slot-sharded multi-device kernel; ``table`` switches
-        ``data`` from stacked rows to the pool arenas (the contract
-        requires fold_batch to accept both, defaults None)."""
+        ``data`` from stacked rows to the pool arenas; ``splitk`` chunks
+        the fold into fixed-shape partials (the contract requires
+        fold_batch to accept all three, defaults None/0)."""
         assert self.supports_batch
         acc = self.fold_batch(data, fills, slots, num_slots, mesh=mesh,
-                              table=table)
+                              table=table, splitk=splitk)
         return self.finalize_batch(acc, num_slots)
 
 
@@ -151,6 +170,7 @@ def _per_slot_finalize(finalize: Callable[[Any], Any]):
 def make_average(block_capacity: int, width: int) -> WindowOperator:
     from repro.kernels import (
         segment_aggregate_batched, segment_aggregate_block_table,
+        segment_aggregate_block_table_splitk,
     )
 
     def init_acc():
@@ -167,8 +187,9 @@ def make_average(block_capacity: int, width: int) -> WindowOperator:
     def finalize(acc):
         return float(acc["sum"] / jnp.maximum(acc["count"], 1.0))
 
-    @partial(jax.jit, static_argnames=("num_slots", "mesh"))
-    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None):
+    @partial(jax.jit, static_argnames=("num_slots", "mesh", "splitk"))
+    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None,
+                   splitk=0):
         cap = data["values"].shape[1]
         valid = _batch_valid(cap, jnp.asarray(fills))
         slots = jnp.asarray(slots, jnp.int32)
@@ -176,17 +197,26 @@ def make_average(block_capacity: int, width: int) -> WindowOperator:
         if table is not None:
             # full arena + num_cols: the width-1 selection happens after
             # the in-launch gather, never as an arena-wide slice copy
-            out = segment_aggregate_block_table(
-                data["values"],
-                jnp.zeros((table.shape[0], cap), jnp.int32), table, 1,
-                valid=valid, slot_ids=slots, num_slots=num_slots,
-                stats=("sum", "count"), mesh=mesh, num_cols=1)
+            if splitk > 0:
+                out = segment_aggregate_block_table_splitk(
+                    data["values"],
+                    jnp.zeros((table.shape[0], cap), jnp.int32), table, 1,
+                    splitk, valid=valid, slot_ids=slots,
+                    num_slots=num_slots, stats=("sum", "count"),
+                    mesh=mesh, num_cols=1)
+            else:
+                out = segment_aggregate_block_table(
+                    data["values"],
+                    jnp.zeros((table.shape[0], cap), jnp.int32), table, 1,
+                    valid=valid, slot_ids=slots, num_slots=num_slots,
+                    stats=("sum", "count"), mesh=mesh, num_cols=1)
         else:
             out = segment_aggregate_batched(
                 jnp.asarray(data["values"][:, :, :1], jnp.float32),
                 jnp.zeros((data["values"].shape[0], cap), jnp.int32), 1,
                 valid=valid, slot_ids=slots,
-                num_slots=num_slots, stats=("sum", "count"), mesh=mesh)
+                num_slots=num_slots, stats=("sum", "count"), mesh=mesh,
+                splitk=splitk)
         return {"sum": out["sum"][:, 0, 0], "count": out["count"][:, 0]}
 
     def finalize_batch(acc, num_slots):
@@ -196,7 +226,8 @@ def make_average(block_capacity: int, width: int) -> WindowOperator:
 
     return WindowOperator("average", False, init_acc, fold, finalize,
                           fold_batch=fold_batch,
-                          finalize_batch=finalize_batch)
+                          finalize_batch=finalize_batch,
+                          supports_splitk=True)
 
 
 # ------------------------------------------------------------------ bigrams
@@ -291,8 +322,12 @@ def make_bigrams(block_capacity: int, width: int,
     def finalize(acc):
         return np.asarray(acc)
 
-    @partial(jax.jit, static_argnames=("num_slots", "mesh"))
-    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None):
+    @partial(jax.jit, static_argnames=("num_slots", "mesh", "splitk"))
+    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None,
+                   splitk=0):
+        # splitk deliberately ignored (supports_splitk=False): the
+        # big-vocab scatter masks rows by slot ownership, so balanced or
+        # chunk-padded rows would be silently dropped
         vals = data["values"]
         if table is not None:
             # pool gather: one take along the arena's pool axis (the
@@ -391,10 +426,12 @@ def make_stock(block_capacity: int, width: int,
 
     from repro.kernels import (
         segment_aggregate_batched, segment_aggregate_block_table,
+        segment_aggregate_block_table_splitk,
     )
 
-    @partial(jax.jit, static_argnames=("num_slots", "mesh"))
-    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None):
+    @partial(jax.jit, static_argnames=("num_slots", "mesh", "splitk"))
+    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None,
+                   splitk=0):
         cap = data["values"].shape[1]
         valid = _batch_valid(cap, jnp.asarray(fills))
         slots = jnp.asarray(slots, jnp.int32)
@@ -405,22 +442,29 @@ def make_stock(block_capacity: int, width: int,
             # price column post-gather — no arena-wide slice copy)
             keys = jnp.take(jnp.asarray(data["keys"], jnp.int32), table,
                             axis=0) % num_keys
-            out = segment_aggregate_block_table(
-                data["values"], keys,
-                table, num_keys, valid=valid, slot_ids=slots,
-                num_slots=num_slots, mesh=mesh, num_cols=1)
+            if splitk > 0:
+                out = segment_aggregate_block_table_splitk(
+                    data["values"], keys, table, num_keys, splitk,
+                    valid=valid, slot_ids=slots, num_slots=num_slots,
+                    mesh=mesh, num_cols=1)
+            else:
+                out = segment_aggregate_block_table(
+                    data["values"], keys,
+                    table, num_keys, valid=valid, slot_ids=slots,
+                    num_slots=num_slots, mesh=mesh, num_cols=1)
         else:
             keys = jnp.asarray(data["keys"], jnp.int32) % num_keys
             out = segment_aggregate_batched(
                 jnp.asarray(data["values"][:, :, :1], jnp.float32), keys,
                 num_keys, valid=valid, slot_ids=slots,
-                num_slots=num_slots, mesh=mesh)
+                num_slots=num_slots, mesh=mesh, splitk=splitk)
         return {"min": out["min"][:, :, 0], "max": out["max"][:, :, 0],
                 "sum": out["sum"][:, :, 0], "count": out["count"]}
 
     return WindowOperator("stock", False, init_acc, fold, finalize,
                           fold_batch=fold_batch,
-                          finalize_batch=_per_slot_finalize(finalize))
+                          finalize_batch=_per_slot_finalize(finalize),
+                          supports_splitk=True)
 
 
 # ---------------------------------------------------------------------- lrb
@@ -463,13 +507,18 @@ def make_lrb(block_capacity: int, width: int,
 
     from repro.kernels import segment_aggregate_batched
 
-    @partial(jax.jit, static_argnames=("num_slots", "mesh"))
-    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None):
+    @partial(jax.jit, static_argnames=("num_slots", "mesh", "splitk"))
+    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None,
+                   splitk=0):
         keys, values = data["keys"], data["values"]
         if table is not None:
             # the fold consumes DERIVED values ([speed, stopped]), so the
             # pool gather is one take along the arena's pool axis per
-            # tensor — still a single fused gather op, not O(rows) concats
+            # tensor — still a single fused gather op, not O(rows)
+            # concats. splitk chunking therefore happens at the executor
+            # (chunk-group launches merged via merge_acc) rather than
+            # inside this launch; the stacked sharded fold below still
+            # honours the balanced split-K layout.
             keys = jnp.take(jnp.asarray(keys, jnp.int32), table, axis=0)
             values = jnp.take(values, table, axis=0)
         cap = values.shape[1]
@@ -483,13 +532,14 @@ def make_lrb(block_capacity: int, width: int,
         out = segment_aggregate_batched(
             vals, seg, num_segments, valid=valid,
             slot_ids=jnp.asarray(slots, jnp.int32), num_slots=num_slots,
-            stats=("sum", "count"), mesh=mesh)
+            stats=("sum", "count"), mesh=mesh, splitk=splitk)
         return {"count": out["count"], "speed_sum": out["sum"][:, :, 0],
                 "stopped": out["sum"][:, :, 1]}
 
     return WindowOperator("lrb", False, init_acc, fold, finalize,
                           fold_batch=fold_batch,
-                          finalize_batch=_per_slot_finalize(finalize))
+                          finalize_batch=_per_slot_finalize(finalize),
+                          supports_splitk=True)
 
 
 # --------------------------------------------------------------- percentile
@@ -497,7 +547,17 @@ def make_lrb(block_capacity: int, width: int,
 def make_percentile(block_capacity: int, width: int,
                     qs=(0.5, 0.95, 0.99)) -> WindowOperator:
     """BLOCKING operator (paper §3.3): the full window must be resident
-    before the percentiles can be computed."""
+    before the percentiles can be computed.
+
+    Batch contract (PR 8, the last per-window straggler): the per-slot
+    accumulator is a NaN-padded **sorted run** of the slot's valid values
+    (``jnp.sort`` orders NaN last, so the first ``count`` entries are the
+    ascending data) — exact, not a sketch. Two accumulators merge by
+    concatenating runs and re-sorting (a sorted-merge), which is why the
+    ``merge`` override exists: the default add-merge would corrupt the
+    state. The merge composes with the split-K executor's chunk-group
+    partials; ``mesh``/``splitk`` are otherwise ignored inside the fold
+    (a sort has no per-slot reduction to shard)."""
 
     def init_acc():
         return []
@@ -516,7 +576,50 @@ def make_percentile(block_capacity: int, width: int,
         vals = vals[~jnp.isnan(vals)]
         return {q: float(jnp.quantile(vals, q)) for q in qs}
 
-    return WindowOperator("percentile", True, init_acc, fold, finalize)
+    @partial(jax.jit, static_argnames=("num_slots", "mesh", "splitk"))
+    def fold_batch(data, fills, slots, num_slots, mesh=None, table=None,
+                   splitk=0):
+        vals = data["values"]
+        if table is not None:
+            # pool gather: one take along the arena's pool axis (the
+            # sort consumes every row's values, so there is no in-kernel
+            # formulation to route through)
+            vals = jnp.take(vals, table, axis=0)
+        v = jnp.asarray(vals[:, :, 0], jnp.float32)           # [B, cap]
+        b, cap = v.shape
+        valid = _batch_valid(cap, jnp.asarray(fills))
+        sl = jnp.asarray(slots, jnp.int32)
+        keep = valid[:, :, None] & (sl[:, None, None] ==
+                                    jnp.arange(num_slots)[None, None, :])
+        mat = jnp.where(keep, v[:, :, None], jnp.nan) \
+            .transpose(2, 0, 1).reshape(num_slots, b * cap)
+        return {"sorted": jnp.sort(mat, axis=1),
+                "count": jnp.sum(keep, axis=(0, 1)).astype(jnp.int32)}
+
+    def merge(a, b):
+        # sorted-merge: concatenate the runs and re-sort (NaN padding
+        # stays at the tail); counts add
+        return {"sorted": jnp.sort(jnp.concatenate(
+                    [a["sorted"], b["sorted"]], axis=1), axis=1),
+                "count": a["count"] + b["count"]}
+
+    def finalize_batch(acc, num_slots):
+        srt = np.asarray(acc["sorted"])
+        cnt = np.asarray(acc["count"])
+        out = []
+        for i in range(num_slots):
+            n = int(cnt[i])
+            if n == 0:
+                out.append({q: float("nan") for q in qs})
+            else:
+                out.append({q: float(np.quantile(srt[i, :n], q))
+                            for q in qs})
+        return out
+
+    return WindowOperator("percentile", True, init_acc, fold, finalize,
+                          fold_batch=fold_batch,
+                          finalize_batch=finalize_batch,
+                          merge=merge, supports_splitk=True)
 
 
 OPERATORS = {

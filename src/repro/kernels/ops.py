@@ -22,9 +22,13 @@ from repro.kernels.segment_aggregate import (
     empty_batch_identity as _empty_batch_identity,
     norm_stats as _norm_stats,
     segment_aggregate_batched_dense, segment_aggregate_batched_pallas,
-    segment_aggregate_batched_sharded, segment_aggregate_block_table_dense,
+    segment_aggregate_batched_sharded,
+    segment_aggregate_batched_splitk_sharded,
+    segment_aggregate_block_table_dense,
     segment_aggregate_block_table_pallas,
-    segment_aggregate_block_table_sharded, segment_aggregate_pallas,
+    segment_aggregate_block_table_sharded,
+    segment_aggregate_block_table_splitk_dense,
+    segment_aggregate_block_table_splitk_pallas, segment_aggregate_pallas,
 )
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -58,14 +62,14 @@ def segment_aggregate(values, segment_ids, num_segments: int, valid=None,
 
 @functools.partial(jax.jit, static_argnames=("num_segments", "num_slots",
                                              "backend", "block_n",
-                                             "stats", "mesh"))
+                                             "stats", "mesh", "splitk"))
 def segment_aggregate_batched(values, segment_ids, num_segments: int,
                               valid=None, slot_ids=None,
                               num_slots: Optional[int] = None,
                               backend: str = "auto", block_n: int = 512,
                               stats: tuple = ("sum", "count", "min",
                                               "max"),
-                              mesh=None):
+                              mesh=None, splitk: int = 0):
     """Batched multi-window reduce-by-key: values [B, N, W], ids [B, N],
     slot_ids [B] -> aggregates [num_slots, num_segments, ...] in one pass.
 
@@ -83,6 +87,15 @@ def segment_aggregate_batched(values, segment_ids, num_segments: int,
     and rows must be packed shard-major (``pack_rows_shard_major``). The
     ``'ref'`` backend ignores the mesh: it is the unsharded oracle the
     sharded path is validated against.
+
+    ``splitk > 0`` with a mesh switches to the **row-balanced** split-K
+    variant: rows are dealt across devices with no ownership
+    precondition (``pack_rows_shard_major(balance=True)``), each device
+    folds a full per-slot partial, and the partials merge after the
+    shard_map. Only rows must divide the mesh; slots are unconstrained.
+    Callers must check ``WindowOperator.supports_splitk`` — ownership-
+    masking folds would drop balanced rows. Without a mesh ``splitk`` is
+    a no-op here (single-device chunking lives on the block-table path).
     """
     stats = _norm_stats(stats)
     b = values.shape[0]
@@ -100,6 +113,12 @@ def segment_aggregate_batched(values, segment_ids, num_segments: int,
     else:
         be = backend
     if mesh is not None and be != "ref" and mesh.size > 1:
+        if splitk > 0:
+            return segment_aggregate_batched_splitk_sharded(
+                values, segment_ids, num_segments, valid=valid,
+                slot_ids=slot_ids, num_slots=ns, mesh=mesh,
+                stats=stats, use_pallas=(be in ("pallas", "interpret")),
+                block_n=block_n, interpret=(be == "interpret"))
         return segment_aggregate_batched_sharded(
             values, segment_ids, num_segments, valid=valid,
             slot_ids=slot_ids, num_slots=num_slots, mesh=mesh,
@@ -185,6 +204,75 @@ def segment_aggregate_block_table(values_arena, segment_ids, table,
     return segment_aggregate_block_table_pallas(
         values_arena, segment_ids, table, num_segments, valid=valid,
         slot_ids=slot_ids, num_slots=num_slots,
+        interpret=(be == "interpret"), stats=stats, num_cols=num_cols)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "chunk_rows",
+                                             "num_slots", "backend",
+                                             "stats", "mesh", "num_cols"))
+def segment_aggregate_block_table_splitk(values_arena, segment_ids, table,
+                                         num_segments: int, chunk_rows: int,
+                                         valid=None, slot_ids=None,
+                                         num_slots: Optional[int] = None,
+                                         backend: str = "auto",
+                                         stats: tuple = ("sum", "count",
+                                                         "min", "max"),
+                                         mesh=None,
+                                         num_cols: Optional[int] = None):
+    """Split-K block-table fold: the block-table gather of
+    ``segment_aggregate_block_table`` with the pool axis partitioned into
+    fixed-shape chunks of ``chunk_rows`` rows, per-chunk partial
+    accumulators, and an on-device identity merge (flash-decoding's
+    ``mid_o`` second half).
+
+    Launch shapes depend only on ``chunk_rows`` and the chunk count —
+    never the raw batch size — so an executor that decomposes variable
+    batches into a fixed repertoire of chunk counts folds ANY batch with
+    zero recompiles, and one hot window's rows spread across chunk
+    programs instead of serializing a single segment stripe. ``mesh``
+    routes through the sharded block-table variant with per-shard
+    split-K local folds (same ownership layout as the plain sharded op).
+    The ``'ref'`` backend is the chunk-looped oracle
+    (``ref_segment_aggregate_block_table_splitk``) the other backends
+    are validated against.
+    """
+    stats = _norm_stats(stats)
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+    r = table.shape[0]
+    ns = num_slots if num_slots is not None else \
+        (r if slot_ids is None else None)
+    if ns is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    if r == 0 or ns == 0:
+        w_out = num_cols if num_cols is not None else values_arena.shape[2]
+        empty = _empty_batch_identity(ns, num_segments, w_out)
+        return {k: v for k, v in empty.items() if k in stats}
+    if backend == "auto":
+        be = "pallas" if jax.devices()[0].platform == "tpu" else "dense"
+    else:
+        be = backend
+    if mesh is not None and be != "ref" and mesh.size > 1:
+        return segment_aggregate_block_table_sharded(
+            values_arena, segment_ids, table, num_segments, valid=valid,
+            slot_ids=slot_ids, num_slots=num_slots, mesh=mesh, stats=stats,
+            use_pallas=(be in ("pallas", "interpret")),
+            interpret=(be == "interpret"), num_cols=num_cols,
+            chunk_rows=chunk_rows)
+    if be == "dense":
+        return segment_aggregate_block_table_splitk_dense(
+            values_arena, segment_ids, table, num_segments, chunk_rows,
+            valid=valid, slot_ids=slot_ids, num_slots=num_slots,
+            stats=stats, num_cols=num_cols)
+    if be == "ref":
+        out = _ref.ref_segment_aggregate_block_table_splitk(
+            values_arena, segment_ids, table, num_segments, chunk_rows,
+            valid=valid, slot_ids=slot_ids, num_slots=num_slots,
+            num_cols=num_cols)
+        return {k: v for k, v in out.items() if k in stats}
+    return segment_aggregate_block_table_splitk_pallas(
+        values_arena, segment_ids, table, num_segments, chunk_rows,
+        valid=valid, slot_ids=slot_ids, num_slots=num_slots,
         interpret=(be == "interpret"), stats=stats, num_cols=num_cols)
 
 

@@ -100,6 +100,51 @@ def ref_segment_aggregate_block_table(values_arena: jnp.ndarray,
         num_slots=num_slots)
 
 
+def ref_segment_aggregate_block_table_splitk(
+        values_arena: jnp.ndarray,
+        segment_ids: jnp.ndarray,
+        table: jnp.ndarray,
+        num_segments: int,
+        chunk_rows: int,
+        valid: Optional[jnp.ndarray] = None,
+        slot_ids: Optional[jnp.ndarray] = None,
+        num_slots: Optional[int] = None,
+        num_cols: Optional[int] = None) -> dict:
+    """Oracle for the split-K block-table fold and its merge semantics.
+
+    Folds ``chunk_rows`` table rows at a time through the plain
+    block-table oracle, starting from the fold identity
+    (``empty_batch_identity``) and merging each chunk's partial through
+    the stat's own reduction: sum/count add, min/max take elementwise
+    extrema. Zero rows merges to the identity. The split-K kernels must
+    match this regardless of how they chunk, pad, or parallelize."""
+    from repro.kernels.segment_aggregate import empty_batch_identity
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+    r = table.shape[0]
+    w_out = num_cols if num_cols is not None else values_arena.shape[2]
+    if slot_ids is None:
+        slot_ids = jnp.arange(r, dtype=jnp.int32)
+        if num_slots is None:
+            num_slots = r
+    elif num_slots is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    acc = empty_batch_identity(num_slots, num_segments, w_out)
+    for off in range(0, r, chunk_rows):
+        sl = slice(off, min(off + chunk_rows, r))
+        part = ref_segment_aggregate_block_table(
+            values_arena, segment_ids[sl], table[sl], num_segments,
+            valid=None if valid is None else valid[sl],
+            slot_ids=slot_ids[sl], num_slots=num_slots, num_cols=num_cols)
+        acc = {
+            "sum": acc["sum"] + part["sum"],
+            "count": acc["count"] + part["count"],
+            "min": jnp.minimum(acc["min"], part["min"]),
+            "max": jnp.maximum(acc["max"], part["max"]),
+        }
+    return acc
+
+
 def ref_flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True, window: int = 0) -> jnp.ndarray:
     """q [B, Sq, H, D]; k, v [B, Sk, Hkv, D] -> [B, Sq, H, D].

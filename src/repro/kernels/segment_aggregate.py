@@ -41,6 +41,22 @@ axis on the dense path. The sharded variant partitions BOTH the arena
 and the table over the mesh, so each device gathers only from its own
 ``[pool_slots/D, ...]`` arena tile — the table stays shard-local.
 
+The **split-K** entry points (``segment_aggregate_block_table_splitk_*``)
+are the second half of the flash-decoding idiom: the table's row axis is
+partitioned into ``k`` fixed-shape chunks of ``chunk_rows`` rows, each
+chunk's grid programs fold into their own ``mid_o``-style partial
+accumulator (leading chunk axis on every out_shape), and the partials
+merge through each stat's own identity (sum/count add, min/max
+elementwise extrema — ``merge_partials``). Because every launch shape is
+``chunk_rows`` regardless of batch size, varying batches reuse one
+compiled kernel instead of recompiling per power-of-two bucket, and a
+skewed window whose rows dominate the batch folds across chunks in
+parallel instead of serializing one segment stripe.
+``segment_aggregate_batched_splitk_sharded`` is the distributed form:
+rows balance across the mesh ignoring slot ownership, each device folds
+a FULL per-slot partial, and the per-device partials merge after the
+``shard_map``.
+
 All Pallas entry points thread ``stats`` through their ``out_shape``s:
 sum/count-only folds (average, lrb) never allocate or compute the
 min/max VPU broadcast-reduce, matching the dense backend.
@@ -408,6 +424,217 @@ def segment_aggregate_block_table_dense(
         num_slots=num_slots, stats=norm_stats(stats))
 
 
+def merge_partials(partials: dict) -> dict:
+    """Merge ``[k, ...]`` per-chunk partial accumulators along the leading
+    chunk axis through each stat's identity: sum/count add, min/max take
+    elementwise extrema. ``k == 0`` (an empty chunk set) merges to the
+    fold identity — a degenerate ``jnp.min`` over an empty axis would
+    raise, and the identity is what an empty batch must produce."""
+    out = {}
+    for s, v in partials.items():
+        if v.shape[0] == 0:
+            if s == "min":
+                out[s] = jnp.full(v.shape[1:], jnp.inf)
+            elif s == "max":
+                out[s] = jnp.full(v.shape[1:], -jnp.inf)
+            else:
+                out[s] = jnp.zeros(v.shape[1:], jnp.float32)
+        elif s == "min":
+            out[s] = jnp.min(v, axis=0)
+        elif s == "max":
+            out[s] = jnp.max(v, axis=0)
+        else:
+            out[s] = jnp.sum(v, axis=0)
+    return out
+
+
+def _stat_outputs_chunked(stats: Tuple[str, ...], k: int,
+                          num_segments: int, w: int):
+    """(out_shapes, out_specs) for the split-K kernel: the out arrays grow
+    a leading chunk axis ``[k, S(, W)]`` and chunk ``c``'s programs all map
+    to block ``c`` — each chunk's partial accumulator stays VMEM-resident
+    across its ``chunk_rows`` inner steps (grid iterates the row axis
+    fastest) and is re-initialized when the next chunk begins."""
+    full2 = pl.BlockSpec((1, num_segments, w), lambda c, r, *a: (c, 0, 0))
+    full1 = pl.BlockSpec((1, num_segments), lambda c, r, *a: (c, 0))
+    shapes = []
+    specs = []
+    for s in stats:
+        if s == "count":
+            shapes.append(jax.ShapeDtypeStruct((k, num_segments),
+                                               jnp.float32))
+            specs.append(full1)
+        else:
+            shapes.append(jax.ShapeDtypeStruct((k, num_segments, w),
+                                               jnp.float32))
+            specs.append(full2)
+    return tuple(shapes), tuple(specs)
+
+
+def _bt_splitk_kernel(table_ref, ids_ref, valid_ref, arena_ref, *out_refs,
+                      num_segments: int, cap: int, stats: Tuple[str, ...],
+                      num_cols: Optional[int]):
+    """Split-K block-table kernel body: grid ``(k, chunk_rows)``, one step
+    per (chunk, row-within-chunk). Accumulators re-init at the first row
+    of every chunk (the out BlockSpecs hand each chunk its own [1, S, W]
+    block, so ``_acc_tile``'s [S, W] tiles broadcast into it)."""
+    refs = dict(zip(stats, out_refs))
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        _init_refs(refs)
+
+    vals = arena_ref[0]
+    if num_cols is not None:
+        vals = vals[:, :num_cols]
+    _acc_tile(refs, ids_ref[0], valid_ref[0] != 0, vals,
+              num_segments, cap)
+
+
+def _splitk_empty(stats, num_slots, num_segments, w_out, merge):
+    """Zero-row result for the split-K entry points: the fold identity
+    when merging, else a genuinely empty ``k == 0`` partial stack."""
+    empty = empty_batch_identity(num_slots, num_segments, w_out)
+    merged = {s: empty[s] for s in stats}
+    if merge:
+        return merged
+    return {s: v[None][:0] for s, v in merged.items()}
+
+
+def segment_aggregate_block_table_splitk_pallas(
+        values_arena: jnp.ndarray, segment_ids: jnp.ndarray,
+        table: jnp.ndarray, num_segments: int, chunk_rows: int,
+        valid: Optional[jnp.ndarray] = None,
+        slot_ids: Optional[jnp.ndarray] = None,
+        num_slots: Optional[int] = None,
+        interpret: bool = True,
+        stats: Tuple[str, ...] = ALL_STATS,
+        num_cols: Optional[int] = None,
+        merge: bool = True):
+    """Split-K block-table fold: fixed-shape chunked partial accumulators.
+
+    Same gather contract as ``segment_aggregate_block_table_pallas``, but
+    the ``R`` table rows are padded to a multiple of ``chunk_rows`` and
+    folded by a ``(k, chunk_rows)`` grid where chunk ``c`` accumulates
+    rows ``[c*chunk_rows, (c+1)*chunk_rows)`` into its own partial out
+    block (the exemplar's ``mid_o``). Padding rows are fully invalid
+    (table entry 0, slot 0, valid 0) so they contribute nothing to any
+    chunk's partial — including min/max, whose identities are ±inf, not
+    zero. ``merge=False`` returns the raw ``[k, num_slots, S(, W)]``
+    partials for caller-side (cross-launch) merging; the default merges
+    on device via ``merge_partials``.
+    """
+    stats = norm_stats(stats)
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+    p, cap, w = values_arena.shape
+    w_out = num_cols if num_cols is not None else w
+    r = table.shape[0]
+    if slot_ids is None:
+        slot_ids = jnp.arange(r, dtype=jnp.int32)
+        if num_slots is None:
+            num_slots = r
+    elif num_slots is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    if r == 0 or num_slots == 0:
+        return _splitk_empty(stats, num_slots, num_segments, w_out, merge)
+    if valid is None:
+        valid = jnp.ones((r, cap), jnp.int32)
+    pad = (-r) % chunk_rows
+    if pad:
+        table = jnp.pad(table, (0, pad))
+        segment_ids = jnp.pad(segment_ids, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+        slot_ids = jnp.pad(slot_ids, (0, pad))
+    k = (r + pad) // chunk_rows
+    composite = (slot_ids.astype(jnp.int32)[:, None] * num_segments
+                 + segment_ids.astype(jnp.int32))        # [R', cap]
+    s_total = num_slots * num_segments
+    kernel = functools.partial(_bt_splitk_kernel, num_segments=s_total,
+                               cap=cap, stats=stats, num_cols=num_cols)
+    out_shapes, out_specs = _stat_outputs_chunked(stats, k, s_total, w_out)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k, chunk_rows),
+        in_specs=[
+            pl.BlockSpec((1, cap),
+                         lambda c, i, tbl: (c * chunk_rows + i, 0)),
+            pl.BlockSpec((1, cap),
+                         lambda c, i, tbl: (c * chunk_rows + i, 0)),
+            pl.BlockSpec((1, cap, w),
+                         lambda c, i, tbl: (tbl[c * chunk_rows + i], 0, 0)),
+        ],
+        out_specs=out_specs,
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(table.astype(jnp.int32), composite,
+      valid.astype(jnp.int32), values_arena.astype(jnp.float32))
+    out = dict(zip(stats, outs))
+    partials = {}
+    for s in stats:
+        if s == "count":
+            partials[s] = out[s].reshape(k, num_slots, num_segments)
+        else:
+            partials[s] = out[s].reshape(k, num_slots, num_segments, w_out)
+    return merge_partials(partials) if merge else partials
+
+
+def segment_aggregate_block_table_splitk_dense(
+        values_arena: jnp.ndarray, segment_ids: jnp.ndarray,
+        table: jnp.ndarray, num_segments: int, chunk_rows: int,
+        valid: Optional[jnp.ndarray] = None,
+        slot_ids: Optional[jnp.ndarray] = None,
+        num_slots: Optional[int] = None,
+        stats: Tuple[str, ...] = ALL_STATS,
+        num_cols: Optional[int] = None,
+        merge: bool = True):
+    """Dense-backend split-K block-table fold: one pool-axis ``take``,
+    then a ``vmap`` of the batched one-hot fold over ``k`` fixed-shape
+    chunks of ``chunk_rows`` rows, merged (or returned raw with
+    ``merge=False``) exactly as the Pallas path."""
+    stats = norm_stats(stats)
+    if chunk_rows < 1:
+        raise ValueError(f"chunk_rows must be >= 1, got {chunk_rows}")
+    p, cap, w = values_arena.shape
+    w_out = num_cols if num_cols is not None else w
+    r = table.shape[0]
+    if slot_ids is None:
+        slot_ids = jnp.arange(r, dtype=jnp.int32)
+        if num_slots is None:
+            num_slots = r
+    elif num_slots is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    if r == 0 or num_slots == 0:
+        return _splitk_empty(stats, num_slots, num_segments, w_out, merge)
+    if valid is None:
+        valid = jnp.ones((r, cap), jnp.int32)
+    pad = (-r) % chunk_rows
+    if pad:
+        table = jnp.pad(table, (0, pad))
+        segment_ids = jnp.pad(segment_ids, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+        slot_ids = jnp.pad(slot_ids, (0, pad))
+    k = (r + pad) // chunk_rows
+    vals = jnp.take(values_arena.astype(jnp.float32),
+                    table.astype(jnp.int32), axis=0)
+    if num_cols is not None:
+        vals = vals[:, :, :num_cols]
+    partials = jax.vmap(
+        lambda v, sid, va, sl: segment_aggregate_batched_dense(
+            v, sid, num_segments, valid=va, slot_ids=sl,
+            num_slots=num_slots, stats=stats)
+    )(vals.reshape(k, chunk_rows, cap, w_out),
+      segment_ids.astype(jnp.int32).reshape(k, chunk_rows, cap),
+      valid.astype(bool).reshape(k, chunk_rows, cap),
+      slot_ids.astype(jnp.int32).reshape(k, chunk_rows))
+    return merge_partials(partials) if merge else partials
+
+
 def segment_aggregate_block_table_sharded(
         values_arena: jnp.ndarray, segment_ids: jnp.ndarray,
         table: jnp.ndarray, num_segments: int,
@@ -417,7 +644,8 @@ def segment_aggregate_block_table_sharded(
         stats: Tuple[str, ...] = ALL_STATS,
         use_pallas: bool = False,
         interpret: bool = True,
-        num_cols: Optional[int] = None):
+        num_cols: Optional[int] = None,
+        chunk_rows: int = 0):
     """Slot-sharded block-table fold over a 1-D mesh.
 
     Both the pool arena (slot axis) and the table rows partition across
@@ -429,6 +657,9 @@ def segment_aggregate_block_table_sharded(
     executor's hash-based window placement plus the pool's per-shard slot
     ranges guarantee well-placed rows; a misplaced row (table entry or
     window slot outside the shard's ranges) is defensively masked invalid.
+    ``chunk_rows > 0`` routes each shard's local fold through the split-K
+    path (fixed-shape chunks, merged on-device per shard) — the output
+    shape and sharding are unchanged.
     """
     stats = norm_stats(stats)
     p, cap, w = values_arena.shape
@@ -461,6 +692,16 @@ def segment_aggregate_block_table_sharded(
         own_s = (local_sl >= 0) & (local_sl < slots_per)
         local_sl = jnp.where(own_s, local_sl, 0)
         val_own = val.astype(bool) & (own_t & own_s)[:, None]
+        if chunk_rows > 0:
+            if use_pallas:
+                return segment_aggregate_block_table_splitk_pallas(
+                    arena, sid, local_tbl, num_segments, chunk_rows,
+                    valid=val_own, slot_ids=local_sl, num_slots=slots_per,
+                    interpret=interpret, stats=stats, num_cols=num_cols)
+            return segment_aggregate_block_table_splitk_dense(
+                arena, sid, local_tbl, num_segments, chunk_rows,
+                valid=val_own, slot_ids=local_sl, num_slots=slots_per,
+                stats=stats, num_cols=num_cols)
         if use_pallas:
             return segment_aggregate_block_table_pallas(
                 arena, sid, local_tbl, num_segments, valid=val_own,
@@ -502,18 +743,31 @@ def next_pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
 
 
-def pack_rows_shard_major(slot_ids, num_devices: int, slots_per: int
-                          ) -> Tuple[list, int]:
+def pack_rows_shard_major(slot_ids, num_devices: int, slots_per: int,
+                          balance: bool = False) -> Tuple[list, int]:
     """Host-side row placement for the sharded fold.
 
-    Groups row indices by owning shard (``slot // slots_per``) and picks
-    the common power-of-two per-shard row count every shard pads to, so
-    the ``[num_devices * rows_per_shard, ...]`` stack splits evenly under
-    a ``shard_map`` over the leading axis. Returns
+    Default (ownership) mode groups row indices by owning shard
+    (``slot // slots_per``) and picks the common power-of-two per-shard
+    row count every shard pads to, so the
+    ``[num_devices * rows_per_shard, ...]`` stack splits evenly under a
+    ``shard_map`` over the leading axis. Returns
     ``(per_shard_row_indices, rows_per_shard)``.
+
+    ``balance=True`` ignores slot ownership entirely and deals rows
+    round-robin across shards — the split-K layout: a hot window's rows
+    spread over every device instead of serializing on their owner, and
+    per-shard row counts differ by at most one regardless of skew. Only
+    valid for folds that reduce into full per-slot partials
+    (``segment_aggregate_batched_splitk_sharded``); the ownership-masked
+    kernels would silently drop balanced rows.
     """
-    shard = np.asarray(slot_ids, np.int64) // max(slots_per, 1)
-    per = [np.flatnonzero(shard == d) for d in range(num_devices)]
+    if balance:
+        idx = np.arange(len(np.asarray(slot_ids)), dtype=np.int64)
+        per = [idx[d::num_devices] for d in range(num_devices)]
+    else:
+        shard = np.asarray(slot_ids, np.int64) // max(slots_per, 1)
+        per = [np.flatnonzero(shard == d) for d in range(num_devices)]
     rows_per_shard = next_pow2(max([len(p) for p in per] + [1]))
     return per, rows_per_shard
 
@@ -587,3 +841,78 @@ def segment_aggregate_batched_sharded(values: jnp.ndarray,
     f = shard_map_compat(shard_fn, mesh, in_specs, out_specs)
     return f(values.astype(jnp.float32), segment_ids.astype(jnp.int32),
              valid.astype(bool), slot_ids.astype(jnp.int32))
+
+
+def segment_aggregate_batched_splitk_sharded(
+        values: jnp.ndarray,
+        segment_ids: jnp.ndarray,
+        num_segments: int,
+        valid: Optional[jnp.ndarray] = None,
+        slot_ids: Optional[jnp.ndarray] = None,
+        num_slots: Optional[int] = None,
+        *, mesh,
+        stats: Tuple[str, ...] = ALL_STATS,
+        use_pallas: bool = False,
+        block_n: int = 512,
+        interpret: bool = True):
+    """Row-balanced (split-K) sharded fold over a 1-D mesh.
+
+    The distributed half of the split-K idiom: rows are dealt across the
+    mesh with NO slot-ownership precondition
+    (``pack_rows_shard_major(..., balance=True)``), each device folds its
+    rows into a **full** ``[num_slots, S, ...]`` partial accumulator, and
+    the ``D`` per-device partials merge through each stat's identity
+    after the ``shard_map`` (``merge_partials`` over the stacked leading
+    device axis). Compared to the slot-ownership variant this trades a
+    ``D``-times-larger accumulator footprint for perfect row balance: a
+    Zipf-hot window whose rows dominate the batch folds on every device
+    instead of serializing on its owning shard. ``num_slots`` need not
+    divide the mesh — only the row count must.
+
+    Only safe for operators whose batch contract reduces through plain
+    per-slot accumulators (``WindowOperator.supports_splitk``); kernels
+    that mask rows by slot ownership (the bigram scatter) would silently
+    drop balanced rows.
+    """
+    stats = norm_stats(stats)
+    b, n, w = values.shape
+    axis_name = mesh.axis_names[0]
+    num_devices = mesh.shape[axis_name]
+    if valid is None:
+        valid = jnp.ones((b, n), bool)
+    if slot_ids is None:
+        slot_ids = jnp.arange(b, dtype=jnp.int32)
+        if num_slots is None:
+            num_slots = b
+    elif num_slots is None:
+        raise ValueError("num_slots is required when slot_ids is given")
+    if b % num_devices:
+        raise ValueError(
+            f"rows ({b}) must divide the slot mesh ({num_devices} "
+            "devices); pad with invalid rows "
+            "(pack_rows_shard_major(balance=True))")
+
+    def shard_fn(v, sid, val, sl):
+        if use_pallas:
+            part = segment_aggregate_batched_pallas(
+                v, sid, num_segments, valid=val, slot_ids=sl,
+                num_slots=num_slots, block_n=block_n,
+                interpret=interpret, stats=stats)
+        else:
+            part = segment_aggregate_batched_dense(
+                v, sid, num_segments, valid=val, slot_ids=sl,
+                num_slots=num_slots, stats=stats)
+        # grow the leading device axis the out_specs stack over
+        return {s: o[None] for s, o in part.items()}
+
+    in_specs = (P(axis_name, None, None), P(axis_name, None),
+                P(axis_name, None), P(axis_name))
+    out_specs = {k: (P(axis_name, None, None) if k == "count"
+                     else P(axis_name, None, None, None))
+                 for k in stats}
+    # local import avoids a kernels <-> distributed cycle at module load
+    from repro.distributed.sharding import shard_map_compat
+    f = shard_map_compat(shard_fn, mesh, in_specs, out_specs)
+    partials = f(values.astype(jnp.float32), segment_ids.astype(jnp.int32),
+                 valid.astype(bool), slot_ids.astype(jnp.int32))
+    return merge_partials(partials)

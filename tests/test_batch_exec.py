@@ -121,12 +121,14 @@ def test_live_batch_occupancy_counts_all_due_windows():
     eng.close()
 
 
-def test_operator_without_batch_contract_falls_back():
-    """The blocking percentile operator has no batch contract; with the
-    flag on, execution transparently uses the per-window path."""
+def test_percentile_batched_matches_quantile_oracle():
+    """The blocking percentile operator now carries a real batch
+    contract (sorted-run accumulators); the batched path must produce
+    the same quantiles np.quantile computes from the raw events."""
     aion = AionConfig(block_size=64, batched_execution=True)
     op = make_operator("percentile", 64, 1)
-    assert not op.supports_batch
+    assert op.supports_batch          # fold_batch landed with split-K
+    assert op.supports_splitk
     eng = StreamEngine(
         assigner=TumblingWindows(WINDOW), operator=op, aion=aion,
         value_width=1, device_budget_bytes=64 << 20,
@@ -138,15 +140,15 @@ def test_operator_without_batch_contract_falls_back():
                    rng.uniform(0, 1, (n, 1)).astype(np.float32))
     eng.ingest(b, now=0.0)
     eng.advance_watermark(30.0, now=30.0)
-    assert eng.metrics.batch_executions == 0
-    assert eng.metrics.live_executions == 3
+    assert eng.metrics.batch_executions >= 1
     from repro.core.windows import WindowId
     ts = b.timestamps
     for s in (0.0, 10.0, 20.0):
         sel = (ts >= s) & (ts < s + 10.0)
-        want = float(np.quantile(b.values[sel, 0], 0.5))
-        assert eng.results[WindowId(s, s + 10.0)][0.5] == \
-            pytest.approx(want, abs=0.05)
+        res = eng.results[WindowId(s, s + 10.0)]
+        for q in (0.5, 0.95, 0.99):
+            want = float(np.quantile(b.values[sel, 0], q))
+            assert res[q] == pytest.approx(want, rel=1e-4, abs=1e-5)
     eng.close()
 
 
@@ -189,3 +191,111 @@ def test_batched_respects_priority_rule_live_before_late():
     assert eng.metrics.live_executions == live_first   # no new live work
     assert eng.metrics.late_executions >= 1
     eng.close()
+
+
+# ------------------------------------------------------------ split-K path
+
+def _make_splitk_engine(op_name: str, chunk: int, **kw) -> StreamEngine:
+    import dataclasses
+    eng = _make_engine(op_name, batched=True, **kw)
+    eng.aion = dataclasses.replace(eng.aion, splitk_chunk_rows=chunk)
+    return eng
+
+
+@pytest.mark.parametrize("op_name",
+                         ["average", "stock", "lrb", "percentile"])
+def test_splitk_engine_parity(op_name):
+    """splitk_chunk_rows > 0 changes only the fold decomposition: engine
+    results match the unchunked batched run for every split-K operator,
+    and the chunked path actually launched."""
+    want, m0 = _late_heavy_run(_make_engine(op_name, batched=True))
+    got, m1 = _late_heavy_run(_make_splitk_engine(op_name, chunk=2))
+    _assert_equal_results(got, want, op_name)
+    assert m1.splitk_launches > 0
+    assert m0.splitk_launches == 0
+
+
+def test_splitk_auto_disables_below_one_chunk():
+    """Rounds smaller than one chunk per device fall back to the stripe
+    fold — no split-K launches, identical results."""
+    want, _ = _late_heavy_run(_make_engine("average", batched=True))
+    got, m = _late_heavy_run(_make_splitk_engine("average", chunk=4096))
+    _assert_equal_results(got, want, "average")
+    assert m.splitk_launches == 0
+
+
+def test_splitk_ignored_for_unsupported_operator():
+    """bigrams' slot-ownership scatter cannot take balanced/chunked rows;
+    the knob must be a no-op for it (supports_splitk=False)."""
+    want, _ = _late_heavy_run(_make_engine("bigrams", batched=True))
+    got, m = _late_heavy_run(_make_splitk_engine("bigrams", chunk=2))
+    _assert_equal_results(got, want, "bigrams")
+    assert m.splitk_launches == 0
+
+
+def test_splitk_launch_shapes_closed_under_batch_size():
+    """The zero-recompile property: whatever the pooled row count, the
+    planner only ever emits launch groups of {1,2,4,8} x chunk rows, so
+    a handful of warmed shapes serves every round."""
+    eng = _make_splitk_engine("average", chunk=4)
+    planner = eng.batch_exec
+
+    class _Blk:
+        fill = 3
+
+    shapes = set()
+    for rows in (5, 7, 16, 33, 100, 257, 1023):
+        # (block, window_slot, pool_slot) rows; only the count matters
+        fake = [(_Blk(), i % 7, i) for i in range(rows)]
+        groups = planner._plan_table_groups(fake, num_devices=1,
+                                            slots_per=7)
+        for table, fills, slots, sk in groups:
+            assert sk == 4
+            assert table.shape == fills.shape == slots.shape
+            shapes.add(int(table.shape[0]))
+    assert shapes <= {4, 8, 16, 32}          # {1,2,4,8} groups x chunk 4
+    eng.close()
+
+
+def test_splitk_zero_recompiles_across_late_waves():
+    """Across late waves of varying size the fold cache stops growing
+    once the pow2 group shapes are warm."""
+    eng = _make_splitk_engine("average", chunk=2)
+    rng = np.random.default_rng(13)
+    horizon = N_WINDOWS * WINDOW
+    b = EventBatch(rng.integers(0, 8, 3000),
+                   rng.uniform(0, horizon, 3000),
+                   rng.normal(size=(3000, 2)).astype(np.float32))
+    eng.ingest(b, now=0.0)
+    eng.advance_watermark(horizon, now=horizon)
+    now = horizon
+    sizes = (900, 333, 57, 1500, 64, 711)
+    cache_after = []
+    for nl in sizes:
+        late = EventBatch(rng.integers(0, 8, nl),
+                          rng.uniform(0, horizon - WINDOW, nl),
+                          rng.normal(size=(nl, 2)).astype(np.float32))
+        now += 1.0
+        eng.ingest(late, now=now)
+        for t in np.linspace(now, now + 2 * eng.cleanup.current_bound(),
+                             10):
+            eng.poll(t)
+        now = t
+        cache_after.append(eng.operator.fold_batch._cache_size())
+    assert eng.metrics.splitk_launches > 0
+    # the tail waves (every group shape warm) compile nothing new
+    assert cache_after[-1] == cache_after[1], cache_after
+    eng.close()
+
+
+def test_splitk_all_rows_demoted_mid_round():
+    """A round whose every pooled row demotes to the stacked fallback
+    (no pool at all: classify finds zero resident rows) must still
+    finish: zero chunk groups, correct results from fallback alone."""
+    eng = _make_splitk_engine("average", chunk=2, pooled=False)
+    got, m = _late_heavy_run(eng)
+    want, _ = _late_heavy_run(_make_engine("average", batched=True,
+                                           pooled=False))
+    _assert_equal_results(got, want, "average")
+    assert m.splitk_launches == 0          # nothing pooled to chunk
+    assert m.batch_executions >= 1

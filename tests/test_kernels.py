@@ -8,9 +8,12 @@ import jax.numpy as jnp
 from repro.kernels import (
     decode_attention_paged, flash_attention, segment_aggregate,
     segment_aggregate_batched, segment_aggregate_block_table,
-    ssd_chunk_scan,
+    segment_aggregate_block_table_splitk, ssd_chunk_scan,
 )
 from repro.kernels import ref as R
+from repro.kernels.segment_aggregate import (
+    merge_partials, pack_rows_shard_major,
+)
 
 RNG = np.random.default_rng(42)
 
@@ -214,6 +217,175 @@ def test_segment_aggregate_block_table_empty_table():
     assert out["sum"].shape == (2, 3, 2)
     assert float(jnp.abs(out["sum"]).sum()) == 0.0
     assert bool(jnp.all(jnp.isposinf(out["min"])))
+
+
+# -------------------------------------------- split-K block-table fold
+def _splitk_case(p=16, cap=48, w=2, s=5, r=11, num_slots=4):
+    arena = jnp.asarray(RNG.normal(size=(p, cap, w)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, s, (r, cap)), jnp.int32)
+    table = jnp.asarray(RNG.integers(1, p, r), jnp.int32)  # never slot 0
+    fills = RNG.integers(0, cap + 1, r)
+    valid = jnp.asarray(np.arange(cap)[None, :] < fills[:, None])
+    slots = jnp.asarray(RNG.integers(0, num_slots, r), jnp.int32)
+    return arena, ids, table, valid, slots, s, num_slots
+
+
+@pytest.mark.parametrize("backend", ["dense", "interpret", "ref"])
+@pytest.mark.parametrize("chunk", [1, 3, 4, 11, 16])
+def test_segment_aggregate_block_table_splitk_sweep(backend, chunk):
+    """Chunked partial-accumulator fold vs both oracles: the unchunked
+    block-table reference (loose — different fp associativity) and the
+    chunked reference at the same chunk size (tight)."""
+    arena, ids, table, valid, slots, s, ns = _splitk_case()
+    out = segment_aggregate_block_table_splitk(
+        arena, ids, table, s, chunk, valid=valid, slot_ids=slots,
+        num_slots=ns, backend=backend)
+    plain = R.ref_segment_aggregate_block_table(
+        arena, ids, table, s, valid=valid, slot_ids=slots, num_slots=ns)
+    assert out["sum"].shape == (ns, s, arena.shape[-1])
+    _assert_aggs_close(out, plain)
+    chunked = R.ref_segment_aggregate_block_table_splitk(
+        arena, ids, table, s, chunk, valid=valid, slot_ids=slots,
+        num_slots=ns)
+    _assert_aggs_close(out, chunked)
+
+
+@pytest.mark.parametrize("backend", ["dense", "interpret", "ref"])
+@pytest.mark.parametrize("chunk", [3, 4])
+def test_splitk_padding_rows_are_bit_exact_inert(backend, chunk):
+    """Deliberate padding rows (masked-invalid, pointing at a poisoned
+    arena slot) must not perturb ANY stat — sum/count and the identity-
+    sensitive min/max — bit-for-bit, across all three backends.
+
+    Covers the accumulator-identity bug class: a padded row leaking a
+    poisoned value into slot 0 / the min/max identity lanes."""
+    arena, ids, table, valid, slots, s, ns = _splitk_case(r=8)
+    poisoned = arena.at[0].set(1e30)       # no real row references it
+    out = segment_aggregate_block_table_splitk(
+        arena, ids, table, s, chunk, valid=valid, slot_ids=slots,
+        num_slots=ns, backend=backend)
+    # (a) internal pad-to-chunk rows read arena slot 0: poison it
+    pois = segment_aggregate_block_table_splitk(
+        poisoned, ids, table, s, chunk, valid=valid, slot_ids=slots,
+        num_slots=ns, backend=backend)
+    # (b) explicit all-invalid padding rows aimed at the poisoned slot
+    r_pad = 4
+    table2 = jnp.concatenate([table, jnp.zeros(r_pad, jnp.int32)])
+    ids2 = jnp.concatenate([ids, jnp.zeros((r_pad, ids.shape[1]),
+                                           jnp.int32)])
+    valid2 = jnp.concatenate(
+        [valid, jnp.zeros((r_pad, valid.shape[1]), bool)])
+    slots2 = jnp.concatenate([slots, jnp.zeros(r_pad, jnp.int32)])
+    pad = segment_aggregate_block_table_splitk(
+        poisoned, ids2, table2, s, chunk, valid=valid2, slot_ids=slots2,
+        num_slots=ns, backend=backend)
+    for k in ("sum", "count", "min", "max"):
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(pois[k]), err_msg=k)
+        np.testing.assert_array_equal(np.asarray(out[k]),
+                                      np.asarray(pad[k]), err_msg=k)
+
+
+@pytest.mark.parametrize("backend", ["dense", "interpret", "ref"])
+def test_splitk_empty_and_zero_slot_guards(backend):
+    """B==0 / num_slots==0 guards on the split-K path: identity arrays
+    of the right shape, no kernel launch, no NaNs."""
+    arena = jnp.zeros((4, 16, 2), jnp.float32)
+    out = segment_aggregate_block_table_splitk(
+        arena, jnp.zeros((0, 16), jnp.int32), jnp.zeros((0,), jnp.int32),
+        3, 4, slot_ids=jnp.zeros((0,), jnp.int32), num_slots=2,
+        backend=backend)
+    assert out["sum"].shape == (2, 3, 2)
+    assert float(jnp.abs(out["sum"]).sum()) == 0.0
+    assert bool(jnp.all(jnp.isposinf(out["min"])))
+    assert bool(jnp.all(jnp.isneginf(out["max"])))
+    empty_slots = segment_aggregate_block_table_splitk(
+        arena, jnp.zeros((2, 16), jnp.int32), jnp.zeros((2,), jnp.int32),
+        3, 4, slot_ids=jnp.zeros((2,), jnp.int32), num_slots=0,
+        backend=backend)
+    assert empty_slots["sum"].shape == (0, 3, 2)
+    with pytest.raises(ValueError):
+        segment_aggregate_block_table_splitk(
+            arena, jnp.zeros((2, 16), jnp.int32),
+            jnp.zeros((2,), jnp.int32), 3, 0, num_slots=1,
+            backend=backend)
+
+
+def test_splitk_all_rows_invalid_yields_identity():
+    """A window whose every row demoted mid-round: all-invalid rows fold
+    to the empty-batch identity (0 sum/count, +/-inf min/max)."""
+    arena, ids, table, valid, slots, s, ns = _splitk_case(r=6)
+    none = jnp.zeros_like(valid)
+    for backend in ("dense", "interpret", "ref"):
+        out = segment_aggregate_block_table_splitk(
+            arena, ids, table, s, 4, valid=none, slot_ids=slots,
+            num_slots=ns, backend=backend)
+        assert float(jnp.abs(out["sum"]).sum()) == 0.0
+        assert int(out["count"].sum()) == 0
+        assert bool(jnp.all(jnp.isposinf(out["min"])))
+        assert bool(jnp.all(jnp.isneginf(out["max"])))
+
+
+def test_merge_partials_identity_and_roundtrip():
+    """merge_partials(k=0) returns the fold identity; merging unmerged
+    per-chunk partials equals the merged kernel output."""
+    from repro.kernels.segment_aggregate import (
+        segment_aggregate_block_table_splitk_pallas)
+    empty = merge_partials({
+        "sum": jnp.zeros((0, 2, 3, 1)), "count": jnp.zeros((0, 2, 3)),
+        "min": jnp.zeros((0, 2, 3, 1)), "max": jnp.zeros((0, 2, 3, 1))})
+    assert bool(jnp.all(jnp.isposinf(empty["min"])))
+    assert bool(jnp.all(jnp.isneginf(empty["max"])))
+    assert float(jnp.abs(empty["sum"]).sum()) == 0.0
+    arena, ids, table, valid, slots, s, ns = _splitk_case()
+    parts = segment_aggregate_block_table_splitk_pallas(
+        arena, ids, table, s, 4, valid=valid, slot_ids=slots,
+        num_slots=ns, merge=False)
+    assert parts["sum"].shape[0] == 3          # ceil(11 / 4) chunks
+    merged = merge_partials(parts)
+    whole = segment_aggregate_block_table_splitk(
+        arena, ids, table, s, 4, valid=valid, slot_ids=slots,
+        num_slots=ns, backend="interpret")
+    for k in ("sum", "count", "min", "max"):
+        np.testing.assert_array_equal(np.asarray(merged[k]),
+                                      np.asarray(whole[k]), err_msg=k)
+
+
+def test_pack_rows_shard_major_balance():
+    """balance=True deals row indices round-robin so every device gets
+    |rows|/D +- 1 regardless of slot skew."""
+    slots = np.array([0] * 9 + [1, 2], np.int32)     # heavy skew to 0
+    per, rows_per = pack_rows_shard_major(slots, 4, 1, balance=True)
+    assert sorted(len(p) for p in per) == [2, 3, 3, 3]
+    assert rows_per == 4                              # next_pow2(3)
+    assert sorted(np.concatenate(
+        [np.asarray(p) for p in per]).tolist()) == list(range(11))
+    # ownership mode would serialize: everything on slot 0's shard
+    own, _ = pack_rows_shard_major(slots, 4, 1, balance=False)
+    assert len(own[0]) == 9
+
+
+@pytest.mark.parametrize("num_devices", [d for d in (2, 4, 8)
+                                         if d <= len(jax.devices())])
+def test_segment_aggregate_batched_splitk_sharded(num_devices):
+    """Row-balanced sharded fold (split-K over devices): full per-slot
+    partials per device merged after the shard_map — vs the unsharded
+    oracle. num_slots deliberately does NOT divide the mesh (runs under
+    make verify-splitk; skipped on one device)."""
+    from repro.distributed.sharding import make_slot_mesh
+    b, n, w, s, ns = 4 * num_devices, 64, 2, 5, 6
+    vals = jnp.asarray(RNG.normal(size=(b, n, w)), jnp.float32)
+    ids = jnp.asarray(RNG.integers(0, s, (b, n)), jnp.int32)
+    fills = RNG.integers(0, n + 1, b)
+    valid = jnp.asarray(np.arange(n)[None, :] < fills[:, None])
+    slots = jnp.asarray(RNG.integers(0, ns, b), jnp.int32)
+    mesh = make_slot_mesh(num_devices)
+    out = segment_aggregate_batched(vals, ids, s, valid=valid,
+                                    slot_ids=slots, num_slots=ns,
+                                    mesh=mesh, splitk=1)
+    ref = segment_aggregate_batched(vals, ids, s, valid=valid,
+                                    slot_ids=slots, num_slots=ns)
+    _assert_aggs_close(out, ref)
 
 
 @pytest.mark.parametrize("num_devices", [d for d in (2, 4, 8)

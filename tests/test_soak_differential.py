@@ -61,13 +61,15 @@ def _make_engine(op_name: str, batched: bool, sharded: bool,
                  pooled: bool = False,
                  store: str = "log",
                  pipelined: bool = False,
-                 prefetch: str = "fixed") -> StreamEngine:
+                 prefetch: str = "fixed",
+                 splitk: int = 0) -> StreamEngine:
     aion = AionConfig(block_size=256, batched_execution=batched,
                       slot_sharding=sharded, block_pool=pooled,
                       store_backend=store,
                       store_segment_bytes=128 << 10,
                       pipelined_execution=pipelined,
-                      prefetch_backend=prefetch)
+                      prefetch_backend=prefetch,
+                      splitk_chunk_rows=splitk)
     kw = {"num_keys": 8} if op_name == "stock" else {}
     return StreamEngine(
         assigner=TumblingWindows(WINDOW),
@@ -102,7 +104,8 @@ def _final_sweep(eng: StreamEngine, now: float) -> None:
 _COUNTERS = ("ingested", "ingested_late", "live_executions",
              "late_executions", "batch_executions",
              "sharded_batch_executions", "pooled_rows", "fallback_rows",
-             "demand_pool_fills", "pipeline_rounds", "epoch_demoted_rows")
+             "demand_pool_fills", "pipeline_rounds", "epoch_demoted_rows",
+             "splitk_launches")
 
 
 class _SoakTotals:
@@ -122,12 +125,13 @@ class _SoakTotals:
 
 def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
            width: int = 1, pooled: bool = False, store: str = "log",
-           pipelined: bool = False, prefetch: str = "fixed"):
+           pipelined: bool = False, prefetch: str = "fixed",
+           splitk: int = 0):
     """Run the soak; returns (results, oracle_events, counter_totals)."""
     rng = np.random.default_rng(SEED)
     totals = _SoakTotals()
     eng = _make_engine(op_name, batched, sharded, spill_dir / "a", width,
-                       pooled, store, pipelined, prefetch)
+                       pooled, store, pipelined, prefetch, splitk)
     all_events = []           # oracle ledger: every event ever generated
     now = 0.0
     wm = 0.0
@@ -164,7 +168,7 @@ def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
             eng.close()
             eng = _make_engine(op_name, batched, sharded,
                                spill_dir / "b", width, pooled, store,
-                               pipelined, prefetch)
+                               pipelined, prefetch, splitk)
             eng.restore_state(snap)
 
     # close out: expire everything, fire remaining re-execution plans,
@@ -328,3 +332,65 @@ def test_soak_differential_learned_prefetch(tmp_path, batched, pipelined):
     assert totals.ingested == N_EVENTS
     assert totals.ingested_late > N_EVENTS // 10
     assert totals.io_errors == 0
+
+
+def _oracle_percentile(keys, ts, vals, qs=(0.5, 0.95, 0.99)):
+    wstart = np.floor(ts / WINDOW) * WINDOW
+    out = {}
+    for s in np.unique(wstart):
+        sel = wstart == s
+        out[WindowId(float(s), float(s) + WINDOW)] = {
+            q: float(np.quantile(vals[sel, 0], q)) for q in qs}
+    return out
+
+
+@pytest.mark.parametrize("sharded,pooled,splitk", [
+    # ISSUE 8 axis: split-K chunked folds on/off over the pooled and
+    # sharded layouts — results must be invariant to the decomposition
+    (False, True, 8), (False, True, 0),
+    (True, True, 8), (True, False, 8),
+])
+def test_soak_differential_splitk(tmp_path, sharded, pooled, splitk):
+    """Split-K soak: chunked partial-accumulator folds under the full
+    lateness + spill + restore pressure match the oracle exactly, and
+    the chunked path really launched when enabled."""
+    results, (keys, ts, vals), totals = _drive(
+        "stock", True, sharded, tmp_path, width=1, pooled=pooled,
+        splitk=splitk)
+    want = _oracle_stock(keys, ts, vals)
+    assert set(results) == set(want)
+    for wid, w in want.items():
+        got = results[wid]
+        present = w["min"] < np.inf
+        np.testing.assert_allclose(got["mean"][present],
+                                   w["mean"][present],
+                                   rtol=2e-4, atol=2e-4, err_msg=str(wid))
+        np.testing.assert_allclose(got["min"][present], w["min"][present],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got["max"][present], w["max"][present],
+                                   rtol=1e-5, atol=1e-5)
+    assert totals.ingested == N_EVENTS
+    if splitk and (pooled or (sharded and len(jax.devices()) > 1)):
+        assert totals.splitk_launches > 0
+    if not splitk:
+        assert totals.splitk_launches == 0
+
+
+@pytest.mark.parametrize("splitk", [0, 8])
+def test_soak_differential_percentile(tmp_path, splitk):
+    """ISSUE 8 satellite: percentile's real fold_batch (sorted-merge of
+    per-chunk sorted runs) lets the blocking operator ride the batched
+    path — the soak matrix no longer needs a fallback axis for it."""
+    results, (keys, ts, vals), totals = _drive(
+        "percentile", True, False, tmp_path, width=1, pooled=True,
+        splitk=splitk)
+    want = _oracle_percentile(keys, ts, vals)
+    assert set(results) == set(want)
+    for wid, w in want.items():
+        for q, v in w.items():
+            assert results[wid][q] == pytest.approx(v, rel=1e-5,
+                                                    abs=1e-5), (wid, q)
+    assert totals.ingested == N_EVENTS
+    assert totals.batch_executions > 0       # percentile batched for real
+    if splitk:
+        assert totals.splitk_launches > 0
