@@ -8,6 +8,7 @@ verify:
 	$(MAKE) verify-pipeline
 	$(MAKE) verify-prefetch
 	$(MAKE) verify-splitk
+	$(MAKE) verify-chaos
 
 # Persistent p-bucket store suites, tmpdir-isolated (pytest tmp_path):
 # storage unit tests (WAL group commit, footer rebuild, torn-tail
@@ -65,6 +66,19 @@ verify-splitk:
 		tests/test_soak_differential.py \
 		-k "splitk or merge_partials or pack_rows or percentile"
 
+# Self-healing I/O gate: fault injector + retry/backoff taxonomy unit
+# tests, degradation-ladder ordering, recovery glue (heartbeats, backup
+# folds, restart/restore), and the chaos soaks — the full differential
+# soak under >=5% injected store faults (oracle parity, zero lost
+# windows, io.stats.gave_up == 0) plus the poison -> restore -> replay
+# restart soak. Also collected by plain `pytest` above; this is the
+# focused robustness gate.
+verify-chaos:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
+		tests/test_faults.py tests/test_fault_serve.py
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
+		tests/test_soak_differential.py -k "chaos"
+
 # Benchmark entry point (CSV rows, one per paper table/figure).
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py
@@ -90,6 +104,12 @@ bench-q4:
 bench-prefetch:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q4_staleness.py --prefetch
 
+# Fault-injection probe only (0% / 2% / 10% injected store faults,
+# degradation ladder on vs off); merges a "fault_probe" section into
+# the existing BENCH_q4_staleness.json
+bench-faults:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q4_staleness.py --faults
+
 # Pipelined vs synchronous fold benchmark (cold p-blocks, 8 due
 # windows); merges a "pipeline" section into BENCH_q2_gather.json
 bench-pipeline:
@@ -101,5 +121,6 @@ bench-skew:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q2_throughput.py --skew
 
 .PHONY: verify verify-storage verify-multidevice verify-pipeline \
-	verify-prefetch verify-splitk bench bench-gather bench-q1 bench-q4 \
-	bench-prefetch bench-pipeline bench-skew
+	verify-prefetch verify-splitk verify-chaos bench bench-gather \
+	bench-q1 bench-q4 bench-prefetch bench-faults bench-pipeline \
+	bench-skew

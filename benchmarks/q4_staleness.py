@@ -240,6 +240,120 @@ def prefetch_probe(events: int = 12_000, repeats: int = 3) -> Dict:
     }
 
 
+def _fault_run(rate: float, ladder: bool, events: int, root) -> Dict:
+    import time
+
+    from repro.configs.base import AionConfig
+    from repro.core import StreamEngine, TumblingWindows
+    from repro.core.cleanup import PredictiveCleanup
+    from repro.core.events import EventBatch
+    from repro.core.operators import make_operator
+    from repro.core.triggers import DeltaTTrigger
+    from repro.storage import make_store
+    from repro.testing import FaultInjector, FaultyBlockStore
+
+    aion = AionConfig(block_size=256, store_backend="log",
+                      store_segment_bytes=64 << 10,
+                      io_retry_backoff=0.0005,
+                      breaker_error_threshold=2 if ladder else 0)
+    store = None
+    if rate > 0:
+        inner = make_store("log", root, segment_bytes=64 << 10)
+        inj = FaultInjector(seed=int(rate * 1000),
+                            rates={op: rate for op in
+                                   ("get", "put", "commit", "readahead")},
+                            max_consecutive=2)
+        store = FaultyBlockStore(inner, inj)
+    eng = StreamEngine(
+        assigner=TumblingWindows(10.0),
+        operator=make_operator("average", aion.block_size, 1),
+        aion=aion, value_width=1,
+        # tiny memory tiers: the run is dominated by the (faulty)
+        # storage path, so retries/shedding are load-bearing
+        device_budget_bytes=1 << 17, host_budget_bytes=1 << 14,
+        spill_dir=root,
+        cleanup=PredictiveCleanup(initial_bound=80.0,
+                                  min_history=1 << 62),
+        trigger=DeltaTTrigger(executions=3),
+        store=store,
+    )
+    rng = np.random.default_rng(13)
+    now, emitted = 0.0, 0
+    t0 = time.time()
+    while emitted < events:
+        n = min(500, events - emitted)
+        delay = np.where(rng.random(n) < 0.5,
+                         rng.uniform(0.0, 2.0, n),
+                         rng.uniform(0.0, 30.0, n))
+        ts = np.maximum(now - delay, 0.0)
+        eng.ingest(
+            EventBatch(rng.integers(0, 8, n), ts,
+                       np.ones((n, 1), np.float32)), now)
+        emitted += n
+        eng.advance_watermark(max(now - 2.0, 0.0), now)
+        eng.poll(now)
+        now += rng.uniform(1.0, 3.0)
+    eng.flush_deferred(now)
+    for t in np.linspace(now, now + 80.0, 12):
+        eng.poll(t)
+    eng.io.drain()
+    wall = time.time() - t0
+    m = eng.metrics
+    row = {
+        "fault_rate": rate,
+        "ladder": ladder,
+        "events": events,
+        "wall_s": round(wall, 4),
+        "events_per_s": round(events / max(wall, 1e-9), 1),
+        "late_executions": m.late_executions,
+        "fetch_stall_s": round(m.fetch_stall_seconds, 6),
+        "io_retries": int(eng.io.stats["retries"]),
+        "io_gave_up": int(eng.io.stats["gave_up"]),
+        "injected_faults": (int(store.injector.stats["injected"])
+                            if store is not None else 0),
+        "readahead_shed": int(eng.io.stats["readahead_shed"]),
+        "shed_readahead_drives": m.shed_readahead_drives,
+        "shed_prefetch_rounds": m.shed_prefetch_rounds,
+        "demoted_sync_rounds": m.demoted_sync_rounds,
+        "deferred_events": m.deferred_events,
+        "ladder_transitions": len(m.ladder_transitions),
+        "max_degradation_level": max(
+            [lvl for _, lvl in m.ladder_transitions], default=0),
+    }
+    eng.close()
+    return row
+
+
+def fault_probe(events: int = 8_000,
+                rates=(0.0, 0.02, 0.10)) -> Dict:
+    """Self-healing I/O under injected store faults (ISSUE 9): each
+    fault rate runs with the degradation ladder on and off (breaker
+    disabled). Retries absorb every transient (``io_gave_up`` must stay
+    0 — ``max_consecutive`` < retry limit); the ladder rows show
+    speculative work being shed (readahead drives, prefetch rounds)
+    while demand throughput survives. The headline compares throughput
+    at the top fault rate with and without the ladder."""
+    import tempfile
+    from pathlib import Path
+
+    root = Path(tempfile.mkdtemp(prefix="q4_faults_"))
+    rows = []
+    for rate in rates:
+        for ladder in ((True,) if rate == 0 else (True, False)):
+            rows.append(_fault_run(rate, ladder, events,
+                                   root / f"r{rate}_l{int(ladder)}"))
+    top = [r for r in rows if r["fault_rate"] == max(rates)]
+    on = next(r for r in top if r["ladder"])
+    off = next((r for r in top if not r["ladder"]), on)
+    return {
+        "rows": rows,
+        "all_recovered": all(r["io_gave_up"] == 0 for r in rows),
+        # >1 means the ladder bought throughput under faults
+        "ladder_throughput_gain": round(
+            on["events_per_s"] / max(off["events_per_s"], 1e-9), 4),
+    }
+
+
 def run() -> Dict[str, List[Dict]]:
     return {
         "staleness_vs_executions": staleness_vs_executions(),
@@ -248,10 +362,12 @@ def run() -> Dict[str, List[Dict]]:
 
 
 def main(emit_json: str = "BENCH_q4_staleness.json",
-         prefetch_only: bool = False) -> Dict:
-    if prefetch_only:
-        # --prefetch: run just the prefetch probe and merge it into the
-        # existing JSON (keeps the analytic sections from the last full
+         prefetch_only: bool = False,
+         faults_only: bool = False) -> Dict:
+    partial = prefetch_only or faults_only
+    if partial:
+        # --prefetch / --faults: run just that probe and merge it into
+        # the existing JSON (keeps the other sections from the last full
         # run instead of recomputing them)
         import os
         out = {}
@@ -261,7 +377,10 @@ def main(emit_json: str = "BENCH_q4_staleness.json",
     else:
         out = run()
         out["store_probe"] = store_probe()
-    out["prefetch_probe"] = prefetch_probe()
+    if prefetch_only or not partial:
+        out["prefetch_probe"] = prefetch_probe()
+    if faults_only or not partial:
+        out["fault_probe"] = fault_probe()
     if emit_json:
         with open(emit_json, "w") as f:
             json.dump(out, f, indent=2)
@@ -270,7 +389,8 @@ def main(emit_json: str = "BENCH_q4_staleness.json",
 
 if __name__ == "__main__":
     import sys
-    out = main(prefetch_only="--prefetch" in sys.argv[1:])
+    out = main(prefetch_only="--prefetch" in sys.argv[1:],
+               faults_only="--faults" in sys.argv[1:])
     for section, rows in out.items():
         print(f"== {section}")
         if isinstance(rows, dict):

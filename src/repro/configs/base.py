@@ -375,6 +375,33 @@ class AionConfig:
     # one group commit (fsync) via a deferred flush task instead of
     # each paying their own
     wal_coalesce_commits: bool = True
+    # ---- self-healing I/O path (ISSUE 9) -----------------------------
+    # transient store failures (OSError/timeouts — see
+    # storage.is_transient_error) retry up to this many times with
+    # exponential backoff + jitter before surfacing; permanent failures
+    # surface immediately. 0 disables retries (PR-6 behaviour).
+    io_retry_limit: int = 4
+    # base backoff delay in seconds; attempt k sleeps
+    # io_retry_backoff * 2^k * jitter, jitter uniform in [0.5, 1.5)
+    io_retry_backoff: float = 0.01
+    # circuit breaker on store health: when one engine poll tick sees at
+    # least this many new I/O errors + retries, the degradation ladder
+    # escalates one rung (shed readahead -> shed pipelined prefetch ->
+    # demote pipelined rounds to sync -> ingest backpressure); after
+    # breaker_cooldown_ticks consecutive clean ticks it steps back down.
+    # 0 disables the ladder entirely.
+    breaker_error_threshold: int = 8
+    breaker_cooldown_ticks: int = 2
+    # ladder rung 4: ingest() defers incoming batches to a bounded queue
+    # (reporting the deferred count) instead of admitting them while the
+    # breaker is fully open; deferred batches re-admit on later polls
+    # and are always flushed by checkpoint/close — no event is dropped
+    ingest_backpressure: bool = True
+    # failed pipelined fold rounds retry once through
+    # distributed.fault.BackupExecutor (folds are pure functions of
+    # bucket contents, so the retry is idempotent) before the failure
+    # poisons the pipeline
+    fold_round_retry: bool = True
 
 
 def to_json(cfg: Any) -> str:

@@ -99,6 +99,11 @@ class Block:
     # accounting: staging keeps host copies, so destage/stage round-trips
     # must not re-count the same bytes)
     host_accounted: bool = False
+    # membership flag for IOScheduler._host_lru: set when this block is
+    # appended as a spill candidate, cleared when the spill loop pops it
+    # — the failure unwind re-queues a block exactly once even when two
+    # coalesced flushes over overlapping batches both fail
+    in_spill_lru: bool = False
     lock: threading.Lock = field(default_factory=threading.Lock,
                                  repr=False, compare=False)
 

@@ -102,6 +102,17 @@ class EngineMetrics:
     # split-K chunked fold: launches that folded fixed-shape chunked
     # partials (AionConfig.splitk_chunk_rows > 0)
     splitk_launches: int = 0
+    # self-healing ladder (core/health.py): current rung plus what each
+    # rung actually shed this run — the breaker's observable footprint.
+    # ladder_transitions aliases StoreHealth.transitions once the engine
+    # builds its breaker, so the shed ORDER is assertable from metrics.
+    degradation_level: int = 0
+    shed_readahead_drives: int = 0
+    shed_prefetch_rounds: int = 0
+    demoted_sync_rounds: int = 0
+    deferred_events: int = 0
+    readmitted_events: int = 0
+    ladder_transitions: List[Tuple[int, int]] = field(default_factory=list)
     # bounded (BoundedSeries) when built via ``EngineMetrics.bounded`` —
     # the engine does; a bare EngineMetrics() keeps plain lists
     batch_occupancy_series: List[int] = field(default_factory=list)
@@ -237,7 +248,9 @@ class StreamEngine:
                 simulated_seconds_per_byte=simulated_seconds_per_byte,
                 pool=self.pool, store=self.store,
                 compact_ratio=self.aion.store_compact_ratio,
-                wal_coalesce=self.aion.wal_coalesce_commits)
+                wal_coalesce=self.aion.wal_coalesce_commits,
+                io_retry_limit=self.aion.io_retry_limit,
+                io_retry_backoff=self.aion.io_retry_backoff)
         self.policy = policy or StandardPolicy()
         self.cleanup = cleanup or PredictiveCleanup(
             coverage=self.aion.cleanup_coverage,
@@ -281,6 +294,37 @@ class StreamEngine:
         else:
             self.pipeline = None
         self.result_futures: Dict[WindowId, Any] = {}
+        # --- self-healing I/O path -------------------------------------
+        # circuit breaker on store health driving the degradation ladder
+        # (core/health.py); per-engine, so only built when this engine
+        # owns its scheduler (a shared multi-tenant scheduler would get
+        # conflicting breakers). breaker_error_threshold=0 disables.
+        self.health = None
+        if self._owns_io and self.aion.breaker_error_threshold > 0:
+            from repro.core.health import StoreHealth
+            self.health = StoreHealth(
+                error_threshold=self.aion.breaker_error_threshold,
+                cooldown_ticks=self.aion.breaker_cooldown_ticks)
+            self.io.health = self.health
+            # single source of truth for the shed order: the metrics
+            # field aliases the breaker's transition log
+            self.metrics.ladder_transitions = self.health.transitions
+        self._health_signal_last = 0
+        # ingest backpressure (ladder rung 4): deferred (batch, now)
+        # pairs readmitted by poll() once the breaker steps back down —
+        # deferral is bounded ADMISSION, not loss: every deferred batch
+        # is eventually folded (flush_deferred() is the drain barrier)
+        self._deferred: List[Tuple[EventBatch, float]] = []
+        # failed pipelined fold rounds retry ONCE through a backup
+        # executor (folds are pure functions of bucket contents —
+        # idempotent). min_deadline is large so the straggler race never
+        # issues a CONCURRENT duplicate against this engine's pool state;
+        # the retry itself (after the primary failed) is sequential.
+        self.round_backup = None
+        if self.pipeline is not None and self.aion.fold_round_retry:
+            from repro.distributed.fault import BackupExecutor
+            self.round_backup = BackupExecutor(workers=2,
+                                               min_deadline=30.0)
 
     @property
     def batching_enabled(self) -> bool:
@@ -307,9 +351,24 @@ class StreamEngine:
         return sum(s.host_bytes() for s in self.windows.values())
 
     # -------------------------------------------------------------- ingest
-    def ingest(self, batch: EventBatch, now: float) -> None:
+    def ingest(self, batch: EventBatch, now: float) -> int:
+        """Admit a batch of events. Returns the number of events
+        DEFERRED by ingest backpressure (0 = fully admitted): at the
+        ladder's top rung admission is bounded and overflow batches park
+        in the deferral queue, to be readmitted by ``poll`` when the
+        breaker steps down (or force-drained by ``flush_deferred``).
+        Deferral is visible, not silent — callers that care (soak
+        drivers, serving layers) can count what was deferred."""
         if len(batch) == 0:
-            return
+            return 0
+        if self.health is not None and self.health.backpressures():
+            self._deferred.append((batch, now))
+            self.metrics.deferred_events += len(batch)
+            return len(batch)
+        self._admit(batch, now)
+        return 0
+
+    def _admit(self, batch: EventBatch, now: float) -> None:
         if self.watermark_gen is not None:
             self.watermark_gen.observe(batch.timestamps)
         wm = self.tracker.watermark
@@ -361,6 +420,45 @@ class StreamEngine:
             if wm_new is not None:
                 self.advance_watermark(wm_new, now)
 
+    def flush_deferred(self, now: Optional[float] = None) -> int:
+        """Force-admit every backpressure-deferred batch (each at its
+        original ingest time unless ``now`` overrides). The drain
+        barrier paths (close, checkpoint, end-of-stream sweeps) call
+        this so deferral never turns into loss. Returns events
+        admitted."""
+        n = 0
+        while self._deferred:
+            batch, t = self._deferred.pop(0)
+            n += len(batch)
+            self.metrics.readmitted_events += len(batch)
+            self._admit(batch, now if now is not None else t)
+        return n
+
+    def _readmit_deferred(self, now: float) -> None:
+        """Per-poll backpressure drain: below the top rung the whole
+        queue readmits (the breaker closed — service resumes); at the
+        top rung one oldest batch trickles through per poll so deferred
+        events still make progress under sustained pressure."""
+        if not self._deferred:
+            return
+        if self.health is not None and self.health.backpressures():
+            batch, t = self._deferred.pop(0)
+            self.metrics.readmitted_events += len(batch)
+            self._admit(batch, t)
+            return
+        self.flush_deferred()
+
+    def _health_tick(self) -> None:
+        """Feed the breaker one poll tick: the delta of I/O errors +
+        retries since the last tick is the health signal (a store that
+        stopped failing produces zero and cools the ladder down)."""
+        if self.health is None:
+            return
+        sig = self.io.stats["errors"] + self.io.stats["retries"]
+        delta = sig - self._health_signal_last
+        self._health_signal_last = sig
+        self.metrics.degradation_level = self.health.tick(delta)
+
     def _plan_reexecutions(self, wid: WindowId, state: WindowState,
                            now: float) -> None:
         if wid in self.reexec_plans and \
@@ -382,7 +480,21 @@ class StreamEngine:
             return
         due = [wid for wid in sorted(self.windows)
                if not self.windows[wid].expired and wid.end <= wm]
-        if self.pipeline is not None and due:
+        demote = (self.pipeline is not None and self.health is not None
+                  and self.health.demotes_rounds())
+        if demote and due:
+            # ladder rung 3: the pipeline would QUEUE rounds against a
+            # failing store — demote to the synchronous batched path (no
+            # overlap, but nothing in flight to lose either)
+            self.metrics.demoted_sync_rounds += 1
+            for wid in due:
+                self.windows[wid].expired = True
+            self.batch_exec.execute(
+                [BatchWorkItem(wid, self.windows[wid], False)
+                 for wid in due], now)
+            for wid in due:
+                self.policy.on_expiry(self.windows[wid], self.io, now)
+        elif self.pipeline is not None and due:
             # pipelined: the watermark advance fences only the slots it
             # closes — the round (and the expiry destages, which must
             # run AFTER the fold reads the blocks) executes on the
@@ -503,6 +615,11 @@ class StreamEngine:
 
     # ----------------------------------------------------------------- poll
     def poll(self, now: float) -> None:
+        # 0. breaker tick + backpressure drain: the ladder reacts to the
+        #    error/retry delta of the LAST interval, and any deferred
+        #    ingest readmits as soon as (and as far as) the rung allows
+        self._health_tick()
+        self._readmit_deferred(now)
         # 1. due late re-executions first (their demand staging outranks the
         #    speculative pre-staging issued below; live execution in
         #    advance_watermark always went before either)
@@ -552,7 +669,13 @@ class StreamEngine:
         if not due:
             return
         items = [BatchWorkItem(wid, state, True) for wid, state, _ in due]
-        if self.pipeline is not None:
+        demote = (self.pipeline is not None and self.health is not None
+                  and self.health.demotes_rounds())
+        if demote:
+            # ladder rung 3 (see advance_watermark): fold inline
+            self.metrics.demoted_sync_rounds += 1
+            self.batch_exec.execute(items, now)
+        elif self.pipeline is not None:
             # late rounds queue behind any live round submitted this
             # tick (FIFO worker = the paper's live-before-late rule at
             # round granularity); plan bookkeeping advances immediately
@@ -578,6 +701,12 @@ class StreamEngine:
         states = [it.state for it in items if it.state.p_blocks()]
         if not states:
             return
+        if self.health is not None and self.health.sheds_prefetch():
+            # ladder rung 2: next-round prefetch is speculative load on
+            # a struggling store — the round's own demand staging will
+            # still fetch what the fold needs
+            self.metrics.shed_prefetch_rounds += 1
+            return
         readahead_now = getattr(self.prestage, "readahead_now", None)
         if readahead_now is not None and self.io.store is not None:
             readahead_now(self.io, states)
@@ -591,10 +720,19 @@ class StreamEngine:
         #    sequential sweep BEFORE the staging deadline, so the stage
         #    itself reads cache hits
         if self.prestage_enabled:
-            # polymorphic seam: the fixed scheduler issues per-window
-            # point readahead; the learned one plans segment sweeps +
-            # coalescing against its lateness/bandwidth models
-            self.prestage.drive_readahead(self, now, self.prestage_margin)
+            if self.health is not None and self.health.sheds_readahead():
+                # ladder rung 1: speculative readahead sweeps go FIRST —
+                # they are pure optimization, and every sweep against a
+                # failing store is another error/retry feeding the
+                # breaker. Due pre-staging below still runs (it has a
+                # concrete deadline).
+                self.metrics.shed_readahead_drives += 1
+            else:
+                # polymorphic seam: the fixed scheduler issues per-window
+                # point readahead; the learned one plans segment sweeps +
+                # coalescing against its lateness/bandwidth models
+                self.prestage.drive_readahead(self, now,
+                                              self.prestage_margin)
             for wid in self.prestage.due(now):
                 state = self.windows.get(wid)
                 if state is not None and state.p_blocks():
@@ -644,14 +782,23 @@ class StreamEngine:
         pipeline cannot drain), ``RuntimeError`` if the I/O executor
         did not drain in time — close must not silently discard
         in-flight work."""
-        if self.pipeline is not None:
-            from repro.core.pipeline import PipelineError
-            if not self.pipeline.drain(timeout=drain_timeout * 4,
-                                       raise_on_error=True):
-                raise PipelineError(
-                    "fold pipeline failed to drain before close")
-            if self._owns_pipeline:
-                self.pipeline.close()
+        # backpressure-deferred ingest folds BEFORE the drains: deferral
+        # bounds admission, it never loses events
+        self.flush_deferred()
+        try:
+            if self.pipeline is not None:
+                from repro.core.pipeline import PipelineError
+                if not self.pipeline.drain(timeout=drain_timeout * 4,
+                                           raise_on_error=True):
+                    raise PipelineError(
+                        "fold pipeline failed to drain before close")
+                if self._owns_pipeline:
+                    self.pipeline.close()
+        finally:
+            # after the drain — queued rounds may still retry through it
+            if self.round_backup is not None:
+                self.round_backup.shutdown()
+                self.round_backup = None
         if not self.io.drain(timeout=drain_timeout):
             raise RuntimeError(
                 "I/O executor failed to drain before close "
@@ -814,6 +961,9 @@ class StreamEngine:
         be sitting in an unacknowledged tail a crash would truncate —
         committing before the checkpoint is handed out guarantees every
         reference is durable."""
+        # deferred ingest must be IN the checkpoint (it was acknowledged
+        # to the caller as deferred, not dropped)
+        self.flush_deferred()
         if self.pipeline is not None:
             from repro.core.pipeline import PipelineError
             # a checkpoint must capture post-fold state: wait out (and

@@ -1,0 +1,102 @@
+"""Store-health circuit breaker driving the graceful-degradation ladder.
+
+The engine feeds one *signal delta* per poll tick — how many new I/O
+errors + retries the scheduler recorded since the last tick. The breaker
+turns that stream into a discrete **degradation level**:
+
+    0  healthy         — nothing shed
+    1  SHED_READAHEAD  — speculative readahead sweeps stop first
+    2  SHED_PREFETCH   — pipelined next-round prefetch stops
+    3  SYNC_ROUNDS     — fold rounds demote from the pipeline to the
+                         synchronous path (no overlap, but no queued
+                         rounds to lose either)
+    4  BACKPRESSURE    — ingest admission is bounded; overflow batches
+                         are deferred and readmitted when the store heals
+
+Escalation: a tick whose delta reaches ``error_threshold`` climbs one
+rung. De-escalation: ``cooldown_ticks`` consecutive *clean* ticks
+(delta == 0) step one rung back down — the ladder is reversible, and
+every transition is recorded so tests can assert the shed ORDER, not
+just the final level. Purely tick-driven (no wall clocks): runs are
+deterministic under fault injection.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+#: ladder rungs, least- to most-disruptive (shed speculative work first,
+#: demand-path service last)
+LEVEL_HEALTHY = 0
+LEVEL_SHED_READAHEAD = 1
+LEVEL_SHED_PREFETCH = 2
+LEVEL_SYNC_ROUNDS = 3
+LEVEL_BACKPRESSURE = 4
+MAX_LEVEL = LEVEL_BACKPRESSURE
+
+LEVEL_NAMES = ("healthy", "shed-readahead", "shed-prefetch",
+               "sync-rounds", "backpressure")
+
+
+class StoreHealth:
+    """Tick-based circuit breaker over the I/O error/retry stream.
+
+    ``error_threshold <= 0`` disables the breaker entirely (``tick``
+    never leaves level 0), which is how ``AionConfig.
+    breaker_error_threshold = 0`` turns the ladder off.
+    """
+
+    def __init__(self, error_threshold: int = 8,
+                 cooldown_ticks: int = 2):
+        self.error_threshold = int(error_threshold)
+        self.cooldown_ticks = max(int(cooldown_ticks), 1)
+        self.level = LEVEL_HEALTHY
+        self._clean_ticks = 0
+        #: every (from_level, to_level) move, in order — the shed-order
+        #: evidence ("readahead went first") chaos tests assert on
+        self.transitions: List[Tuple[int, int]] = []
+        self.stats = {"ticks": 0, "escalations": 0, "recoveries": 0}
+
+    # ------------------------------------------------------------ breaker
+    def tick(self, signal_delta: int) -> int:
+        """Advance one poll tick with ``signal_delta`` new error/retry
+        events; returns the (possibly new) degradation level."""
+        self.stats["ticks"] += 1
+        if self.error_threshold <= 0:
+            return self.level
+        if signal_delta >= self.error_threshold:
+            self._clean_ticks = 0
+            if self.level < MAX_LEVEL:
+                self._move(self.level + 1)
+                self.stats["escalations"] += 1
+        elif signal_delta == 0:
+            self._clean_ticks += 1
+            if self._clean_ticks >= self.cooldown_ticks \
+                    and self.level > LEVEL_HEALTHY:
+                self._clean_ticks = 0
+                self._move(self.level - 1)
+                self.stats["recoveries"] += 1
+        else:
+            # sub-threshold noise: neither escalate nor count as clean
+            self._clean_ticks = 0
+        return self.level
+
+    def _move(self, new_level: int) -> None:
+        self.transitions.append((self.level, new_level))
+        self.level = new_level
+
+    # ------------------------------------------------------------ queries
+    @property
+    def name(self) -> str:
+        return LEVEL_NAMES[self.level]
+
+    def sheds_readahead(self) -> bool:
+        return self.level >= LEVEL_SHED_READAHEAD
+
+    def sheds_prefetch(self) -> bool:
+        return self.level >= LEVEL_SHED_PREFETCH
+
+    def demotes_rounds(self) -> bool:
+        return self.level >= LEVEL_SYNC_ROUNDS
+
+    def backpressures(self) -> bool:
+        return self.level >= LEVEL_BACKPRESSURE

@@ -109,7 +109,8 @@ class EnginePipeline:
         self._active = 0                   # rounds mid-execution
         self._errors: List[BaseException] = []
         self._stop = False
-        self.stats = {"rounds": 0, "prefetched_rounds": 0}
+        self.stats = {"rounds": 0, "prefetched_rounds": 0,
+                      "round_retries": 0, "round_retry_wins": 0}
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -164,32 +165,34 @@ class EnginePipeline:
                 rnd = self._queue.popleft()
                 self._active += 1
             try:
-                # Hold the pool's deferred-fill lease across the round:
-                # a donated arena write issued while the round's fold is
-                # executing would WAIT on the fold's usage hold (XLA
-                # donation semantics) and serialize the I/O thread's
-                # overlapped staging — deferring buffers those fills and
-                # the round's own snapshot (or the lease exit, after
-                # results are forced) flushes them as one scatter.
-                pool = getattr(rnd.engine, "pool", None)
-                lease = pool.deferred_fills() if pool is not None \
-                    else contextlib.nullcontext()
-                with lease:
-                    out = rnd.engine.batch_exec.execute(rnd.items, rnd.now)
-                for it in rnd.items:
-                    rnd.futures[it.wid].set_result(out.get(it.wid))
-                rnd.engine.metrics.pipeline_rounds += 1
-                self.stats["rounds"] += 1
-                if rnd.on_done is not None:
-                    rnd.on_done()
+                out = self._execute(rnd)
+                self._complete(rnd, out)
             except BaseException as exc:
-                # resolve every unresolved future with the failure and
-                # remember it for drain(): a failed demand stage aborts
-                # the round loudly instead of emitting stale results
-                for fut in rnd.futures.values():
-                    fut.set_error(exc)
-                with self._cv:
-                    self._errors.append(exc)
+                failure: Optional[BaseException] = exc
+                backup = getattr(rnd.engine, "round_backup", None)
+                if backup is not None:
+                    # retry the round ONCE through the backup executor:
+                    # folds are pure functions of bucket contents
+                    # (idempotent), so re-running after a transient
+                    # stage/store failure yields the same results the
+                    # first attempt would have
+                    self.stats["round_retries"] += 1
+                    try:
+                        out = self._execute(rnd, via=backup.run)
+                        self._complete(rnd, out)
+                        self.stats["round_retry_wins"] += 1
+                        failure = None
+                    except BaseException as exc2:
+                        failure = exc2
+                if failure is not None:
+                    # resolve every unresolved future with the failure
+                    # and remember it for drain(): a failed demand stage
+                    # aborts the round loudly instead of emitting stale
+                    # results
+                    for fut in rnd.futures.values():
+                        fut.set_error(failure)
+                    with self._cv:
+                        self._errors.append(failure)
             finally:
                 with self._cv:
                     self._active -= 1
@@ -200,6 +203,32 @@ class EnginePipeline:
                         else:
                             self._inflight_wids[it.wid] = n
                     self._cv.notify_all()
+
+    def _execute(self, rnd: _FoldRound,
+                 via: Optional[Callable] = None) -> Dict:
+        """Fold one round, holding the pool's deferred-fill lease:
+        a donated arena write issued while the round's fold is executing
+        would WAIT on the fold's usage hold (XLA donation semantics) and
+        serialize the I/O thread's overlapped staging — deferring
+        buffers those fills and the round's own snapshot (or the lease
+        exit, after results are forced) flushes them as one scatter.
+        ``via`` routes the call through a wrapper (the engine's backup
+        executor on retry)."""
+        pool = getattr(rnd.engine, "pool", None)
+        lease = pool.deferred_fills() if pool is not None \
+            else contextlib.nullcontext()
+        with lease:
+            fold = lambda: rnd.engine.batch_exec.execute(rnd.items,
+                                                         rnd.now)
+            return via(fold) if via is not None else fold()
+
+    def _complete(self, rnd: _FoldRound, out: Dict) -> None:
+        for it in rnd.items:
+            rnd.futures[it.wid].set_result(out.get(it.wid))
+        rnd.engine.metrics.pipeline_rounds += 1
+        self.stats["rounds"] += 1
+        if rnd.on_done is not None:
+            rnd.on_done()
 
     # -------------------------------------------------------------- drain
     def drain(self, timeout: float = 120.0,

@@ -17,6 +17,7 @@ TPU adaptation of the serialization ablations (§5 Q3):
 """
 from __future__ import annotations
 
+import random
 import threading
 import time
 from collections import deque
@@ -29,7 +30,9 @@ import jax
 import numpy as np
 
 from repro.core.buckets import Block, MemoryBudget, Tier, WindowState
-from repro.storage.blockstore import BlockStore, SimulatedCost
+from repro.storage.blockstore import (
+    BlockStore, SimulatedCost, is_transient_error,
+)
 
 PRIO_DEMAND_STAGE = -1    # staging an operator is *blocked on* right now
 PRIO_STAGE = 0            # proactive pre-staging
@@ -115,6 +118,13 @@ class TransferExecutor:
             "errors": 0, "last_error": None, "executed": 0,
             "tenant_executed": {},
         }
+        # fault-injection seam (testing.faults.FaultInjector): called
+        # with the task before its body runs; may sleep (latency) or
+        # raise (a dispatch failure, recorded like any task exception)
+        self.fault_hook: Optional[Callable[[_Task], None]] = None
+        # failures since the last raising drain — drain(raise_on_error)
+        # reports ALL of them at once instead of first-error-wins
+        self._failures: Deque[str] = deque(maxlen=64)
         if sequential_io:
             self._thread = threading.Thread(target=self._run, daemon=True)
             self._thread.start()
@@ -140,6 +150,9 @@ class TransferExecutor:
 
             def wrap():
                 try:
+                    hook = self.fault_hook
+                    if hook is not None:
+                        hook(task)
                     fn()
                 except BaseException as exc:       # record, never swallow
                     self._record_failure(task, exc)
@@ -168,6 +181,7 @@ class TransferExecutor:
             self.stats["errors"] += 1
             self.stats["last_error"] = \
                 f"{type(exc).__name__}: {exc}"
+            self._failures.append(self.stats["last_error"])
         if task.on_error is not None:
             try:
                 task.on_error(exc)
@@ -221,6 +235,9 @@ class TransferExecutor:
                     return
                 self._inflight += 1
             try:
+                hook = self.fault_hook
+                if hook is not None:
+                    hook(task)
                 task.fn()
             except BaseException as exc:    # record, never kill the thread
                 self._record_failure(task, exc)
@@ -236,20 +253,38 @@ class TransferExecutor:
             return any(p < priority and any(cls.values())
                        for p, cls in self._classes.items())
 
-    def drain(self, timeout: float = 30.0) -> bool:
+    def drain(self, timeout: float = 30.0,
+              raise_on_error: bool = False) -> bool:
         """Block until no task is queued or mid-run, in BOTH modes.
 
         Returns ``True`` on a clean drain and ``False`` on timeout —
         callers that need an empty queue (close, checkpoint) MUST check
-        the result; proceeding after ``False`` races in-flight work."""
+        the result; proceeding after ``False`` races in-flight work.
+
+        ``raise_on_error``: after the wait, raise ONE ``StagingError``
+        carrying *every* task failure recorded since the last raising
+        drain, sorted — deterministic across thread interleavings, where
+        checking ``last_error`` after a drain was first-error-wins (the
+        pool ablation runs failures concurrently, so which error a
+        single-slot report surfaced was a race)."""
         deadline = time.time() + timeout
+        clean = True
         with self._cv:
             while self._pending or self._inflight:
                 remaining = deadline - time.time()
                 if remaining <= 0:
-                    return False
+                    clean = False
+                    break
                 self._cv.wait(timeout=remaining)
-        return True
+            failures = None
+            if raise_on_error and self._failures:
+                failures = sorted(self._failures)
+                self._failures.clear()
+        if failures is not None:
+            raise StagingError(
+                f"{len(failures)} I/O task(s) failed: "
+                + "; ".join(failures))
+        return clean
 
     def shutdown(self) -> None:
         self._stop = True
@@ -302,7 +337,11 @@ class _CommitCoalescer:
             return
         ok = False
         try:
-            self.sched.store.commit()
+            # transient commit failures retry within this flush (the
+            # finalizers below must only see ok=False when the budget is
+            # really exhausted — an unwound spill re-queues host copies
+            # for a later pass)
+            self.sched._with_retries(self.sched.store.commit, "commit")
             ok = True
             self.stats["coalesced_commits"] += 1
         finally:
@@ -334,7 +373,8 @@ class IOScheduler:
                  compact_ratio: float = 2.0,
                  executor: Optional[TransferExecutor] = None,
                  tenant: str = "default", io_weight: int = 1,
-                 owns_store: bool = True, wal_coalesce: bool = False):
+                 owns_store: bool = True, wal_coalesce: bool = False,
+                 io_retry_limit: int = 4, io_retry_backoff: float = 0.01):
         self.budget = budget
         # the executor may be SHARED across schedulers (multi-tenant
         # engines multiplex one transfer thread): this scheduler's tasks
@@ -383,7 +423,21 @@ class IOScheduler:
             "stage_events": 0, "simulated_io_seconds": 0.0,
             "preemptions": 0, "pool_fills": 0, "pool_fallbacks": 0,
             "errors": 0, "last_error": None,
+            # self-healing path: transient store failures retried (and
+            # recovered), retry budgets exhausted (the failure then
+            # surfaced honestly), speculative readahead shed instead of
+            # retried to exhaustion (the contract calls it best-effort)
+            "retries": 0, "gave_up": 0, "readahead_shed": 0,
         }
+        # transient-failure retry budget (AionConfig.io_retry_limit /
+        # io_retry_backoff); the jitter RNG is seeded per scheduler so
+        # fault-injection runs are reproducible
+        self.io_retry_limit = max(int(io_retry_limit), 0)
+        self.io_retry_backoff = io_retry_backoff
+        self._retry_rng = random.Random(0)
+        # circuit breaker on store health (core.health.StoreHealth);
+        # attached by the engine when the degradation ladder is on
+        self.health = None
         self._host_bytes = 0
         # bytes whose spill records are appended but whose group commit
         # (and host-copy drop) is deferred to a coalesced flush —
@@ -420,6 +474,42 @@ class IOScheduler:
         self.stats["errors"] += 1
         self.stats["last_error"] = f"{type(exc).__name__}: {exc}"
 
+    # ------------------------------------------------------------- retries
+    def _with_retries(self, fn: Callable, op: str,
+                      shed_ok: bool = False) -> Any:
+        """Run a store operation with the transient-failure retry budget.
+
+        Transient failures (``storage.is_transient_error``) retry up to
+        ``io_retry_limit`` times with exponential backoff + jitter;
+        permanent failures and exhausted budgets re-raise (PR 6's honest
+        surfacing — a waiter still sees the real error). ``shed_ok``
+        marks *speculative* work (readahead sweeps): instead of raising
+        on an exhausted/transient failure the operation is SHED (returns
+        None, counted in ``stats['readahead_shed']``) — the store
+        contract calls readahead best-effort, and a demand load will
+        still fetch the data with its own retry budget."""
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except BaseException as exc:
+                transient = is_transient_error(exc)
+                if transient and attempt < self.io_retry_limit:
+                    attempt += 1
+                    self.stats["retries"] += 1
+                    delay = self.io_retry_backoff * (2 ** (attempt - 1))
+                    if delay > 0:
+                        delay *= 0.5 + self._retry_rng.random()  # jitter
+                        time.sleep(delay)
+                    continue
+                if transient and shed_ok:
+                    self.stats["readahead_shed"] += 1
+                    self._record_error(exc)
+                    return None
+                if transient:
+                    self.stats["gave_up"] += 1
+                raise
+
     @property
     def last_error(self) -> Optional[str]:
         """Most recent task failure of THIS scheduler (None if clean)."""
@@ -439,7 +529,8 @@ class IOScheduler:
         with self._host_lock:
             return self._host_bytes
 
-    def drain(self, timeout: float = 30.0) -> bool:
+    def drain(self, timeout: float = 30.0,
+              raise_on_error: bool = False) -> bool:
         """Block until the executor's queue is empty and no task is
         mid-run — in BOTH modes (the thread-pool ablation tracks
         in-flight tasks through the same counter).
@@ -447,10 +538,12 @@ class IOScheduler:
         Returns ``True`` on a clean drain, ``False`` on timeout. Callers
         that require an empty queue (engine close, checkpoint) must not
         proceed on ``False`` — a checkpoint taken then would race
-        in-flight spills. NOTE: with a shared executor (multi-tenant)
-        this waits for ALL tenants' queues, which is what the barrier
-        callers need."""
-        return self.executor.drain(timeout)
+        in-flight spills. ``raise_on_error`` raises ONE ``StagingError``
+        listing every task failure since the last raising drain (see
+        ``TransferExecutor.drain``). NOTE: with a shared executor
+        (multi-tenant) this waits for ALL tenants' queues, which is what
+        the barrier callers need."""
+        return self.executor.drain(timeout, raise_on_error=raise_on_error)
 
     def shutdown(self) -> None:
         if self._owns_executor:
@@ -517,7 +610,15 @@ class IOScheduler:
             with block.lock:
                 if block.dropped or not block.in_storage:
                     return fail()
-                block.as_event_batch()                # load from file
+                try:
+                    # transient store read failures retry; an exhausted
+                    # budget surrenders the slot/reservation BEFORE
+                    # surfacing (otherwise the pool leaks a slot per
+                    # failed stage under sustained faults)
+                    self._with_retries(block.as_event_batch, "get")
+                except BaseException:
+                    fail()
+                    raise
                 self._account_host(block)
         host_data = block.host_data
         if host_data is None:
@@ -581,7 +682,7 @@ class IOScheduler:
                     # storage; prefer them over a pool read that would
                     # fabricate zero timestamps and later overwrite the
                     # genuine ones on re-spill
-                    block._load_from_storage()
+                    self._with_retries(block._load_from_storage, "get")
                 elif was_pooled:
                     block.host_data = self.pool.read_host(block)
             if was_pooled:
@@ -614,7 +715,8 @@ class IOScheduler:
                 return
             block.host_accounted = True
             self._host_bytes += block.nbytes
-            if self.store is not None:
+            if self.store is not None and not block.in_spill_lru:
+                block.in_spill_lru = True
                 self._host_lru.append(block)
 
     def _maybe_spill(self) -> None:
@@ -639,6 +741,7 @@ class IOScheduler:
                     return
                 while need > 0 and self._host_lru:
                     blk = self._host_lru.popleft()
+                    blk.in_spill_lru = False
                     batch.append(blk)
                     need -= blk.nbytes
             self.spill_blocks_sync(batch,
@@ -665,7 +768,7 @@ class IOScheduler:
             if block.dropped:
                 return None
             if block.host_data is None and block.in_storage:
-                block.as_event_batch()
+                self._with_retries(block.as_event_batch, "get")
                 self._account_host(block)
             host_data = block.host_data
         if host_data is not None and block.persisted:
@@ -682,7 +785,11 @@ class IOScheduler:
                 if b.tier == Tier.STORAGE and not b.dropped
                 and b.in_storage]
         if keys:
-            self.store.readahead(keys)
+            # speculative: an exhausted retry budget SHEDS the sweep
+            # (stats['readahead_shed']) — demand loads still fetch the
+            # records with their own budget, nothing is lost but speed
+            self._with_retries(lambda: self.store.readahead(keys),
+                               "readahead", shed_ok=True)
 
     def fetch_block_arrays(self, block: Block):
         """Device-preferred read of a block's full-capacity SoA arrays
@@ -737,17 +844,25 @@ class IOScheduler:
         if self.store is None:
             return
         staged: List[Block] = []
-        for block in blocks:
-            # put under the block lock so a concurrent purge can't clear
-            # host_data mid-write or have its tombstone undone by a
-            # spill that resurrects the record for a dead block
-            with block.lock:
-                if block.dropped or block.tier != Tier.HOST \
-                        or block.fill == 0:
-                    self._unaccount_unspillable(block)
-                    continue
-                block.put_to_store(self.store)
-            staged.append(block)
+        try:
+            for block in blocks:
+                # put under the block lock so a concurrent purge can't
+                # clear host_data mid-write or have its tombstone undone
+                # by a spill that resurrects the record for a dead block
+                with block.lock:
+                    if block.dropped or block.tier != Tier.HOST \
+                            or block.fill == 0:
+                        self._unaccount_unspillable(block)
+                        continue
+                    self._with_retries(
+                        lambda b=block: b.put_to_store(self.store), "put")
+                staged.append(block)
+        except BaseException:
+            # exhausted/permanent put: the batch's still-accounted host
+            # copies (including the one that failed) go back on the
+            # candidate list so they stay evictable, then surface
+            self._requeue_spill(staged + [block])
+            raise
         if not staged:
             return
         if coalesce and self._coalescer is not None:
@@ -762,8 +877,27 @@ class IOScheduler:
                 self._finalize_spill(staged, ok)
             self._coalescer.after_commit(fin)
             return
-        self.store.commit()                    # durability barrier
+        try:
+            # durability barrier (transient failures retry first)
+            self._with_retries(self.store.commit, "commit")
+        except BaseException:
+            self._requeue_spill(staged)
+            raise
         self._finalize_spill(staged, True)
+
+    def _requeue_spill(self, blocks: List[Block]) -> None:
+        """Return failed-spill host copies to the candidate list EXACTLY
+        once each: the ``in_spill_lru`` membership flag makes the
+        re-queue idempotent, so two failing coalesced flushes covering
+        the same block (overlapping batches, or a direct spill of a
+        block still on the list) cannot duplicate its LRU entry — and
+        ``host_accounted`` stays untouched, so ``_host_bytes`` is never
+        double-registered."""
+        with self._host_lock:
+            for block in blocks:
+                if block.host_accounted and not block.in_spill_lru:
+                    block.in_spill_lru = True
+                    self._host_lru.append(block)
 
     def _finalize_spill(self, staged: List[Block], ok: bool) -> None:
         """Post-commit half of a spill: drop host copies and flip tiers.
@@ -771,10 +905,7 @@ class IOScheduler:
         durability was not achieved, so the blocks go back on the spill
         candidate list for a later retry."""
         if not ok:
-            with self._host_lock:
-                for block in staged:
-                    if block.host_accounted:
-                        self._host_lru.append(block)
+            self._requeue_spill(staged)
             return
         total = 0
         for block in staged:
@@ -856,7 +987,12 @@ class IOScheduler:
                 return
             before = self.store.stats.get("sweep_bytes_read", 0)
             t0 = time.time()
-            self.store.readahead_segments(sid, keys)
+            # speculative — shed on exhausted transient failures, like
+            # readahead_blocks (the demand path still fetches)
+            if self._with_retries(
+                    lambda: self.store.readahead_segments(sid, keys),
+                    "readahead", shed_ok=True) is None:
+                return
             if on_swept is not None:
                 nbytes = self.store.stats.get("sweep_bytes_read", 0) \
                     - before
@@ -889,7 +1025,7 @@ class IOScheduler:
         ratio = self.compact_ratio if max_ratio is None else max_ratio
 
         def do():
-            self.store.commit()
+            self._with_retries(self.store.commit, "commit")
             reclaimed = self.store.compact_if_needed(ratio)
             if reclaimed:
                 self.stats["compacted_bytes"] = \
@@ -946,7 +1082,9 @@ class IOScheduler:
                         continue
                     if durable and blk.fill > 0 \
                             and blk.host_data is not None:
-                        blk.put_to_store(self.store)
+                        self._with_retries(
+                            lambda b=blk: b.put_to_store(self.store),
+                            "put")
                     wrote.append(blk)
                 total += self._cost_bytes(blk)
 
@@ -964,6 +1102,6 @@ class IOScheduler:
                 self._coalescer.after_commit(fin)
             else:
                 if durable:
-                    self.store.commit()
+                    self._with_retries(self.store.commit, "commit")
                 fin(True)
         return self.submit(PRIO_LATE_WRITE, do)

@@ -11,6 +11,12 @@
   on failure, restore the latest complete checkpoint and resume at the
   recorded step (engine state — watermarks, lateness histogram, bucket
   manifests — restores alongside model state).
+* ``EngineRecovery`` — the streaming-path restart glue: hold the latest
+  manifest checkpoint of a ``StreamEngine``; when the engine is poisoned
+  (a permanent store failure killed a fold round), build a fresh engine
+  over the re-opened store — reopen IS the WAL replay — and restore the
+  checkpointed bucket state into it. The caller replays its event ledger
+  from the checkpoint token.
 """
 from __future__ import annotations
 
@@ -89,6 +95,50 @@ class BackupExecutor:
 
     def shutdown(self) -> None:
         self._pool.shutdown(wait=False, cancel_futures=True)
+
+
+class EngineRecovery:
+    """Checkpoint/restore loop for one streaming engine.
+
+    ``factory`` builds a FRESH engine over the same (re-opened) store
+    directory — the log store's open runs WAL recovery, truncating any
+    torn tail, so the records a manifest checkpoint references are
+    exactly the acknowledged ones. ``checkpoint`` snapshots the engine's
+    bucket manifests plus an opaque caller *token* (typically the count
+    of events already emitted to the engine) so the caller knows where
+    to resume its ledger replay after ``restore``."""
+
+    def __init__(self, factory: Callable[[], Any], max_restarts: int = 3):
+        self.factory = factory
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self._snap: Optional[Dict[str, Any]] = None
+        self._token: Any = None
+
+    @property
+    def has_checkpoint(self) -> bool:
+        return self._snap is not None
+
+    def checkpoint(self, engine, token: Any = None) -> None:
+        """Snapshot ``engine`` (manifest checkpoint: store records are
+        referenced, not copied) and remember the resume token."""
+        self._snap = engine.checkpoint_state(include_stored_data=False)
+        self._token = token
+
+    def restore(self):
+        """Build a fresh engine from the factory and load the latest
+        checkpoint into it; returns ``(engine, token)``. Raises after
+        ``max_restarts`` — a crash loop must surface, not spin."""
+        if self._snap is None:
+            raise RuntimeError("EngineRecovery: no checkpoint taken yet")
+        self.restarts += 1
+        if self.restarts > self.max_restarts:
+            raise RuntimeError(
+                f"EngineRecovery: exceeded max_restarts="
+                f"{self.max_restarts}")
+        engine = self.factory()
+        engine.restore_state(self._snap)
+        return engine, self._token
 
 
 class RestartManager:

@@ -3,8 +3,9 @@ log-structured backend (segmented value log + WAL recovery +
 cleanup-driven compaction), and the legacy file-per-block npz fallback.
 """
 from repro.storage.blockstore import (
-    BlockKey, BlockStore, SimulatedCost, WindowKey, normalize_window_key,
-    payload_nbytes,
+    BlockKey, BlockStore, PermanentStoreError, SimulatedCost,
+    TransientStoreError, WindowKey, is_transient_error,
+    normalize_window_key, payload_nbytes,
 )
 from repro.storage.logstore import LogBlockStore
 from repro.storage.npzstore import NpzBlockStore
@@ -25,6 +26,7 @@ def make_store(backend: str, directory, *, segment_bytes: int = 1 << 20,
 
 __all__ = [
     "BlockKey", "BlockStore", "LogBlockStore", "NpzBlockStore",
-    "SimulatedCost", "WindowKey", "make_store", "normalize_window_key",
-    "payload_nbytes",
+    "PermanentStoreError", "SimulatedCost", "TransientStoreError",
+    "WindowKey", "is_transient_error", "make_store",
+    "normalize_window_key", "payload_nbytes",
 ]

@@ -57,6 +57,32 @@ def payload_nbytes(fill: int, width: int) -> int:
     return fill * (4 + 8 + 4 * width)
 
 
+class TransientStoreError(OSError):
+    """A store operation failed in a way a retry is expected to fix
+    (flaky device, interrupted syscall, overloaded tier). The staging
+    layer retries these up to ``AionConfig.io_retry_limit`` with
+    exponential backoff before surfacing them."""
+
+
+class PermanentStoreError(RuntimeError):
+    """A store operation failed in a way retries cannot fix (corrupt
+    record, failed media, contract violation). Surfaced immediately —
+    recovery means restoring from a checkpoint, not retrying."""
+
+
+def is_transient_error(exc: BaseException) -> bool:
+    """Transient vs. permanent classification for the retry budget.
+
+    OS-level I/O errors (``OSError`` and subclasses — the log backend's
+    real failure mode), timeouts and connection drops are transient;
+    ``PermanentStoreError`` and everything else (``KeyError``,
+    ``AssertionError``, ...) are logic/corruption failures that retries
+    would only repeat."""
+    if isinstance(exc, PermanentStoreError):
+        return False
+    return isinstance(exc, (OSError, TimeoutError, ConnectionError))
+
+
 class SimulatedCost:
     """Deterministic persistent-tier cost model (paper Q3 ablations).
 

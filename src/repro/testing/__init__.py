@@ -1,0 +1,6 @@
+"""Deterministic fault injection for the storage / I-O / pipeline stack
+(ISSUE 9): every failure mode the self-healing path claims to handle is
+drivable from tests and the chaos soak."""
+from repro.testing.faults import FaultInjector, FaultyBlockStore
+
+__all__ = ["FaultInjector", "FaultyBlockStore"]

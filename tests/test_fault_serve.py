@@ -6,7 +6,7 @@ import pytest
 
 from repro.core.cleanup import PredictiveCleanup
 from repro.distributed.fault import (
-    BackupExecutor, HeartbeatMonitor, RestartManager,
+    BackupExecutor, EngineRecovery, HeartbeatMonitor, RestartManager,
 )
 from repro.kernels import ref as R
 from repro.serve.kvcache import TieredKVCache
@@ -65,6 +65,137 @@ def test_restart_manager_recovers_from_crash():
     )
     assert rm.restarts == 2
     assert out == 10              # all 10 steps were executed exactly once
+
+
+def test_heartbeat_timeout_edges():
+    """Exactly-at-timeout is alive (strict >); just past it is dead; a
+    fresh beat resurrects; an unknown worker is neither."""
+    hb = HeartbeatMonitor(timeout=1.0)
+    hb.beat("w0", now=0.0)
+    assert hb.dead_workers(now=1.0) == []          # boundary: still alive
+    assert hb.alive_workers(now=1.0) == ["w0"]
+    assert hb.dead_workers(now=1.0 + 1e-9) == ["w0"]
+    hb.beat("w0", now=2.0)                         # resurrection
+    assert hb.alive_workers(now=2.5) == ["w0"]
+    assert hb.dead_workers(now=2.5) == []
+    assert "ghost" not in hb.alive_workers(now=2.5) \
+        and "ghost" not in hb.dead_workers(now=2.5)
+
+
+def test_backup_executor_first_result_wins_and_stats():
+    """The primary straggles forever; the backup's answer is returned.
+    Stats account every launch/backup/win."""
+    ex = BackupExecutor(workers=4, deadline_factor=2.0, min_deadline=0.05)
+    try:
+        for _ in range(3):                          # warm the EWMA fast
+            assert ex.run(lambda: 1) == 1
+        calls = {"n": 0}
+
+        def primary_hangs():
+            calls["n"] += 1
+            if calls["n"] == 1:
+                time.sleep(2.0)                     # primary: straggler
+                return "primary"
+            return "backup"
+        assert ex.run(primary_hangs) == "backup"    # first result wins
+        assert ex.stats.launched == 4
+        assert ex.stats.backups_issued == 1
+        assert ex.stats.backup_wins == 1
+    finally:
+        ex.shutdown()
+
+
+def test_backup_executor_propagates_task_failure():
+    ex = BackupExecutor(workers=2, min_deadline=5.0)
+    try:
+        with pytest.raises(IOError, match="both copies fail"):
+            ex.run(lambda: (_ for _ in ()).throw(
+                IOError("both copies fail")))
+    finally:
+        ex.shutdown()
+
+
+def test_restart_manager_exceeds_max_restarts():
+    rm = RestartManager(save_every=10, max_restarts=2)
+    with pytest.raises(RuntimeError, match="always down"):
+        rm.run(init_state=lambda: 0,
+               restore=lambda: None,
+               step_fn=lambda s, step: (_ for _ in ()).throw(
+                   RuntimeError("always down")),
+               save=lambda s, step: None,
+               num_steps=5)
+    assert rm.restarts == 3                # 2 allowed restarts + the raise
+
+
+def test_restart_manager_restore_loop_resumes_at_checkpoint():
+    """Steps between the last save and the crash re-execute; steps
+    before it never do (the executed-step log proves the resume point)."""
+    saved = {}
+    log = []
+    crashes = {"left": 1}
+
+    def step_fn(state, step):
+        log.append(step)
+        if crashes["left"] and step == 7:
+            crashes["left"] -= 1
+            raise RuntimeError("crash at 7")
+        return state + 1
+
+    rm = RestartManager(save_every=3, max_restarts=3)
+    out = rm.run(
+        init_state=lambda: 0,
+        restore=lambda: (saved["s"], saved["step"]) if saved else None,
+        step_fn=step_fn,
+        save=lambda s, step: saved.update(s=s, step=step),
+        num_steps=9)
+    assert out == 9
+    # crashed at 7 after saving at 6: resume replays 7, never 0..5
+    assert log == [0, 1, 2, 3, 4, 5, 6, 7, 6, 7, 8]
+
+
+def test_engine_recovery_checkpoint_restore_roundtrip(tmp_path):
+    from repro.configs.base import AionConfig
+    from repro.core import (
+        EventBatch, StreamEngine, TumblingWindows, make_operator,
+    )
+    rng = np.random.default_rng(11)
+    batch = EventBatch(rng.integers(0, 8, 96), rng.uniform(0.0, 10.0, 96),
+                       rng.normal(size=(96, 1)).astype(np.float32))
+    aion = AionConfig(block_size=32)
+
+    def factory():
+        # reopening the store directory IS the WAL replay
+        return StreamEngine(
+            assigner=TumblingWindows(10.0),
+            operator=make_operator("average", aion.block_size, 1),
+            aion=aion, value_width=1, spill_dir=tmp_path)
+
+    rec = EngineRecovery(factory, max_restarts=2)
+    assert not rec.has_checkpoint
+    eng = factory()
+    eng.ingest(batch, now=1.0)
+    rec.checkpoint(eng, token=96)
+    assert rec.has_checkpoint
+    eng.close()                            # the "crash" (clean here)
+
+    eng2, token = rec.restore()
+    assert token == 96
+    assert sum(s.total_events for s in eng2.windows.values()) == 96
+    eng2.advance_watermark(10.0, now=2.0)
+    result = next(iter(eng2.results.values()))
+    assert result is not None
+    eng2.close()
+
+    eng3, _ = rec.restore()                # second allowed restart
+    eng3.close()
+    with pytest.raises(RuntimeError, match="max_restarts"):
+        rec.restore()
+
+
+def test_engine_recovery_requires_checkpoint():
+    rec = EngineRecovery(lambda: None, max_restarts=1)
+    with pytest.raises(RuntimeError, match="no checkpoint"):
+        rec.restore()
 
 
 # ------------------------------------------------------------------ serve

@@ -16,6 +16,8 @@ Railgun-style rationale (PAPERS.md): partitioned streaming state is only
 trustworthy while it is continuously validated against an oracle — the
 soak is that validation for the tiered-state + batched + sharded stack.
 """
+import contextlib
+
 import numpy as np
 import pytest
 import jax
@@ -28,6 +30,13 @@ from repro.core.events import EventBatch
 from repro.core.operators import make_operator
 from repro.core.triggers import DeltaTTrigger
 from repro.core.windows import WindowId
+from repro.distributed.fault import EngineRecovery
+from repro.testing import FaultInjector, FaultyBlockStore
+
+#: store ops the chaos axis injects on. Deliberately NOT ``delete``:
+#: purges/reconciles run on the engine main thread outside the retry
+#: envelope, and the chaos contract is about the data path.
+_CHAOS_OPS = ("get", "put", "commit", "readahead")
 
 WINDOW = 10.0
 N_EVENTS = 50_000
@@ -62,33 +71,64 @@ def _make_engine(op_name: str, batched: bool, sharded: bool,
                  store: str = "log",
                  pipelined: bool = False,
                  prefetch: str = "fixed",
-                 splitk: int = 0) -> StreamEngine:
+                 splitk: int = 0,
+                 fault_rate: float = 0.0,
+                 fault_seed: int = 0,
+                 ladder: bool = True) -> StreamEngine:
+    extra = {}
+    if fault_rate > 0:
+        # chaos axis: zero backoff keeps ~50k-event soaks fast, a low
+        # breaker threshold makes the ladder engage under the injected
+        # error bursts (store traffic is bursty: destage/spill groups,
+        # re-execution fetch fans); ladder=False = the ablation control
+        extra = dict(io_retry_backoff=0.0,
+                     breaker_error_threshold=2 if ladder else 0)
     aion = AionConfig(block_size=256, batched_execution=batched,
                       slot_sharding=sharded, block_pool=pooled,
                       store_backend=store,
                       store_segment_bytes=128 << 10,
                       pipelined_execution=pipelined,
                       prefetch_backend=prefetch,
-                      splitk_chunk_rows=splitk)
+                      splitk_chunk_rows=splitk, **extra)
+    store_obj = None
+    if fault_rate > 0:
+        from repro.storage import make_store
+        inner = make_store("log", spill_dir, segment_bytes=128 << 10)
+        inj = FaultInjector(
+            seed=fault_seed,
+            rates={op: fault_rate for op in _CHAOS_OPS},
+            # failure streaks stay below io_retry_limit, so the retry
+            # path deterministically recovers: gave_up == 0 is EXACT
+            max_consecutive=2)
+        store_obj = FaultyBlockStore(inner, inj)
     kw = {"num_keys": 8} if op_name == "stock" else {}
-    return StreamEngine(
+    # spill pressure: ~1 MB device budget (~256 blocks), ~512 KB host
+    # budget -> blocks continuously destage AND spill to storage. The
+    # chaos axis squeezes both 8x so the run is *dominated* by store
+    # traffic -- every fold crosses the faulty get/put/commit path.
+    dev_budget = 1 << 17 if fault_rate > 0 else 1 << 20
+    host_budget = 1 << 16 if fault_rate > 0 else 1 << 19
+    eng = StreamEngine(
         assigner=TumblingWindows(WINDOW),
         operator=make_operator(op_name, aion.block_size, width, **kw),
         aion=aion, value_width=width,
         cleanup=_cleanup(),
         trigger=DeltaTTrigger(executions=2),
-        # spill pressure: ~1 MB device budget (~256 blocks), ~512 KB host
-        # budget -> blocks continuously destage AND spill to storage
-        device_budget_bytes=1 << 20,
-        host_budget_bytes=1 << 19,
+        device_budget_bytes=dev_budget,
+        host_budget_bytes=host_budget,
         spill_dir=spill_dir,
+        store=store_obj,
     )
+    if store_obj is not None:
+        eng._fault_injector = store_obj.injector
+    return eng
 
 
 def _final_sweep(eng: StreamEngine, now: float) -> None:
     """Re-execute every window through the engine's own (batched or
     reference) path so final results reflect all folded-in late events —
     including plans lost at the mid-stream restore."""
+    eng.flush_deferred(now)   # backpressure deferral must never be loss
     if eng.pipeline is not None:
         assert eng.pipeline.drain(), "fold pipeline failed to drain"
     assert eng.io.drain(), "I/O executor failed to drain"
@@ -105,7 +145,14 @@ _COUNTERS = ("ingested", "ingested_late", "live_executions",
              "late_executions", "batch_executions",
              "sharded_batch_executions", "pooled_rows", "fallback_rows",
              "demand_pool_fills", "pipeline_rounds", "epoch_demoted_rows",
-             "splitk_launches")
+             "splitk_launches",
+             # self-healing ladder observables (ISSUE 9)
+             "shed_readahead_drives", "shed_prefetch_rounds",
+             "demoted_sync_rounds", "deferred_events",
+             "readmitted_events")
+
+_IO_COUNTERS = ("errors", "retries", "gave_up", "readahead_shed",
+                "staged_blocks")
 
 
 class _SoakTotals:
@@ -115,23 +162,34 @@ class _SoakTotals:
     def __init__(self):
         for k in _COUNTERS:
             setattr(self, k, 0)
-        self.io_errors = 0
+        for k in _IO_COUNTERS:
+            setattr(self, "io_" + k, 0)
+        self.injected_faults = 0
+        self.ladder_transitions = []
 
     def absorb(self, eng) -> None:
         for k in _COUNTERS:
             setattr(self, k, getattr(self, k) + getattr(eng.metrics, k))
-        self.io_errors += eng.io.stats["errors"]
+        for k in _IO_COUNTERS:
+            setattr(self, "io_" + k,
+                    getattr(self, "io_" + k) + eng.io.stats[k])
+        self.ladder_transitions.extend(eng.metrics.ladder_transitions)
+        inj = getattr(eng, "_fault_injector", None)
+        if inj is not None:
+            self.injected_faults += inj.stats["injected"]
 
 
 def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
            width: int = 1, pooled: bool = False, store: str = "log",
            pipelined: bool = False, prefetch: str = "fixed",
-           splitk: int = 0):
+           splitk: int = 0, fault_rate: float = 0.0,
+           fault_seed: int = 0, ladder: bool = True):
     """Run the soak; returns (results, oracle_events, counter_totals)."""
     rng = np.random.default_rng(SEED)
     totals = _SoakTotals()
     eng = _make_engine(op_name, batched, sharded, spill_dir / "a", width,
-                       pooled, store, pipelined, prefetch, splitk)
+                       pooled, store, pipelined, prefetch, splitk,
+                       fault_rate, fault_seed, ladder)
     all_events = []           # oracle ledger: every event ever generated
     now = 0.0
     wm = 0.0
@@ -161,15 +219,26 @@ def _drive(op_name: str, batched: bool, sharded: bool, spill_dir,
         now += rng.uniform(1.0, 4.0)            # random processing pace
 
         if not restored and emitted >= N_EVENTS // 2:
-            # mid-stream crash/restore: serialize, rebuild, resume
+            # mid-stream crash/restore: serialize, rebuild, resume.
+            # Under chaos the checkpoint itself runs fault-free (it is
+            # the recovery anchor, not the victim).
             restored = True
-            snap = eng.checkpoint_state()
-            totals.absorb(eng)
-            eng.close()
+            inj = getattr(eng, "_fault_injector", None)
+            ctx = inj.paused() if inj is not None else \
+                contextlib.nullcontext()
+            with ctx:
+                snap = eng.checkpoint_state()
+                totals.absorb(eng)
+                eng.close()
             eng = _make_engine(op_name, batched, sharded,
                                spill_dir / "b", width, pooled, store,
-                               pipelined, prefetch, splitk)
-            eng.restore_state(snap)
+                               pipelined, prefetch, splitk,
+                               fault_rate, fault_seed + 1, ladder)
+            inj_b = getattr(eng, "_fault_injector", None)
+            ctx = inj_b.paused() if inj_b is not None else \
+                contextlib.nullcontext()
+            with ctx:
+                eng.restore_state(snap)
 
     # close out: expire everything, fire remaining re-execution plans,
     # then a final full sweep through the engine's own execution path
@@ -394,3 +463,175 @@ def test_soak_differential_percentile(tmp_path, splitk):
     assert totals.batch_executions > 0       # percentile batched for real
     if splitk:
         assert totals.splitk_launches > 0
+
+
+# --------------------------------------------------------------------------
+# chaos axis (ISSUE 9): the full soak under injected store faults
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pipelined", [True, False])
+def test_soak_differential_chaos_faults(tmp_path, pipelined):
+    """ISSUE 9 tentpole: the soak with >=5% injected store faults on the
+    whole data path (get/put/commit/readahead). The retry layer absorbs
+    every transient (max_consecutive=2 < io_retry_limit makes recovery
+    deterministic), the degradation ladder sheds speculative work first,
+    and final results still match the never-failing oracle exactly:
+    zero lost windows, zero lost events."""
+    results, (keys, ts, vals), totals = _drive(
+        "average", True, False, tmp_path, pooled=True,
+        pipelined=pipelined, fault_rate=0.25, fault_seed=77)
+    want = _oracle_average(keys, ts, vals)
+    # oracle parity: identical window set, identical answers
+    assert set(results) == set(want)
+    for wid in want:
+        assert results[wid] == pytest.approx(want[wid], rel=2e-4,
+                                             abs=2e-4), wid
+    assert totals.ingested == N_EVENTS          # zero lost events
+    # the chaos really happened, and the retry layer really absorbed it
+    assert totals.injected_faults > 100
+    assert totals.io_retries > 0
+    assert totals.io_gave_up == 0               # exact, by construction
+    assert totals.io_staged_blocks > 0          # demand traffic survived
+    # the ladder engaged, and engaged bottom-up: speculative readahead is
+    # always the first thing shed, never demand traffic
+    assert totals.ladder_transitions, "breaker never engaged"
+    assert totals.ladder_transitions[0] == (0, 1)
+    for frm, to in totals.ladder_transitions:
+        assert abs(to - frm) == 1               # one rung at a time
+    assert totals.shed_readahead_drives > 0
+    # backpressure deferral (rung 4) may or may not be reached; if it
+    # was, every deferred event must have been readmitted
+    assert totals.deferred_events == totals.readmitted_events
+
+
+def test_soak_differential_chaos_restart(tmp_path):
+    """ISSUE 9 tentpole: a *permanent* store failure poisons the engine
+    mid-run; ``EngineRecovery`` restores from the last manifest
+    checkpoint (store reopen = WAL replay), the ledger replays events
+    emitted after that checkpoint, and the run finishes with oracle
+    parity -- better late than never, even through a restart."""
+    from repro.core.buckets import Tier
+    from repro.core.pipeline import PipelineError
+    from repro.core.staging import StagingError
+    from repro.storage import make_store
+
+    store_dir = tmp_path / "chaos"
+    inj = FaultInjector(seed=5,
+                        rates={op: 0.05 for op in _CHAOS_OPS},
+                        max_consecutive=2)
+
+    def factory():
+        inner = make_store("log", store_dir, segment_bytes=128 << 10)
+        aion = AionConfig(block_size=256, batched_execution=True,
+                          block_pool=True, pipelined_execution=True,
+                          store_segment_bytes=128 << 10,
+                          io_retry_backoff=0.0,
+                          breaker_error_threshold=4)
+        eng = StreamEngine(
+            assigner=TumblingWindows(WINDOW),
+            operator=make_operator("average", aion.block_size, 1),
+            aion=aion, value_width=1,
+            cleanup=_cleanup(),
+            trigger=DeltaTTrigger(executions=2),
+            # tiny budgets: even this short run spills to storage, so
+            # the poisoned `get` is guaranteed to be on the fold path
+            device_budget_bytes=1 << 16,
+            host_budget_bytes=1 << 15,
+            spill_dir=store_dir,
+            store=FaultyBlockStore(inner, inj),
+        )
+        eng._fault_injector = inj
+        return eng
+
+    recovery = EngineRecovery(factory, max_restarts=3)
+    rng = np.random.default_rng(SEED)
+    eng = factory()
+    n_events, chunk = 6000, 500
+    ledger = []            # (start_index, batch, now): replay source
+    all_events = []
+    now, wm, emitted, chunks = 0.0, 0.0, 0, 0
+    crashed = False
+
+    def emit_chunk():
+        nonlocal now, wm, emitted, chunks
+        n = min(chunk, n_events - emitted)
+        u = rng.random(n)
+        delay = np.where(u < 0.65, rng.uniform(0.0, 2.0, n),
+                         rng.uniform(0.0, MAX_LATE, n))
+        ts = np.maximum(now - delay, 0.0)
+        batch = EventBatch(rng.integers(0, 8, n), ts,
+                           rng.normal(size=(n, 1)).astype(np.float32))
+        all_events.append((batch.keys.copy(), batch.timestamps.copy(),
+                           batch.values.copy()))
+        ledger.append((emitted, batch, now))
+        eng.ingest(batch, now)
+        emitted += n
+        chunks += 1
+        if rng.random() < 0.7:
+            wm = max(wm, now - rng.uniform(0.0, 5.0))
+            eng.advance_watermark(wm, now)
+        eng.poll(now)
+        now += rng.uniform(1.0, 4.0)
+
+    while emitted < n_events:
+        emit_chunk()
+        if chunks % 3 == 0:
+            with inj.paused():          # checkpoints run clean
+                recovery.checkpoint(eng, token=(emitted, now, wm))
+        if not crashed and emitted >= n_events // 2:
+            crashed = True
+            # push all engine state to the persistent tier (cleanly), so
+            # the next fold round MUST read through the store...
+            with inj.paused():
+                if eng.pipeline is not None:
+                    eng.pipeline.drain()
+                eng.io.drain()
+                for st in eng.windows.values():
+                    for blk in list(st.blocks):
+                        if blk.tier == Tier.DEVICE:
+                            eng.io.destage_block_sync(blk)
+                eng.io.spill_blocks_sync(
+                    [b for st in eng.windows.values() for b in st.blocks
+                     if b.tier == Tier.HOST and b.fill > 0])
+            # ...then poison it: every `get` now fails *permanently* --
+            # the retry budget must NOT mask it (honest surfacing), the
+            # round retry must NOT win, shutdown must raise
+            inj.poison(("get",))
+            with pytest.raises((PipelineError, StagingError)):
+                eng.advance_watermark(now + MAX_LATE, now)
+                eng.poll(now)
+                eng.close()
+            # the engine is dead; tear down its I/O cleanly and restore
+            inj.heal()
+            eng.pipeline.close()
+            eng.io.drain(timeout=30.0)
+            eng.io.shutdown()
+            with inj.paused():
+                eng, (ck_emitted, ck_now, ck_wm) = recovery.restore()
+            now, wm = max(now, ck_now), ck_wm
+            # better late than never: replay everything the checkpoint
+            # does not cover (events land late, the engine folds them)
+            for start, batch, b_now in ledger:
+                if start >= ck_emitted:
+                    eng.ingest(batch, now)
+            eng.poll(now)
+
+    assert crashed and recovery.restarts == 1
+    wm = now + MAX_LATE
+    eng.advance_watermark(wm, now)
+    for t in np.linspace(now, now + 70.0, 8):
+        eng.poll(t)
+    _final_sweep(eng, now + 70.0)
+    results = dict(eng.results)
+    assert eng.io.stats["gave_up"] == 0
+    assert eng.metrics.ingested > 0
+    eng.close()
+
+    keys = np.concatenate([k for k, _, _ in all_events])
+    tss = np.concatenate([t for _, t, _ in all_events])
+    vals = np.concatenate([v for _, _, v in all_events])
+    want = _oracle_average(keys, tss, vals)
+    assert set(results) == set(want)            # zero lost windows
+    for wid in want:
+        assert results[wid] == pytest.approx(want[wid], rel=2e-4,
+                                             abs=2e-4), wid
