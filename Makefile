@@ -9,6 +9,7 @@ verify:
 	$(MAKE) verify-prefetch
 	$(MAKE) verify-splitk
 	$(MAKE) verify-chaos
+	$(MAKE) verify-obs
 
 # Persistent p-bucket store suites, tmpdir-isolated (pytest tmp_path):
 # storage unit tests (WAL group commit, footer rebuild, torn-tail
@@ -79,6 +80,17 @@ verify-chaos:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
 		tests/test_soak_differential.py -k "chaos"
 
+# Observability gate: metrics registry semantics (typed instruments,
+# label children, legacy dict/attribute adapters), bounded series caps,
+# thread-safe executor counters under concurrent hammering, structured
+# tracing (explicit cross-thread parent handoff, per-attempt retry
+# events, bounded ring), the Prometheus/JSON exporters, and the
+# one-call engine.observability() surface incl. multi-tenant coverage.
+# Also collected by plain `pytest` above; this is the focused obs gate.
+verify-obs:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q \
+		tests/test_obs.py
+
 # Benchmark entry point (CSV rows, one per paper table/figure).
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/run.py
@@ -120,7 +132,13 @@ bench-pipeline:
 bench-skew:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q2_throughput.py --skew
 
+# Tracing-overhead probe (identical fold-bound loop at trace sample
+# rate 0.0 vs 1.0, <5% acceptance bar); merges a "tracing_overhead"
+# section into BENCH_q2_gather.json
+bench-obs:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python benchmarks/q2_throughput.py --obs
+
 .PHONY: verify verify-storage verify-multidevice verify-pipeline \
-	verify-prefetch verify-splitk verify-chaos bench bench-gather \
-	bench-q1 bench-q4 bench-prefetch bench-faults bench-pipeline \
-	bench-skew
+	verify-prefetch verify-splitk verify-chaos verify-obs bench \
+	bench-gather bench-q1 bench-q4 bench-prefetch bench-faults \
+	bench-pipeline bench-skew bench-obs

@@ -171,26 +171,28 @@ def _storage_drive(backend: str, spill_dir, events: int = 16_000,
             per_round.append((time.time() - f0) / max(len(spilled), 1))
             assert all(g is not None for g in got)
         fetch_per_block = float(np.median(per_round))
+    obs = eng.observability()
+    store_stats = obs["store"]
     out = {
         "backend": backend,
         "prefetch": prefetch,
         "events": events,
         "ingest_wall_s": round(ingest_wall, 4),
-        "purged_windows": eng.metrics.purged_windows,
+        "purged_windows": obs["engine"]["purged_windows"],
         "spilled_blocks": len(spilled),
-        "bytes_written": int(store.stats["bytes_written"]),
-        "bytes_read": int(store.stats["bytes_read"]),
-        "bytes_compacted": int(store.stats["bytes_compacted"]),
+        "bytes_written": int(store_stats["bytes_written"]),
+        "bytes_read": int(store_stats["bytes_read"]),
+        "bytes_compacted": int(store_stats["bytes_compacted"]),
         "logical_bytes_written": int(
-            store.stats["logical_bytes_written"]),
+            store_stats["logical_bytes_written"]),
         "write_amplification": round(store.write_amplification, 4),
         "on_disk_bytes": int(store.on_disk_bytes()),
         "live_bytes": int(store.live_bytes()),
         "batched_fetch_s_per_block": fetch_per_block,
-        "group_commits": int(store.stats["commits"]),
-        "coalesced_windows": int(store.stats.get("coalesced_windows", 0)),
-        "coalesce_bytes": int(store.stats.get("coalesce_bytes", 0)),
-        "segment_sweeps": int(store.stats.get("segment_sweeps", 0)),
+        "group_commits": int(store_stats["commits"]),
+        "coalesced_windows": int(store_stats.get("coalesced_windows", 0)),
+        "coalesce_bytes": int(store_stats.get("coalesce_bytes", 0)),
+        "segment_sweeps": int(store_stats.get("segment_sweeps", 0)),
     }
     eng.close()
     return out

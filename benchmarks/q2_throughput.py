@@ -392,7 +392,7 @@ def pipeline_benchmark(num_windows: int = 8, num_rounds: int = 10,
             for r, items in enumerate(rounds):
                 eng.batch_exec.execute(items, now=2.0 + r)
         wall = time.time() - t0
-        assert eng.io.stats["errors"] == 0
+        assert eng.observability()["io"]["errors"] == 0
         eng.close()
         return wall
 
@@ -506,7 +506,7 @@ def skew_benchmark(num_windows: int = 8, rounds: int = 10,
         eng.io.drain()
         late_batch(-1)                                 # warm the late path
         m = eng.metrics
-        cache0 = op.fold_batch._cache_size()
+        cache0 = eng.observability()["fold"]["cache_size"]
         m.batch_device_seconds = 0.0
         m.pooled_rows = 0
         launches0 = m.splitk_launches
@@ -523,7 +523,8 @@ def skew_benchmark(num_windows: int = 8, rounds: int = 10,
             "rows_folded": rows_folded,
             "fold_rows_per_sec": round(
                 rows_folded / max(m.batch_device_seconds, 1e-9)),
-            "recompiles": op.fold_batch._cache_size() - cache0,
+            "recompiles": eng.observability()["fold"]["cache_size"]
+            - cache0,
             "splitk_launches": m.splitk_launches - launches0,
         }
         eng.close()
@@ -547,6 +548,101 @@ def skew_benchmark(num_windows: int = 8, rounds: int = 10,
             with open(emit_json) as f:
                 merged = json.load(f)
         merged["splitk_vs_stripe"] = out
+        with open(emit_json, "w") as f:
+            json.dump(merged, f, indent=2)
+    return out
+
+
+def obs_overhead_benchmark(num_windows: int = 8, rounds: int = 40,
+                           events_per_window: int = 4000,
+                           op_name: str = "average",
+                           emit_json: str = "BENCH_q2_gather.json"
+                           ) -> Dict:
+    """Tracing-overhead probe (ISSUE 10): the SAME fold-bound late
+    re-execution drive at ``trace_sample_rate`` 0.0 vs 1.0.
+
+    Each measured round folds every window's hot (arena-resident) block
+    table under a root span — at rate 1.0 every fold-round span, its
+    attrs and the ring-buffer append are live; at 0.0 the tracer hands
+    out ``NULL_SPAN`` and the instrumented path must cost nothing.
+    Acceptance (ISSUE 10): wall overhead at rate 1.0 under 5%. The
+    section merges into ``emit_json`` as ``tracing_overhead``."""
+    import json
+    import os
+
+    from repro.configs.base import AionConfig
+    from repro.core import InMemoryPolicy, StreamEngine, TumblingWindows
+    from repro.core.batch_exec import BatchWorkItem
+    from repro.core.events import EventBatch
+    from repro.core.operators import make_operator
+    from repro.core.triggers import DeltaTTrigger
+
+    wd = 10.0
+    bs = 256
+    horizon = num_windows * wd
+
+    def drive(rate: float) -> Dict:
+        aion = AionConfig(block_size=bs, batched_execution=True,
+                          block_pool=True, pool_slots=2048,
+                          trace_sample_rate=rate)
+        op = make_operator(op_name, bs, 1)
+        eng = StreamEngine(
+            assigner=TumblingWindows(wd), operator=op, aion=aion,
+            value_width=1, device_budget_bytes=256 << 20,
+            policy=InMemoryPolicy(),      # hot arena: fold-bound
+            trigger=DeltaTTrigger(executions=1))
+        rng = np.random.default_rng(0)
+        for i in range(num_windows):
+            n = events_per_window
+            eng.ingest(EventBatch(
+                rng.integers(0, 64, n).astype(np.int32),
+                rng.uniform(i * wd, (i + 1) * wd, n),
+                rng.normal(size=(n, 1)).astype(np.float32)), now=0.5)
+        eng.advance_watermark(horizon, now=horizon)    # live + compile
+
+        def late_items():
+            return [BatchWorkItem(wid, eng.windows[wid], True)
+                    for wid in sorted(eng.windows)]
+        eng.batch_exec.execute(late_items(), now=horizon + 1.0)  # warm
+        rows = sum(len(st.blocks) for st in eng.windows.values())
+        # min-of-3 timed repetitions: each single loop is tens of ms, so
+        # one-shot walls are dominated by host noise, not tracing cost
+        wall = float("inf")
+        for rep in range(3):
+            t0 = time.time()
+            for r in range(rounds):
+                span = eng.tracer.root("bench_round")
+                eng.batch_exec.execute(
+                    late_items(), now=horizon + 2.0 + rep * rounds + r,
+                    trace_parent=span)
+                span.end()
+            wall = min(wall, time.time() - t0)
+        snap = eng.observability()
+        out = {
+            "wall_s": round(wall, 6),
+            "fold_rows_per_sec": round(rows * rounds / max(wall, 1e-9)),
+            "spans_finished": snap["trace"]["spans_finished"],
+        }
+        eng.close()
+        return out
+
+    rate0 = drive(0.0)
+    rate1 = drive(1.0)
+    overhead = (rate1["wall_s"] - rate0["wall_s"]) \
+        / max(rate0["wall_s"], 1e-9) * 100.0
+    out: Dict = {
+        "num_windows": num_windows, "rounds": rounds,
+        "events_per_window": events_per_window, "workload": op_name,
+        "rate0": rate0, "rate1": rate1,
+        "overhead_pct": round(overhead, 2),
+        "pass_lt_5pct": overhead < 5.0,
+    }
+    if emit_json:
+        merged = {}
+        if os.path.exists(emit_json):
+            with open(emit_json) as f:
+                merged = json.load(f)
+        merged["tracing_overhead"] = out
         with open(emit_json, "w") as f:
             json.dump(merged, f, indent=2)
     return out
@@ -620,10 +716,16 @@ if __name__ == "__main__":
                          "stripe fold on a Zipf-skewed growing-late-"
                          "table workload and merge a splitk_vs_stripe "
                          "section into BENCH_q2_gather.json")
+    ap.add_argument("--obs", action="store_true",
+                    help="measure structured-tracing overhead (sample "
+                         "rate 0.0 vs 1.0 on a fold-bound drive) and "
+                         "merge a tracing_overhead section into "
+                         "BENCH_q2_gather.json")
     args = ap.parse_args()
-    if args.devices > 1 and (args.gather or args.pipeline or args.skew):
-        ap.error("--gather/--pipeline/--skew measure single-device "
-                 "paths; run them without --devices")
+    if args.devices > 1 and (args.gather or args.pipeline or args.skew
+                             or args.obs):
+        ap.error("--gather/--pipeline/--skew/--obs measure single-"
+                 "device paths; run them without --devices")
     if args.devices > 1:
         flags = os.environ.get("XLA_FLAGS", "")
         os.environ["XLA_FLAGS"] = (
@@ -641,6 +743,10 @@ if __name__ == "__main__":
     elif args.skew:
         import json as _json
         print(_json.dumps(skew_benchmark(
+            num_windows=args.windows or 8), indent=2))
+    elif args.obs:
+        import json as _json
+        print(_json.dumps(obs_overhead_benchmark(
             num_windows=args.windows or 8), indent=2))
     else:
         for r in run():

@@ -75,15 +75,16 @@ def run_one(variant: str, past_windows: int = 4) -> Dict:
         now += wd
     eng.io.drain()
     dt = time.time() - t0
+    obs = eng.observability()
     out = {
         "variant": variant,
         "events_per_sec": events / dt,
-        "late_execs": eng.metrics.late_executions,
-        "fetch_stall_s": round(eng.metrics.fetch_stall_seconds, 4),
-        "sim_io_s": round(eng.io.stats["simulated_io_seconds"], 4),
+        "late_execs": obs["engine"]["late_executions"],
+        "fetch_stall_s": round(obs["engine"]["fetch_stall_seconds"], 4),
+        "sim_io_s": round(obs["io"]["simulated_io_seconds"], 4),
         "peak_device_mb": eng.budget.peak_bytes / 2**20,
-        "staged_blocks": eng.io.stats["staged_blocks"],
-        "preemptions": eng.io.stats["preemptions"],
+        "staged_blocks": obs["io"]["staged_blocks"],
+        "preemptions": obs["io"]["preemptions"],
     }
     eng.close()
     return out

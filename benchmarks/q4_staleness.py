@@ -117,19 +117,22 @@ def store_probe(events: int = 10_000) -> List[Dict]:
             eng.poll(t)
         eng.io.drain()
         store = eng.io.store
+        obs = eng.observability()
         rows.append({
             "backend": backend,
             "events": events,
             "wall_s": round(time.time() - t0, 4),
-            "late_executions": eng.metrics.late_executions,
-            "live_executions": eng.metrics.live_executions,
-            "fetch_stall_s": round(eng.metrics.fetch_stall_seconds, 6),
-            "store_bytes_written": int(store.stats["bytes_written"]),
-            "store_bytes_read": int(store.stats["bytes_read"]),
-            "store_bytes_compacted": int(store.stats["bytes_compacted"]),
+            "late_executions": obs["engine"]["late_executions"],
+            "live_executions": obs["engine"]["live_executions"],
+            "fetch_stall_s": round(
+                obs["engine"]["fetch_stall_seconds"], 6),
+            "store_bytes_written": int(obs["store"]["bytes_written"]),
+            "store_bytes_read": int(obs["store"]["bytes_read"]),
+            "store_bytes_compacted": int(
+                obs["store"]["bytes_compacted"]),
             "write_amplification": round(store.write_amplification, 4),
-            "readahead_hits": int(store.stats["readahead_hits"]),
-            "readahead_misses": int(store.stats["readahead_misses"]),
+            "readahead_hits": int(obs["store"]["readahead_hits"]),
+            "readahead_misses": int(obs["store"]["readahead_misses"]),
         })
         eng.close()
     return rows
@@ -180,20 +183,21 @@ def _prefetch_run(backend: str, events: int, root) -> Dict:
         eng.poll(t)
     eng.io.drain()
     store = eng.io.store
-    hits = int(store.stats["readahead_hits"])
-    misses = int(store.stats["readahead_misses"])
+    obs = eng.observability()
+    hits = int(obs["store"]["readahead_hits"])
+    misses = int(obs["store"]["readahead_misses"])
     row = {
         "prefetch": backend,
         "events": events,
         "wall_s": round(time.time() - t0, 4),
-        "late_executions": eng.metrics.late_executions,
-        "fetch_stall_s": round(eng.metrics.fetch_stall_seconds, 6),
+        "late_executions": obs["engine"]["late_executions"],
+        "fetch_stall_s": round(obs["engine"]["fetch_stall_seconds"], 6),
         "readahead_hits": hits,
         "readahead_misses": misses,
         "readahead_hit_rate": round(hits / max(hits + misses, 1), 4),
-        "segment_sweeps": int(store.stats["segment_sweeps"]),
-        "sweep_bytes_read": int(store.stats["sweep_bytes_read"]),
-        "coalesced_windows": int(store.stats["coalesced_windows"]),
+        "segment_sweeps": int(obs["store"]["segment_sweeps"]),
+        "sweep_bytes_read": int(obs["store"]["sweep_bytes_read"]),
+        "coalesced_windows": int(obs["store"]["coalesced_windows"]),
         "write_amplification": round(store.write_amplification, 4),
     }
     eng.close()
@@ -299,23 +303,24 @@ def _fault_run(rate: float, ladder: bool, events: int, root) -> Dict:
     eng.io.drain()
     wall = time.time() - t0
     m = eng.metrics
+    obs = eng.observability()
     row = {
         "fault_rate": rate,
         "ladder": ladder,
         "events": events,
         "wall_s": round(wall, 4),
         "events_per_s": round(events / max(wall, 1e-9), 1),
-        "late_executions": m.late_executions,
-        "fetch_stall_s": round(m.fetch_stall_seconds, 6),
-        "io_retries": int(eng.io.stats["retries"]),
-        "io_gave_up": int(eng.io.stats["gave_up"]),
+        "late_executions": obs["engine"]["late_executions"],
+        "fetch_stall_s": round(obs["engine"]["fetch_stall_seconds"], 6),
+        "io_retries": int(obs["io"]["retries"]),
+        "io_gave_up": int(obs["io"]["gave_up"]),
         "injected_faults": (int(store.injector.stats["injected"])
                             if store is not None else 0),
-        "readahead_shed": int(eng.io.stats["readahead_shed"]),
-        "shed_readahead_drives": m.shed_readahead_drives,
-        "shed_prefetch_rounds": m.shed_prefetch_rounds,
-        "demoted_sync_rounds": m.demoted_sync_rounds,
-        "deferred_events": m.deferred_events,
+        "readahead_shed": int(obs["io"]["readahead_shed"]),
+        "shed_readahead_drives": obs["engine"]["shed_readahead_drives"],
+        "shed_prefetch_rounds": obs["engine"]["shed_prefetch_rounds"],
+        "demoted_sync_rounds": obs["engine"]["demoted_sync_rounds"],
+        "deferred_events": obs["engine"]["deferred_events"],
         "ladder_transitions": len(m.ladder_transitions),
         "max_degradation_level": max(
             [lvl for _, lvl in m.ladder_transitions], default=0),

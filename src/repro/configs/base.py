@@ -402,6 +402,26 @@ class AionConfig:
     # bucket contents, so the retry is idempotent) before the failure
     # poisons the pipeline
     fold_round_retry: bool = True
+    # ---- observability layer (ISSUE 10) ------------------------------
+    # fraction of root spans (ingest / watermark_advance / poll) that
+    # are traced; children (fold rounds, I/O tasks) inherit the parent's
+    # decision. 0.0 keeps tracing entirely off the hot path (every span
+    # is the shared no-op NULL_SPAN); 1.0 traces everything and must
+    # stay under 5% fold-throughput overhead (see `make bench-obs`)
+    trace_sample_rate: float = 0.0
+    # finished spans are kept in a bounded ring buffer of this many
+    # records; oldest are dropped (counted in tracer stats)
+    trace_ring_max: int = 4096
+    # default format for engine.observability(export=...): "json" or
+    # "prometheus"
+    metrics_export: str = "json"
+    # wrap fold launches in jax.profiler.TraceAnnotation so device
+    # traces line up with engine spans (no-op if the profiler is
+    # unavailable)
+    profiler_annotations: bool = False
+    # cap on StoreHealth.transitions / EngineMetrics.ladder_transitions
+    # (BoundedSeries; sheds oldest half at the cap)
+    health_transitions_max: int = 4096
 
 
 def to_json(cfg: Any) -> str:

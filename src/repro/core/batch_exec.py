@@ -81,6 +81,7 @@ from repro.core.windows import WindowId
 from repro.kernels.segment_aggregate import (
     next_pow2, pack_rows_shard_major,
 )
+from repro.obs import profiler_annotation
 
 
 # largest split-K launch group, in chunks: greedy pow2 decomposition of a
@@ -194,14 +195,19 @@ class BatchExecutor:
         return np.stack([np.asarray(r, dtype) for r in rows])
 
     # ------------------------------------------------------------ execute
-    def execute(self, items: List[BatchWorkItem], now: float
-                ) -> Dict[WindowId, Any]:
+    def execute(self, items: List[BatchWorkItem], now: float,
+                trace_parent=None) -> Dict[WindowId, Any]:
         """Fold all items in one device pass; returns results by window.
 
         Falls back to the per-window reference path when the operator has
         no batch contract or the batch is trivial (a single window gains
         nothing from stacking). An empty item list is a no-op — no
         degenerate [0, ...] tensors, no metrics.
+
+        ``trace_parent`` is the submitting span (watermark advance, poll
+        sweep or pipeline round) handed across threads EXPLICITLY — the
+        fold-round span it parents carries launch-group/split-K counts
+        and whether this round recompiled.
         """
         eng = self.engine
         op = eng.operator
@@ -211,46 +217,82 @@ class BatchExecutor:
             return {it.wid: eng.execute_window(it.wid, now, it.late)
                     for it in items}
 
-        t0 = _time.time()
+        span = eng.tracer.child(
+            trace_parent, "fold_round", windows=len(items),
+            late=sum(1 for it in items if it.late))
+        # pre-round registry reads for per-round span deltas (only when
+        # this round is actually sampled — the disabled path stays free)
+        cache_fn = getattr(getattr(op, "fold_batch", None),
+                           "_cache_size", None)
+        cache0 = sk0 = pooled0 = fallback0 = demoted0 = 0
+        if span.sampled:
+            cache0 = cache_fn() if callable(cache_fn) else 0
+            sk0 = eng.metrics.splitk_launches
+            pooled0 = eng.metrics.pooled_rows
+            fallback0 = eng.metrics.fallback_rows
+            demoted0 = eng.metrics.epoch_demoted_rows
 
-        # 1. snapshot every window atomically (membership is fixed from
-        #    here on: each block folds exactly once, whatever tier it
-        #    moves to while the batch assembles)
-        plans = [(it, sum(snapshot_block_partition(it.state), []))
-                 for it in items]
+        with span:
+            t0 = _time.time()
 
-        mesh = self._slot_mesh()
-        num_devices = mesh.size if mesh is not None else 1
+            # 1. snapshot every window atomically (membership is fixed
+            #    from here on: each block folds exactly once, whatever
+            #    tier it moves to while the batch assembles)
+            plans = [(it, sum(snapshot_block_partition(it.state), []))
+                     for it in items]
 
-        if eng.pool is not None:
-            results, slot_of, num_slots, dev_dt, gather_dt, ran_sharded = \
-                self._fold_pooled(plans, mesh, num_devices)
-        else:
-            results, slot_of, num_slots, dev_dt, gather_dt, ran_sharded = \
-                self._fold_stacked(plans, mesh, num_devices)
+            mesh = self._slot_mesh()
+            num_devices = mesh.size if mesh is not None else 1
 
-        # per-window bookkeeping, identical to execute_window
-        out: Dict[WindowId, Any] = {}
-        for i, (it, _) in enumerate(plans):
-            result = results[slot_of[i]]
-            it.state.result = result
-            eng.results[it.wid] = result
-            it.state.last_executed_at = now
-            it.state.events_at_last_exec = it.state.total_events
-            if it.late:
-                eng.metrics.late_executions += 1
-            else:
-                eng.metrics.live_executions += 1
-            out[it.wid] = result
-            eng._post_execute_destage(it.wid, it.state, now)
-        eng.metrics.exec_seconds += _time.time() - t0
-        eng.metrics.batch_executions += 1
-        eng.metrics.batched_windows += len(plans)
-        eng.metrics.batch_device_seconds += dev_dt
-        eng.metrics.batch_gather_seconds += gather_dt
-        eng.metrics.batch_occupancy_series.append(len(plans))
-        if ran_sharded:
-            eng.metrics.sharded_batch_executions += 1
+            with profiler_annotation(
+                    f"aion.fold_round[{len(items)}]",
+                    enabled=getattr(eng.aion, "profiler_annotations",
+                                    False)):
+                if eng.pool is not None:
+                    results, slot_of, num_slots, dev_dt, gather_dt, \
+                        ran_sharded = self._fold_pooled(plans, mesh,
+                                                        num_devices)
+                else:
+                    results, slot_of, num_slots, dev_dt, gather_dt, \
+                        ran_sharded = self._fold_stacked(plans, mesh,
+                                                         num_devices)
+
+            # per-window bookkeeping, identical to execute_window
+            out: Dict[WindowId, Any] = {}
+            for i, (it, _) in enumerate(plans):
+                result = results[slot_of[i]]
+                it.state.result = result
+                eng.results[it.wid] = result
+                it.state.last_executed_at = now
+                it.state.events_at_last_exec = it.state.total_events
+                if it.late:
+                    eng.metrics.late_executions += 1
+                else:
+                    eng.metrics.live_executions += 1
+                out[it.wid] = result
+                eng._post_execute_destage(it.wid, it.state, now)
+            eng.metrics.exec_seconds += _time.time() - t0
+            eng.metrics.batch_executions += 1
+            eng.metrics.batched_windows += len(plans)
+            eng.metrics.batch_device_seconds += dev_dt
+            eng.metrics.batch_gather_seconds += gather_dt
+            eng.metrics.batch_occupancy_series.append(len(plans))
+            eng.metrics.fold_seconds.observe(dev_dt)
+            if ran_sharded:
+                eng.metrics.sharded_batch_executions += 1
+            if span.sampled:
+                cache1 = cache_fn() if callable(cache_fn) else 0
+                span.set(
+                    splitk_launches=eng.metrics.splitk_launches - sk0,
+                    pooled_rows=eng.metrics.pooled_rows - pooled0,
+                    fallback_rows=eng.metrics.fallback_rows - fallback0,
+                    epoch_demoted_rows=(
+                        eng.metrics.epoch_demoted_rows - demoted0),
+                    recompiled=bool(cache1 > cache0),
+                    sharded=ran_sharded,
+                    device_seconds=round(dev_dt, 6),
+                    gather_seconds=round(gather_dt, 6))
+                span.event("emit", results=len(out))
         return out
 
     # ------------------------------------------------------ splitk planning

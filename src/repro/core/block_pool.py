@@ -61,6 +61,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import MetricsRegistry, StatsMap
+
 
 def _write_fn(k_arena, v_arena, slot, keys, values):
     return (jax.lax.dynamic_update_slice(k_arena, keys[None], (slot, 0)),
@@ -98,7 +100,8 @@ class DeviceBlockPool:
 
     def __init__(self, pool_slots: int, block_capacity: int, width: int,
                  num_shards: int = 1,
-                 max_arena_bytes: Optional[int] = None):
+                 max_arena_bytes: Optional[int] = None,
+                 registry: Optional[MetricsRegistry] = None):
         num_shards = max(int(num_shards), 1)
         pool_slots = max(int(pool_slots), num_shards)
         # round up to a multiple of the shard count so the arena splits
@@ -149,14 +152,25 @@ class DeviceBlockPool:
         self.keys = jnp.zeros((pool_slots, block_capacity), jnp.int32)
         self.values = jnp.zeros((pool_slots, block_capacity, width),
                                 jnp.float32)
-        self.stats = {"allocs": 0, "frees": 0, "exhausted": 0, "writes": 0,
-                      "copy_writes": 0, "deferred_fills": 0,
-                      "batched_fill_commits": 0, "epoch_bumps": 0}
+        registry = registry if registry is not None else MetricsRegistry()
+        self.registry = registry
+        self.stats = StatsMap(registry, "aion_pool")
+        self.stats.register_many([
+            "allocs", "frees", "exhausted", "writes",
+            "copy_writes", "deferred_fills",
+            "batched_fill_commits", "epoch_bumps"])
+        # occupancy gauges are cheaper polled than maintained: the
+        # registry snapshot calls back into the pool under its lock
+        registry.register_callback(lambda: {
+            "aion_pool_free_slots": self.free_slots(),
+            "aion_pool_slots": self.pool_slots,
+            "aion_pool_arena_bytes": self.arena_bytes,
+        })
 
     def _bump_epoch_locked(self, slot: int) -> None:
         self._slot_epoch[slot] += 1
         self.seq += 1
-        self.stats["epoch_bumps"] += 1
+        self.stats.inc("epoch_bumps")
 
     @contextlib.contextmanager
     def deferred_fills(self):
@@ -198,10 +212,10 @@ class DeviceBlockPool:
         idx = jnp.asarray(slots, jnp.int32)
         scatter = _scatter_jit if self._pins else _scatter_donated_jit
         if self._pins:
-            self.stats["copy_writes"] += 1
+            self.stats.inc("copy_writes")
         self.keys, self.values = scatter(self.keys, self.values, idx,
                                          ks, vs)
-        self.stats["batched_fill_commits"] += 1
+        self.stats.inc("batched_fill_commits")
         self._pending.clear()
 
     @contextlib.contextmanager
@@ -239,15 +253,15 @@ class DeviceBlockPool:
                     d = (self._rr + off) % self.num_shards
                     if self._free[d]:
                         self._rr = (d + 1) % self.num_shards
-                        self.stats["allocs"] += 1
+                        self.stats.inc("allocs")
                         return self._free[d].popleft()
-                self.stats["exhausted"] += 1
+                self.stats.inc("exhausted")
                 return None
             d = shard % self.num_shards
             if not self._free[d]:
-                self.stats["exhausted"] += 1
+                self.stats.inc("exhausted")
                 return None
-            self.stats["allocs"] += 1
+            self.stats.inc("allocs")
             return self._free[d].popleft()
 
     def free(self, slot: int) -> None:
@@ -256,7 +270,7 @@ class DeviceBlockPool:
             self._pending.pop(slot, None)
             self._free[self.shard_of_slot(slot)].append(slot)
             self._bump_epoch_locked(slot)
-            self.stats["frees"] += 1
+            self.stats.inc("frees")
 
     def release_slot(self, block) -> Optional[int]:
         """Surrender ``block``'s slot back to the free list, exactly once.
@@ -276,7 +290,7 @@ class DeviceBlockPool:
             self._pending.pop(slot, None)
             self._free[self.shard_of_slot(slot)].append(slot)
             self._bump_epoch_locked(slot)
-            self.stats["frees"] += 1
+            self.stats.inc("frees")
             return slot
 
     def free_slots(self) -> int:
@@ -302,17 +316,17 @@ class DeviceBlockPool:
                 # a fold round's fills batch into one scatter at the
                 # next snapshot/read (see ``deferred_fills``)
                 self._pending[slot] = (keys, vals)
-                self.stats["deferred_fills"] += 1
+                self.stats.inc("deferred_fills")
             else:
                 write = _write_jit if self._pins else _write_donated_jit
                 if self._pins:
-                    self.stats["copy_writes"] += 1
+                    self.stats.inc("copy_writes")
                 self.keys, self.values = write(self.keys, self.values,
                                                slot, keys, vals)
             block.pool_slot = slot
             block.pool = self
             self._bump_epoch_locked(slot)
-            self.stats["writes"] += 1
+            self.stats.inc("writes")
 
     def slot_epochs(self, blocks) -> List[Tuple[Optional[int], int]]:
         """One consistent ``(pool_slot, epoch)`` read per block — NO

@@ -51,88 +51,120 @@ from repro.core.triggers import AionStalenessTrigger, Trigger
 from repro.core.windows import WindowAssigner, WindowId
 
 
-class BoundedSeries(list):
-    """A list whose ``append`` keeps at most ``maxlen`` entries by
-    shedding the OLDEST half when the cap is hit (amortized O(1) per
-    append, unlike a per-append ``del [0]``). Still a real list —
-    equality, slicing and ``np.mean`` behave exactly like the unbounded
-    series it replaces. ``maxlen=0`` disables the bound."""
-
-    def __init__(self, maxlen: int = 0):
-        super().__init__()
-        self.maxlen = int(maxlen)
-
-    def append(self, item) -> None:
-        super().append(item)
-        if self.maxlen and len(self) > self.maxlen:
-            del self[:len(self) - self.maxlen // 2]
+# BoundedSeries moved to repro.obs.registry (every telemetry surface
+# shares it now); re-exported here so existing imports keep working.
+from repro.obs import (BoundedSeries, MetricsRegistry, Tracer,  # noqa: E402
+                       NULL_SPAN)
 
 
-@dataclass
 class EngineMetrics:
-    ingested: int = 0
-    ingested_late: int = 0
-    dropped: int = 0
-    live_executions: int = 0
-    late_executions: int = 0
-    purged_windows: int = 0
-    purged_bytes: int = 0
-    fetch_stall_seconds: float = 0.0
-    exec_seconds: float = 0.0
-    # batched execution path: one entry per device pass
-    batch_executions: int = 0
-    batched_windows: int = 0
-    # device passes that ran slot-sharded across a multi-device mesh
-    sharded_batch_executions: int = 0
-    batch_device_seconds: float = 0.0
-    # batch assembly outside the fold call (row stacking / table build)
-    batch_gather_seconds: float = 0.0
-    # waiting on overlapped demand pool-fills (I/O the fold hid behind)
-    batch_stall_seconds: float = 0.0
-    # block-table rows folded straight from the pool arena vs rows that
-    # degraded to the stacked gather; demand fills issued by the executor
-    pooled_rows: int = 0
-    fallback_rows: int = 0
-    demand_pool_fills: int = 0
-    # pipelined execution: rounds folded by the pipeline worker; rows
-    # whose pool-slot epoch moved between classification and dispatch
-    # (demoted to the stacked fallback rather than folding a stale slot)
-    pipeline_rounds: int = 0
-    epoch_demoted_rows: int = 0
-    # split-K chunked fold: launches that folded fixed-shape chunked
-    # partials (AionConfig.splitk_chunk_rows > 0)
-    splitk_launches: int = 0
-    # self-healing ladder (core/health.py): current rung plus what each
-    # rung actually shed this run — the breaker's observable footprint.
-    # ladder_transitions aliases StoreHealth.transitions once the engine
-    # builds its breaker, so the shed ORDER is assertable from metrics.
-    degradation_level: int = 0
-    shed_readahead_drives: int = 0
-    shed_prefetch_rounds: int = 0
-    demoted_sync_rounds: int = 0
-    deferred_events: int = 0
-    readmitted_events: int = 0
-    ladder_transitions: List[Tuple[int, int]] = field(default_factory=list)
-    # bounded (BoundedSeries) when built via ``EngineMetrics.bounded`` —
-    # the engine does; a bare EngineMetrics() keeps plain lists
-    batch_occupancy_series: List[int] = field(default_factory=list)
-    device_bytes_series: List[Tuple[float, int]] = field(default_factory=list)
-    host_bytes_series: List[Tuple[float, int]] = field(default_factory=list)
+    """Engine counters, registry-backed behind the legacy attribute API.
+
+    Every scalar below lives in a shared :class:`~repro.obs.MetricsRegistry`
+    (labelled by tenant), so ``engine.observability()`` and the Prometheus
+    exporter see the same numbers the legacy ``metrics.ingested += 1``
+    call sites maintain — attribute reads/writes route through
+    ``__getattr__``/``__setattr__`` onto the instruments and no call site
+    changes. The list-valued series stay plain (bounded) lists: tests
+    slice them, and ``ladder_transitions`` must support aliasing to
+    ``StoreHealth.transitions``.
+    """
+
+    #: scalar field -> instrument kind
+    _SCALARS = {
+        "ingested": "counter", "ingested_late": "counter",
+        "dropped": "counter",
+        "live_executions": "counter", "late_executions": "counter",
+        "purged_windows": "counter", "purged_bytes": "counter",
+        "fetch_stall_seconds": "counter", "exec_seconds": "counter",
+        # batched execution path: one entry per device pass
+        "batch_executions": "counter", "batched_windows": "counter",
+        # device passes that ran slot-sharded across a multi-device mesh
+        "sharded_batch_executions": "counter",
+        "batch_device_seconds": "counter",
+        # batch assembly outside the fold call (row stack / table build)
+        "batch_gather_seconds": "counter",
+        # waiting on overlapped demand pool-fills (I/O the fold hid)
+        "batch_stall_seconds": "counter",
+        # block-table rows folded straight from the pool arena vs rows
+        # that degraded to the stacked gather; demand fills issued by
+        # the executor
+        "pooled_rows": "counter", "fallback_rows": "counter",
+        "demand_pool_fills": "counter",
+        # pipelined execution: rounds folded by the pipeline worker;
+        # rows whose pool-slot epoch moved between classification and
+        # dispatch (demoted to the stacked fallback)
+        "pipeline_rounds": "counter", "epoch_demoted_rows": "counter",
+        # split-K chunked fold launches
+        "splitk_launches": "counter",
+        # self-healing ladder: current rung + per-rung shed footprint
+        "degradation_level": "gauge",
+        "shed_readahead_drives": "counter",
+        "shed_prefetch_rounds": "counter",
+        "demoted_sync_rounds": "counter",
+        "deferred_events": "counter", "readmitted_events": "counter",
+        # per-poll byte samples double as gauges (set by snapshot())
+        "device_bytes": "gauge", "host_bytes": "gauge",
+    }
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 tenant: str = "default", series_max: int = 0):
+        d = self.__dict__
+        if registry is None:
+            registry = MetricsRegistry()
+        d["registry"] = registry
+        d["tenant"] = tenant
+        insts = {}
+        for name, kind in self._SCALARS.items():
+            fam = registry.gauge(f"aion_engine_{name}",
+                                 labelnames=("tenant",)) \
+                if kind == "gauge" else \
+                registry.counter(f"aion_engine_{name}",
+                                 labelnames=("tenant",))
+            insts[name] = fam.labels(tenant)
+        d["_inst"] = insts
+        # ladder_transitions aliases StoreHealth.transitions once the
+        # engine builds its breaker (single source of truth for the shed
+        # order); bounded here too for breaker-less engines
+        d["ladder_transitions"] = BoundedSeries(series_max)
+        d["batch_occupancy_series"] = BoundedSeries(series_max)
+        d["device_bytes_series"] = BoundedSeries(series_max)
+        d["host_bytes_series"] = BoundedSeries(series_max)
+        # fold-round latency histogram (observed by the batch executor)
+        d["fold_seconds"] = registry.histogram(
+            "aion_fold_round_seconds", "device seconds per fold round",
+            labelnames=("tenant",)).labels(tenant)
+
+    def __getattr__(self, name):
+        try:
+            return self.__dict__["_inst"][name].value
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def __setattr__(self, name, value) -> None:
+        inst = self.__dict__["_inst"].get(name)
+        if inst is not None:
+            inst.set(value)
+        else:
+            object.__setattr__(self, name, value)
 
     @classmethod
     def bounded(cls, maxlen: int) -> "EngineMetrics":
         """Metrics whose per-poll series hold at most ``maxlen`` recent
         entries (``AionConfig.metrics_series_max``) — a long-running
         engine must not leak memory through its own telemetry."""
-        m = cls()
-        m.batch_occupancy_series = BoundedSeries(maxlen)
-        m.device_bytes_series = BoundedSeries(maxlen)
-        m.host_bytes_series = BoundedSeries(maxlen)
-        return m
+        return cls(series_max=maxlen)
+
+    def scalars(self) -> Dict[str, Any]:
+        """Flat {field: value} view of every registry-backed scalar."""
+        return {name: inst.value
+                for name, inst in self.__dict__["_inst"].items()}
 
     def snapshot(self, now: float, device_bytes: int, host_bytes: int):
         self.device_bytes_series.append((now, device_bytes))
         self.host_bytes_series.append((now, host_bytes))
+        self.device_bytes = device_bytes       # registry gauges
+        self.host_bytes = host_bytes
 
     @property
     def mean_batch_occupancy(self) -> float:
@@ -184,12 +216,20 @@ class StreamEngine:
             # shared-infrastructure mode (MultiTenantEngine): the caller
             # built the scheduler, and with it the budget, device pool
             # and store this engine must use — and owns their lifecycle
-            # (close() will not shut them down)
+            # (close() will not shut them down). The observability plane
+            # is shared the same way: adopt the scheduler's registry and
+            # tracer so every tenant's metrics land in one snapshot.
             self.io = io
             self.budget = io.budget
             self.pool = io.pool
             self.store = io.store if store is None else store
+            self.registry = io.registry
+            self.tracer = io.tracer
         else:
+            self.registry = MetricsRegistry()
+            self.tracer = Tracer(
+                sample_rate=self.aion.trace_sample_rate,
+                capacity=self.aion.trace_ring_max)
             # persistent tier of the p-bucket: an explicit BlockStore,
             # or one built from the config backend under spill_dir
             # ('log' by default — the legacy file-per-block npz backend
@@ -200,7 +240,8 @@ class StreamEngine:
                     self.aion.store_backend, spill_dir,
                     segment_bytes=self.aion.store_segment_bytes,
                     sim_spb=simulated_seconds_per_byte,
-                    readahead_bytes=self.aion.store_readahead_bytes)
+                    readahead_bytes=self.aion.store_readahead_bytes,
+                    registry=self.registry)
             self.store = store
             self.budget = MemoryBudget(device_budget_bytes)
             # persistent device block pool: staging becomes arena fills
@@ -234,7 +275,8 @@ class StreamEngine:
                 pool = DeviceBlockPool(
                     self.aion.pool_slots, self.aion.block_size,
                     value_width, num_shards=shards,
-                    max_arena_bytes=device_budget_bytes // 2)
+                    max_arena_bytes=device_budget_bytes // 2,
+                    registry=self.registry)
                 if pool.pool_slots > 0 \
                         and self.budget.try_reserve(pool.arena_bytes):
                     self.pool = pool
@@ -250,7 +292,8 @@ class StreamEngine:
                 compact_ratio=self.aion.store_compact_ratio,
                 wal_coalesce=self.aion.wal_coalesce_commits,
                 io_retry_limit=self.aion.io_retry_limit,
-                io_retry_backoff=self.aion.io_retry_backoff)
+                io_retry_backoff=self.aion.io_retry_backoff,
+                registry=self.registry, tracer=self.tracer)
         self.policy = policy or StandardPolicy()
         self.cleanup = cleanup or PredictiveCleanup(
             coverage=self.aion.cleanup_coverage,
@@ -275,7 +318,9 @@ class StreamEngine:
                                               punctuated=punctuated)
         self.windows: Dict[WindowId, WindowState] = {}
         self.reexec_plans: Dict[WindowId, _ReexecPlan] = {}
-        self.metrics = EngineMetrics.bounded(self.aion.metrics_series_max)
+        self.metrics = EngineMetrics(
+            registry=self.registry, tenant=self.io.tenant,
+            series_max=self.aion.metrics_series_max)
         self.results: Dict[WindowId, Any] = {}
         self.batch_exec = BatchExecutor(self)
         # pipelined execution (core/pipeline.py): fold rounds submit to
@@ -289,7 +334,7 @@ class StreamEngine:
             self.pipeline = pipeline if self.batching_enabled else None
         elif self.aion.pipelined_execution and self.batching_enabled:
             from repro.core.pipeline import EnginePipeline
-            self.pipeline = EnginePipeline()
+            self.pipeline = EnginePipeline(registry=self.registry)
             self._owns_pipeline = True
         else:
             self.pipeline = None
@@ -304,7 +349,10 @@ class StreamEngine:
             from repro.core.health import StoreHealth
             self.health = StoreHealth(
                 error_threshold=self.aion.breaker_error_threshold,
-                cooldown_ticks=self.aion.breaker_cooldown_ticks)
+                cooldown_ticks=self.aion.breaker_cooldown_ticks,
+                registry=self.registry,
+                max_transitions=self.aion.health_transitions_max,
+                tenant=self.io.tenant)
             self.io.health = self.health
             # single source of truth for the shed order: the metrics
             # field aliases the breaker's transition log
@@ -361,14 +409,18 @@ class StreamEngine:
         drivers, serving layers) can count what was deferred."""
         if len(batch) == 0:
             return 0
+        span = self.tracer.root("ingest", events=len(batch))
         if self.health is not None and self.health.backpressures():
             self._deferred.append((batch, now))
             self.metrics.deferred_events += len(batch)
+            span.end(deferred=len(batch))
             return len(batch)
-        self._admit(batch, now)
+        with span:
+            self._admit(batch, now, span=span)
         return 0
 
-    def _admit(self, batch: EventBatch, now: float) -> None:
+    def _admit(self, batch: EventBatch, now: float,
+               span=NULL_SPAN) -> None:
         if self.watermark_gen is not None:
             self.watermark_gen.observe(batch.timestamps)
         wm = self.tracker.watermark
@@ -377,7 +429,10 @@ class StreamEngine:
         if len(lateness):
             self.cleanup.observe(lateness)
         self.metrics.ingested += len(batch)
-        self.metrics.ingested_late += int(late_mask.sum())
+        n_late = int(late_mask.sum())
+        self.metrics.ingested_late += n_late
+        if span.sampled:
+            span.set(late=n_late, watermark=wm)
 
         identity = None
         for wid, idx in self.assigner.assign(batch.timestamps):
@@ -400,7 +455,7 @@ class StreamEngine:
             new_blocks = state.append_events(sub, late)
             self.policy.on_append(state, new_blocks, self.io, late, now)
             if late:
-                self.io.request_late_write(state, new_blocks)
+                self.io.request_late_write(state, new_blocks, parent=span)
                 self._plan_reexecutions(wid, state, now)
                 if self.prestage_enabled and len(sub) and np.isfinite(wm):
                     # per-key lateness samples for the learned prefetch
@@ -418,7 +473,7 @@ class StreamEngine:
         if self.watermark_gen is not None:
             wm_new = self.watermark_gen.maybe_emit(now)
             if wm_new is not None:
-                self.advance_watermark(wm_new, now)
+                self.advance_watermark(wm_new, now, trace_parent=span)
 
     def flush_deferred(self, now: Optional[float] = None) -> int:
         """Force-admit every backpressure-deferred batch (each at its
@@ -475,11 +530,20 @@ class StreamEngine:
         self.reexec_plans[wid] = _ReexecPlan(times=times)
 
     # ----------------------------------------------------------- watermark
-    def advance_watermark(self, wm: float, now: float) -> None:
+    def advance_watermark(self, wm: float, now: float,
+                          trace_parent=None) -> None:
         if not self.tracker.advance(wm):
             return
+        # root span unless ingest's maybe_emit handed us its span — the
+        # explicit parent is what lets a late event's trace follow the
+        # advance onto the pipeline worker thread (no thread-locals)
+        span = (self.tracer.child(trace_parent, "watermark_advance", wm=wm)
+                if trace_parent is not None
+                else self.tracer.root("watermark_advance", wm=wm))
         due = [wid for wid in sorted(self.windows)
                if not self.windows[wid].expired and wid.end <= wm]
+        if span.sampled:
+            span.set(due=len(due))
         demote = (self.pipeline is not None and self.health is not None
                   and self.health.demotes_rounds())
         if demote and due:
@@ -487,11 +551,12 @@ class StreamEngine:
             # failing store — demote to the synchronous batched path (no
             # overlap, but nothing in flight to lose either)
             self.metrics.demoted_sync_rounds += 1
+            span.event("demoted_sync")
             for wid in due:
                 self.windows[wid].expired = True
             self.batch_exec.execute(
                 [BatchWorkItem(wid, self.windows[wid], False)
-                 for wid in due], now)
+                 for wid in due], now, trace_parent=span)
             for wid in due:
                 self.policy.on_expiry(self.windows[wid], self.io, now)
         elif self.pipeline is not None and due:
@@ -504,14 +569,14 @@ class StreamEngine:
                 self.windows[wid].expired = True
             self._submit_round(
                 [BatchWorkItem(wid, self.windows[wid], False)
-                 for wid in due], now, expiry=True)
+                 for wid in due], now, expiry=True, parent=span)
         elif self.batching_enabled and len(due) > 1:
             # live batch: every newly-expired window folds in one pass
             for wid in due:
                 self.windows[wid].expired = True
             self.batch_exec.execute(
                 [BatchWorkItem(wid, self.windows[wid], False)
-                 for wid in due], now)
+                 for wid in due], now, trace_parent=span)
             for wid in due:
                 self.policy.on_expiry(self.windows[wid], self.io, now)
         else:
@@ -520,9 +585,10 @@ class StreamEngine:
                 state.expired = True
                 self.execute_window(wid, now, late=False)
                 self.policy.on_expiry(state, self.io, now)
+        span.end()
 
     def _submit_round(self, items: List[BatchWorkItem], now: float,
-                      expiry: bool = False) -> None:
+                      expiry: bool = False, parent=None) -> None:
         """Submit one fold round to the pipeline; with ``expiry`` the
         transfer policy's on_expiry hooks run on the worker after the
         round folds (same order the synchronous path guarantees —
@@ -535,7 +601,8 @@ class StreamEngine:
             def on_done():
                 for st in states:
                     self.policy.on_expiry(st, self.io, now)
-        futs = self.pipeline.submit(self, items, now, on_done=on_done)
+        futs = self.pipeline.submit(self, items, now, on_done=on_done,
+                                    trace_parent=parent)
         self.result_futures.update(futs)
 
     # ----------------------------------------------------------- execution
@@ -618,16 +685,18 @@ class StreamEngine:
         # 0. breaker tick + backpressure drain: the ladder reacts to the
         #    error/retry delta of the LAST interval, and any deferred
         #    ingest readmits as soon as (and as far as) the rung allows
-        self._health_tick()
-        self._readmit_deferred(now)
-        # 1. due late re-executions first (their demand staging outranks the
-        #    speculative pre-staging issued below; live execution in
-        #    advance_watermark always went before either)
-        if self.batching_enabled:
-            self._poll_reexec_batched(now)
-        else:
-            self._poll_reexec_reference(now)
-        self._poll_tail(now)
+        span = self.tracer.root("poll", now=now)
+        with span:
+            self._health_tick()
+            self._readmit_deferred(now)
+            # 1. due late re-executions first (their demand staging
+            #    outranks the speculative pre-staging issued below; live
+            #    execution in advance_watermark always went before either)
+            if self.batching_enabled:
+                self._poll_reexec_batched(now, parent=span)
+            else:
+                self._poll_reexec_reference(now)
+            self._poll_tail(now, parent=span)
 
     def _poll_reexec_reference(self, now: float) -> None:
         """Per-window reference path: one execution per due plan time."""
@@ -645,7 +714,7 @@ class StreamEngine:
                                        plan.times[plan.next_idx], now,
                                        self.prestage_margin)
 
-    def _poll_reexec_batched(self, now: float) -> None:
+    def _poll_reexec_batched(self, now: float, parent=NULL_SPAN) -> None:
         """Batched path: every window with due re-executions folds in ONE
         device pass. A window's multiple already-due plan times collapse
         into a single execution — re-execution is a pure function of
@@ -674,23 +743,23 @@ class StreamEngine:
         if demote:
             # ladder rung 3 (see advance_watermark): fold inline
             self.metrics.demoted_sync_rounds += 1
-            self.batch_exec.execute(items, now)
+            self.batch_exec.execute(items, now, trace_parent=parent)
         elif self.pipeline is not None:
             # late rounds queue behind any live round submitted this
             # tick (FIFO worker = the paper's live-before-late rule at
             # round granularity); plan bookkeeping advances immediately
             # — re-execution is a pure function of bucket contents, so
             # the fold's timing doesn't change its result
-            self._submit_round(items, now)
+            self._submit_round(items, now, parent=parent)
         else:
-            self.batch_exec.execute(items, now)
+            self.batch_exec.execute(items, now, trace_parent=parent)
         for wid, state, plan in due:
             plan.next_idx += 1
             if self.prestage_enabled and plan.next_idx < len(plan.times):
                 self.prestage.plan(wid, state, plan.times[plan.next_idx],
                                    now, self.prestage_margin)
 
-    def prefetch_round(self, items) -> None:
+    def prefetch_round(self, items, parent=None) -> None:
         """Pipelined staging lookahead (``EnginePipeline.submit`` while
         a round is in flight): start staging the new round's cold blocks
         so their I/O overlaps the running fold. With the learned
@@ -711,9 +780,9 @@ class StreamEngine:
         if readahead_now is not None and self.io.store is not None:
             readahead_now(self.io, states)
         for state in states:
-            self.io.request_stage(state)
+            self.io.request_stage(state, parent=parent)
 
-    def _poll_tail(self, now: float) -> None:
+    def _poll_tail(self, now: float, parent=NULL_SPAN) -> None:
         # 2. due pre-staging (for future re-executions), preceded by
         #    store readahead for the pre-stagings coming up within the
         #    lead margin: proactive caching drives the persistent tier's
@@ -736,7 +805,7 @@ class StreamEngine:
             for wid in self.prestage.due(now):
                 state = self.windows.get(wid)
                 if state is not None and state.p_blocks():
-                    self.io.request_stage(state)
+                    self.io.request_stage(state, parent=parent)
         # 3. predictive cleanup: purge emits store tombstones; the
         #    compaction request after the loop consumes them (bounded
         #    storage, paper §3.4)
@@ -773,6 +842,57 @@ class StreamEngine:
         # every tick; exact full sums stay available via host_bytes()
         self.metrics.snapshot(now, self.device_bytes(),
                               self.io.host_bytes_tracked())
+
+    # -------------------------------------------------------- observability
+    def observability(self, export: Optional[str] = None):
+        """One call, every surface: engine counters, I/O scheduler +
+        transfer executor, store, device pool, breaker ladder and the
+        trace ring's own accounting — all read off the shared metrics
+        registry, so this is the same data the exporters serialize.
+
+        ``export='prometheus'`` returns the text exposition of the whole
+        registry; ``export='json'`` its flat JSON snapshot; ``None``
+        (default) a nested dict keyed by subsystem.
+        """
+        if export is not None:
+            from repro.obs import to_json, to_prometheus
+            if export == "prometheus":
+                return to_prometheus(self.registry)
+            if export == "json":
+                return to_json(self.registry)
+            raise ValueError(f"unknown export format: {export!r}")
+        eng = self.metrics.scalars()
+        eng["mean_batch_occupancy"] = self.metrics.mean_batch_occupancy
+        eng["device_seconds_per_execution"] = \
+            self.metrics.device_seconds_per_execution
+        snap: Dict[str, Any] = {
+            "engine": eng,
+            "io": self.io.stats.copy(),
+            "executor": self.io.executor.stats.copy(),
+            "store": (self.store.stats.copy()
+                      if self.store is not None else {}),
+            "pool": {},
+            "health": {},
+            "pipeline": (self.pipeline.stats.copy()
+                         if self.pipeline is not None else {}),
+            "fold": {},
+            "trace": self.tracer.stats(),
+        }
+        if self.pool is not None:
+            snap["pool"] = dict(self.pool.stats.copy(),
+                                free_slots=self.pool.free_slots(),
+                                pool_slots=self.pool.pool_slots,
+                                arena_bytes=self.pool.arena_bytes)
+        if self.health is not None:
+            snap["health"] = dict(self.health.stats.copy(),
+                                  level=self.health.level,
+                                  level_name=self.health.name,
+                                  transitions=list(self.health.transitions))
+        cache_size = getattr(getattr(self.operator, "fold_batch", None),
+                             "_cache_size", None)
+        if callable(cache_size):
+            snap["fold"]["cache_size"] = cache_size()
+        return snap
 
     # ------------------------------------------------------------ shutdown
     def close(self, drain_timeout: float = 30.0) -> None:

@@ -22,7 +22,9 @@ deterministic under fault injection.
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import Optional
+
+from repro.obs import BoundedSeries, MetricsRegistry, StatsMap
 
 #: ladder rungs, least- to most-disruptive (shed speculative work first,
 #: demand-path service last)
@@ -46,35 +48,47 @@ class StoreHealth:
     """
 
     def __init__(self, error_threshold: int = 8,
-                 cooldown_ticks: int = 2):
+                 cooldown_ticks: int = 2,
+                 registry: Optional[MetricsRegistry] = None,
+                 max_transitions: int = 4096,
+                 tenant: str = "default"):
         self.error_threshold = int(error_threshold)
         self.cooldown_ticks = max(int(cooldown_ticks), 1)
         self.level = LEVEL_HEALTHY
         self._clean_ticks = 0
         #: every (from_level, to_level) move, in order — the shed-order
-        #: evidence ("readahead went first") chaos tests assert on
-        self.transitions: List[Tuple[int, int]] = []
-        self.stats = {"ticks": 0, "escalations": 0, "recoveries": 0}
+        #: evidence ("readahead went first") chaos tests assert on.
+        #: Bounded: a long-running engine under flapping faults would
+        #: otherwise grow this without limit (the ladder is the one
+        #: legacy list EngineMetrics.bounded() never capped).
+        self.transitions = BoundedSeries(max_transitions)
+        registry = registry if registry is not None else MetricsRegistry()
+        self.stats = StatsMap(registry, "aion_health",
+                              labels={"tenant": tenant})
+        self.stats.register_many(["ticks", "escalations", "recoveries"])
+        self._level_gauge = registry.gauge(
+            "aion_health_level", "degradation ladder rung (0=healthy)",
+            labelnames=("tenant",)).labels(tenant)
 
     # ------------------------------------------------------------ breaker
     def tick(self, signal_delta: int) -> int:
         """Advance one poll tick with ``signal_delta`` new error/retry
         events; returns the (possibly new) degradation level."""
-        self.stats["ticks"] += 1
+        self.stats.inc("ticks")
         if self.error_threshold <= 0:
             return self.level
         if signal_delta >= self.error_threshold:
             self._clean_ticks = 0
             if self.level < MAX_LEVEL:
                 self._move(self.level + 1)
-                self.stats["escalations"] += 1
+                self.stats.inc("escalations")
         elif signal_delta == 0:
             self._clean_ticks += 1
             if self._clean_ticks >= self.cooldown_ticks \
                     and self.level > LEVEL_HEALTHY:
                 self._clean_ticks = 0
                 self._move(self.level - 1)
-                self.stats["recoveries"] += 1
+                self.stats.inc("recoveries")
         else:
             # sub-threshold noise: neither escalate nor count as clean
             self._clean_ticks = 0
@@ -83,6 +97,7 @@ class StoreHealth:
     def _move(self, new_level: int) -> None:
         self.transitions.append((self.level, new_level))
         self.level = new_level
+        self._level_gauge.set(new_level)
 
     # ------------------------------------------------------------ queries
     @property

@@ -51,6 +51,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Deque, Dict, List, Optional
 
 from repro.core.windows import WindowId
+from repro.obs import MetricsRegistry, StatsMap, Tracer
 
 
 class PipelineError(RuntimeError):
@@ -97,26 +98,35 @@ class _FoldRound:
     now: float
     futures: Dict[WindowId, ResultFuture]
     on_done: Optional[Callable] = None     # post-fold hook (e.g. expiry)
+    # submitting span (e.g. the watermark advance) — handed EXPLICITLY
+    # across the worker-thread boundary so the fold span parents to it
+    trace_parent: Any = None
 
 
 class EnginePipeline:
     """FIFO fold-round worker shared by one or more engines."""
 
-    def __init__(self):
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
         self._cv = threading.Condition()
         self._queue: Deque[_FoldRound] = deque()
         self._inflight_wids: Dict[WindowId, int] = {}
         self._active = 0                   # rounds mid-execution
-        self._errors: List[BaseException] = []
+        # bounded: a long soak with recurring faults must not grow the
+        # failure memory without limit; drain() reports and clears
+        self._errors: Deque[BaseException] = deque(maxlen=64)
         self._stop = False
-        self.stats = {"rounds": 0, "prefetched_rounds": 0,
-                      "round_retries": 0, "round_retry_wins": 0}
+        registry = registry if registry is not None else MetricsRegistry()
+        self.registry = registry
+        self.stats = StatsMap(registry, "aion_pipeline")
+        self.stats.register_many(["rounds", "prefetched_rounds",
+                                  "round_retries", "round_retry_wins"])
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     # ------------------------------------------------------------- submit
     def submit(self, engine, items, now: float,
-               on_done: Optional[Callable] = None
+               on_done: Optional[Callable] = None,
+               trace_parent=None
                ) -> Dict[WindowId, ResultFuture]:
         """Queue one fold round; returns a future per window.
 
@@ -128,7 +138,14 @@ class EnginePipeline:
         flight, the new round's cold blocks start staging immediately
         (PRIO_STAGE — outranked by the running round's demand fills)."""
         futures = {it.wid: ResultFuture() for it in items}
-        rnd = _FoldRound(engine, list(items), now, futures, on_done)
+        # only carry a parent that is actually sampled: untraced rounds
+        # then dispatch through the legacy 2-arg execute() signature
+        # (tests monkeypatch it) and pay zero tracing overhead
+        if trace_parent is not None \
+                and not getattr(trace_parent, "sampled", False):
+            trace_parent = None
+        rnd = _FoldRound(engine, list(items), now, futures, on_done,
+                         trace_parent)
         with self._cv:
             busy = self._active > 0 or bool(self._queue)
             self._queue.append(rnd)
@@ -137,8 +154,8 @@ class EnginePipeline:
                     self._inflight_wids.get(it.wid, 0) + 1
             self._cv.notify()
         if busy and getattr(engine.aion, "pipeline_prefetch", True):
-            self.stats["prefetched_rounds"] += 1
-            engine.prefetch_round(items)
+            self.stats.inc("prefetched_rounds")
+            engine.prefetch_round(items, parent=trace_parent)
         return futures
 
     def window_in_flight(self, wid: WindowId) -> bool:
@@ -176,11 +193,11 @@ class EnginePipeline:
                     # (idempotent), so re-running after a transient
                     # stage/store failure yields the same results the
                     # first attempt would have
-                    self.stats["round_retries"] += 1
+                    self.stats.inc("round_retries")
                     try:
                         out = self._execute(rnd, via=backup.run)
                         self._complete(rnd, out)
-                        self.stats["round_retry_wins"] += 1
+                        self.stats.inc("round_retry_wins")
                         failure = None
                     except BaseException as exc2:
                         failure = exc2
@@ -218,15 +235,19 @@ class EnginePipeline:
         lease = pool.deferred_fills() if pool is not None \
             else contextlib.nullcontext()
         with lease:
-            fold = lambda: rnd.engine.batch_exec.execute(rnd.items,
-                                                         rnd.now)
+            if rnd.trace_parent is not None:
+                fold = lambda: rnd.engine.batch_exec.execute(
+                    rnd.items, rnd.now, trace_parent=rnd.trace_parent)
+            else:
+                fold = lambda: rnd.engine.batch_exec.execute(
+                    rnd.items, rnd.now)
             return via(fold) if via is not None else fold()
 
     def _complete(self, rnd: _FoldRound, out: Dict) -> None:
         for it in rnd.items:
             rnd.futures[it.wid].set_result(out.get(it.wid))
         rnd.engine.metrics.pipeline_rounds += 1
-        self.stats["rounds"] += 1
+        self.stats.inc("rounds")
         if rnd.on_done is not None:
             rnd.on_done()
 
@@ -244,7 +265,8 @@ class EnginePipeline:
                 if remaining <= 0:
                     return False
                 self._cv.wait(timeout=remaining)
-            errors, self._errors = self._errors, []
+            errors = list(self._errors)
+            self._errors.clear()
         if errors and raise_on_error:
             raise PipelineError(
                 f"{len(errors)} fold round(s) failed; first: "
@@ -317,6 +339,12 @@ class MultiTenantEngine:
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tenant names: {names}")
         self.aion = aion or AionConfig()
+        # ONE registry + tracer for the whole multiplexed stack: per-
+        # tenant series are label children, so observability() covers
+        # every tenant, the shared executor, store, arena, and pipeline
+        self.registry = MetricsRegistry()
+        self.tracer = Tracer(sample_rate=self.aion.trace_sample_rate,
+                             capacity=self.aion.trace_ring_max)
         self.budget = MemoryBudget(device_budget_bytes)
         self.store = None
         if spill_dir is not None:
@@ -325,8 +353,10 @@ class MultiTenantEngine:
                 self.aion.store_backend, spill_dir,
                 segment_bytes=self.aion.store_segment_bytes,
                 sim_spb=simulated_seconds_per_byte,
-                readahead_bytes=self.aion.store_readahead_bytes)
-        self.executor = TransferExecutor(sequential_io=sequential_io)
+                readahead_bytes=self.aion.store_readahead_bytes,
+                registry=self.registry)
+        self.executor = TransferExecutor(sequential_io=sequential_io,
+                                         registry=self.registry)
         # one shared arena, sized for the width most tenant device
         # traffic uses; tenants with another width (or no batch
         # contract) take the legacy per-block path through their
@@ -340,11 +370,12 @@ class MultiTenantEngine:
                 width = max(set(widths), key=widths.count)
                 pool = DeviceBlockPool(
                     self.aion.pool_slots, self.aion.block_size, width,
-                    max_arena_bytes=device_budget_bytes // 2)
+                    max_arena_bytes=device_budget_bytes // 2,
+                    registry=self.registry)
                 if pool.pool_slots > 0 \
                         and self.budget.try_reserve(pool.arena_bytes):
                     self.pool = pool
-        self.pipeline = EnginePipeline() \
+        self.pipeline = EnginePipeline(registry=self.registry) \
             if self.aion.pipelined_execution else None
         self.engines: Dict[str, Any] = {}
         for spec in specs:
@@ -358,7 +389,8 @@ class MultiTenantEngine:
                 host_budget_bytes=spec.host_budget_bytes,
                 simulated_seconds_per_byte=simulated_seconds_per_byte,
                 pool=pool, store=self.store, owns_store=False,
-                compact_ratio=self.aion.store_compact_ratio)
+                compact_ratio=self.aion.store_compact_ratio,
+                registry=self.registry, tracer=self.tracer)
             self.engines[spec.name] = StreamEngine(
                 assigner=spec.assigner, operator=spec.operator,
                 aion=self.aion, value_width=spec.value_width,
@@ -426,6 +458,31 @@ class MultiTenantEngine:
     def fairness_stats(self) -> Dict[str, int]:
         """Tasks the shared executor ran, by tenant."""
         return dict(self.executor.stats["tenant_executed"])
+
+    def observability(self, export: Optional[str] = None):
+        """One snapshot covering every tenant engine plus the shared
+        executor, store, pool, pipeline, and tenant fairness. ``export``
+        renders it: ``"prometheus"`` -> text exposition of the shared
+        registry, ``"json"`` -> JSON string, ``None`` -> nested dict."""
+        if export is not None:
+            from repro.obs import to_json, to_prometheus
+            return to_prometheus(self.registry) if export == "prometheus" \
+                else to_json(self.registry)
+        snap = {
+            "tenants": {name: eng.observability()
+                        for name, eng in self.engines.items()},
+            "executor": self.executor.stats.copy(),
+            "tenant_fairness": self.fairness_stats(),
+            "pipeline": self.pipeline.stats.copy()
+            if self.pipeline is not None else {},
+            "store": self.store.stats.copy()
+            if self.store is not None else {},
+            "pool": self.pool.stats.copy()
+            if self.pool is not None else {},
+            "trace": self.tracer.stats(),
+            "registry": self.registry.snapshot(),
+        }
+        return snap
 
     def close(self) -> None:
         if self.pipeline is not None:

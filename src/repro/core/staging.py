@@ -30,6 +30,7 @@ import jax
 import numpy as np
 
 from repro.core.buckets import Block, MemoryBudget, Tier, WindowState
+from repro.obs import NULL_SPAN, MetricsRegistry, StatsMap, Tracer
 from repro.storage.blockstore import (
     BlockStore, SimulatedCost, is_transient_error,
 )
@@ -39,6 +40,20 @@ PRIO_STAGE = 0            # proactive pre-staging
 PRIO_READAHEAD = 1        # speculative store->cache sweeps (prefetch)
 PRIO_LATE_WRITE = 2
 PRIO_DESTAGE = 3
+
+# priority class -> span/label name (tenant-fairness + tracing taxonomy)
+PRIO_NAMES = {
+    PRIO_DEMAND_STAGE: "demand_stage",
+    PRIO_STAGE: "stage",
+    PRIO_READAHEAD: "readahead",
+    PRIO_LATE_WRITE: "late_write",
+    PRIO_DESTAGE: "destage",
+}
+
+
+def _wkey(window: "WindowState") -> str:
+    """Compact window id for span attributes."""
+    return f"{window.window_start:g}-{window.window_end:g}"
 
 
 class StagingError(RuntimeError):
@@ -103,7 +118,8 @@ class TransferExecutor:
     """
 
     def __init__(self, *, sequential_io: bool = True,
-                 max_pool_workers: int = 4):
+                 max_pool_workers: int = 4,
+                 registry: Optional[MetricsRegistry] = None):
         self.sequential_io = sequential_io
         self._cv = threading.Condition()
         # priority -> tenant -> FIFO of tasks
@@ -114,10 +130,22 @@ class TransferExecutor:
         self._pending = 0
         self._inflight = 0
         self._stop = False
-        self.stats: Dict[str, Any] = {
-            "errors": 0, "last_error": None, "executed": 0,
-            "tenant_executed": {},
-        }
+        # registry-backed stats: `executed`/`errors` are atomic counters
+        # and `tenant_executed` a per-tenant labelled counter family, so
+        # increments from pool-ablation worker threads (and unlocked
+        # reads like fairness_stats) can't lose or tear updates
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.stats: StatsMap = StatsMap(self.registry, "aion_executor")
+        self.stats.register("errors", "counter",
+                            "I/O tasks that raised")
+        self.stats.register("executed", "counter",
+                            "I/O tasks completed (ok or failed)")
+        self.stats.register_raw("last_error", None)
+        self.stats.register_tenant_view(
+            "tenant_executed",
+            self.registry.counter("aion_executor_tenant_tasks",
+                                  "I/O tasks completed per tenant",
+                                  labelnames=("tenant",)))
         # fault-injection seam (testing.faults.FaultInjector): called
         # with the task before its body runs; may sleep (latency) or
         # raise (a dispatch failure, recorded like any task exception)
@@ -177,8 +205,8 @@ class TransferExecutor:
         scheduler (per-tenant stats). Set BEFORE ``handle.set()`` so no
         waiter can observe completion without the error."""
         task.handle.error = exc
+        self.stats.inc("errors")
         with self._cv:
-            self.stats["errors"] += 1
             self.stats["last_error"] = \
                 f"{type(exc).__name__}: {exc}"
             self._failures.append(self.stats["last_error"])
@@ -189,9 +217,8 @@ class TransferExecutor:
                 pass                       # stats callback must not kill us
 
     def _finish_locked(self, task: _Task) -> None:
-        self.stats["executed"] += 1
-        te = self.stats["tenant_executed"]
-        te[task.tenant] = te.get(task.tenant, 0) + 1
+        self.stats.inc("executed")
+        self.stats.inc_labeled("tenant_executed", task.tenant)
         if not self._pending and not self._inflight:
             self._cv.notify_all()          # wake drain() waiters
 
@@ -374,8 +401,19 @@ class IOScheduler:
                  executor: Optional[TransferExecutor] = None,
                  tenant: str = "default", io_weight: int = 1,
                  owns_store: bool = True, wal_coalesce: bool = False,
-                 io_retry_limit: int = 4, io_retry_backoff: float = 0.01):
+                 io_retry_limit: int = 4, io_retry_backoff: float = 0.01,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.budget = budget
+        # one metrics registry + tracer per engine stack: adopt the shared
+        # executor's registry when multiplexed (multi-tenant), else build
+        # or accept a private one. Tracing defaults to OFF (rate 0) when
+        # no tracer is handed down.
+        if registry is None:
+            registry = executor.registry if executor is not None \
+                else MetricsRegistry()
+        self.registry = registry
+        self.tracer = tracer if tracer is not None else Tracer()
         # the executor may be SHARED across schedulers (multi-tenant
         # engines multiplex one transfer thread): this scheduler's tasks
         # are tagged with its tenant name and served weighted round-robin
@@ -383,7 +421,8 @@ class IOScheduler:
         # later shut down) by this scheduler when none is passed.
         self._owns_executor = executor is None
         if executor is None:
-            executor = TransferExecutor(sequential_io=sequential_io)
+            executor = TransferExecutor(sequential_io=sequential_io,
+                                        registry=registry)
         self.executor = executor
         self.tenant = tenant
         self.sequential_io = executor.sequential_io
@@ -417,18 +456,29 @@ class IOScheduler:
         # persistent device block pool (core/block_pool.py); None keeps
         # the legacy per-block device_put staging path
         self.pool = pool
-        self.stats = {
-            "staged_blocks": 0, "destaged_blocks": 0, "late_write_blocks": 0,
-            "stage_seconds": 0.0, "destage_seconds": 0.0,
-            "stage_events": 0, "simulated_io_seconds": 0.0,
-            "preemptions": 0, "pool_fills": 0, "pool_fallbacks": 0,
-            "errors": 0, "last_error": None,
+        # registry-backed stats (labelled by tenant so multi-tenant
+        # schedulers sharing one registry keep distinct series); the
+        # legacy dict API (`stats["staged_blocks"]`) still works, hot
+        # increments below use the atomic `.inc()`
+        self.stats = StatsMap(registry, "aion_io",
+                              labels={"tenant": tenant})
+        self.stats.register_many([
+            "staged_blocks", "destaged_blocks", "late_write_blocks",
+            "stage_seconds", "destage_seconds",
+            "stage_events", "simulated_io_seconds",
+            "preemptions", "pool_fills", "pool_fallbacks",
+            "errors",
             # self-healing path: transient store failures retried (and
             # recovered), retry budgets exhausted (the failure then
             # surfaced honestly), speculative readahead shed instead of
             # retried to exhaustion (the contract calls it best-effort)
-            "retries": 0, "gave_up": 0, "readahead_shed": 0,
-        }
+            "retries", "gave_up", "readahead_shed",
+        ])
+        self.stats.register_raw("last_error", None)
+        # per-task latency histogram, labelled by priority class
+        self._task_hist = registry.histogram(
+            "aion_io_task_seconds", "I/O task run time by priority class",
+            labelnames=("tenant", "class"))
         # transient-failure retry budget (AionConfig.io_retry_limit /
         # io_retry_backoff); the jitter RNG is seeded per scheduler so
         # fault-injection runs are reproducible
@@ -461,22 +511,49 @@ class IOScheduler:
         self._host_lock = threading.Lock()
 
     # ------------------------------------------------------------- submit
-    def submit(self, priority: int, fn: Callable) -> TaskHandle:
+    def submit(self, priority: int, fn: Callable,
+               span=NULL_SPAN) -> TaskHandle:
         """Queue ``fn`` at ``priority``, tagged with this scheduler's
         tenant. The returned ``TaskHandle`` is an Event (legacy waiters
         keep working) that additionally carries the task's failure —
         demand waiters call ``check()``/``wait_checked()`` so a failed
-        stage aborts the dependent fold instead of folding stale tiers."""
-        return self.executor.submit(priority, fn, tenant=self.tenant,
+        stage aborts the dependent fold instead of folding stale tiers.
+
+        ``span``: the task's trace span (created by the request_*
+        methods BEFORE the closure so retries inside it can record
+        events). The wrapper marks queue->dispatch, observes the task
+        latency histogram by priority class, and ends the span when the
+        task finishes on the executor thread."""
+        hist = self._task_hist.labels(self.tenant,
+                                      PRIO_NAMES.get(priority, str(priority)))
+
+        def run():
+            span.event("dispatch")
+            t0 = time.time()
+            try:
+                fn()
+            except BaseException as exc:
+                span.set(error=type(exc).__name__)
+                raise
+            finally:
+                hist.observe(time.time() - t0)
+                span.end()
+        return self.executor.submit(priority, run, tenant=self.tenant,
                                     on_error=self._record_error)
 
+    def _task_span(self, parent, name: str, **attrs):
+        """Child span for one I/O task (NULL when the parent is unsampled
+        or absent — I/O spans never start their own trace)."""
+        return self.tracer.child(parent, "io." + name,
+                                 tenant=self.tenant, **attrs)
+
     def _record_error(self, exc: BaseException) -> None:
-        self.stats["errors"] += 1
+        self.stats.inc("errors")
         self.stats["last_error"] = f"{type(exc).__name__}: {exc}"
 
     # ------------------------------------------------------------- retries
     def _with_retries(self, fn: Callable, op: str,
-                      shed_ok: bool = False) -> Any:
+                      shed_ok: bool = False, span=NULL_SPAN) -> Any:
         """Run a store operation with the transient-failure retry budget.
 
         Transient failures (``storage.is_transient_error``) retry up to
@@ -496,18 +573,24 @@ class IOScheduler:
                 transient = is_transient_error(exc)
                 if transient and attempt < self.io_retry_limit:
                     attempt += 1
-                    self.stats["retries"] += 1
+                    self.stats.inc("retries")
                     delay = self.io_retry_backoff * (2 ** (attempt - 1))
                     if delay > 0:
                         delay *= 0.5 + self._retry_rng.random()  # jitter
+                    span.event("retry", op=op, attempt=attempt,
+                               delay=round(delay, 6),
+                               error=type(exc).__name__)
+                    if delay > 0:
                         time.sleep(delay)
                     continue
                 if transient and shed_ok:
-                    self.stats["readahead_shed"] += 1
+                    self.stats.inc("readahead_shed")
                     self._record_error(exc)
+                    span.event("shed", op=op, error=type(exc).__name__)
                     return None
                 if transient:
-                    self.stats["gave_up"] += 1
+                    self.stats.inc("gave_up")
+                    span.event("gave_up", op=op, attempts=attempt)
                 raise
 
     @property
@@ -560,7 +643,7 @@ class IOScheduler:
         (empty blocks) are never charged."""
         if nbytes <= 0:
             return
-        self.stats["simulated_io_seconds"] += self.simcost.charge(nbytes)
+        self.stats.inc("simulated_io_seconds", self.simcost.charge(nbytes))
 
     @staticmethod
     def _cost_bytes(block: Block) -> int:
@@ -568,7 +651,8 @@ class IOScheduler:
         return block.nbytes if block.fill > 0 else 0
 
     def stage_block_sync(self, block: Block,
-                         shard: Optional[int] = None) -> bool:
+                         shard: Optional[int] = None,
+                         span=NULL_SPAN) -> bool:
         """p->m: move one block to device. Returns False if budget full.
 
         With a block pool the transfer is an arena fill: allocate a pool
@@ -588,7 +672,7 @@ class IOScheduler:
                 and block.width == self.pool.width:
             slot = self.pool.alloc(shard)
             if slot is None:
-                self.stats["pool_fallbacks"] += 1
+                self.stats.inc("pool_fallbacks")
         reserved = False
         if slot is None:
             if not self.budget.try_reserve(block.nbytes):
@@ -615,7 +699,8 @@ class IOScheduler:
                     # budget surrenders the slot/reservation BEFORE
                     # surfacing (otherwise the pool leaks a slot per
                     # failed stage under sustained faults)
-                    self._with_retries(block.as_event_batch, "get")
+                    self._with_retries(block.as_event_batch, "get",
+                                       span=span)
                 except BaseException:
                     fail()
                     raise
@@ -651,15 +736,15 @@ class IOScheduler:
                 # above (not block.host_data — a racing spill may have
                 # nulled it since)
                 self.pool.commit(block, slot, host_data)
-                self.stats["pool_fills"] += 1
+                self.stats.inc("pool_fills")
             else:
                 block.device_data = device_data
             block.tier = Tier.DEVICE
         if block.persisted:       # reads from the persistent tier pay I/O;
             self._simulate_io(self._cost_bytes(block))  # ingest is direct
-        self.stats["staged_blocks"] += 1
-        self.stats["stage_events"] += block.fill
-        self.stats["stage_seconds"] += time.time() - t0
+        self.stats.inc("staged_blocks")
+        self.stats.inc("stage_events", block.fill)
+        self.stats.inc("stage_seconds", time.time() - t0)
         return True
 
     def destage_block_sync(self, block: Block) -> None:
@@ -697,8 +782,8 @@ class IOScheduler:
         if not was_pooled:
             self.budget.release(block.nbytes)
         self._simulate_io(self._cost_bytes(block))
-        self.stats["destaged_blocks"] += 1
-        self.stats["destage_seconds"] += time.time() - t0
+        self.stats.inc("destaged_blocks")
+        self.stats.inc("destage_seconds", time.time() - t0)
         self._maybe_spill()
 
     def _account_host(self, block: Block) -> None:
@@ -775,7 +860,8 @@ class IOScheduler:
             self._simulate_io(self._cost_bytes(block))
         return host_data
 
-    def readahead_blocks(self, blocks: List[Block]) -> None:
+    def readahead_blocks(self, blocks: List[Block],
+                         span=NULL_SPAN) -> None:
         """Prefetch storage-resident blocks into the store's read cache
         in one batched, segment-sequential sweep — the demand loads that
         follow become cache hits instead of per-block random reads."""
@@ -789,7 +875,7 @@ class IOScheduler:
             # (stats['readahead_shed']) — demand loads still fetch the
             # records with their own budget, nothing is lost but speed
             self._with_retries(lambda: self.store.readahead(keys),
-                               "readahead", shed_ok=True)
+                               "readahead", shed_ok=True, span=span)
 
     def fetch_block_arrays(self, block: Block):
         """Device-preferred read of a block's full-capacity SoA arrays
@@ -941,7 +1027,8 @@ class IOScheduler:
 
     def request_stage(self, window: WindowState,
                       blocks: Optional[List[Block]] = None,
-                      demand: bool = False) -> threading.Event:
+                      demand: bool = False,
+                      parent=None) -> threading.Event:
         """Queue staging of a window's p-blocks, in chunks so independent
         DMAs can overlap (multithread-serialization analog). ``demand``:
         an executing operator is blocked on these blocks — outranks
@@ -950,31 +1037,50 @@ class IOScheduler:
         of the already-resident shard)."""
         blocks = blocks if blocks is not None else window.p_blocks()
         shard = self.shard_of(window)
+        span = self._task_span(
+            parent, "demand_stage" if demand else "stage",
+            window=_wkey(window), blocks=len(blocks))
 
         def do():
+            store = self.store
+            if span and store is not None:
+                h0 = store.stats.get("readahead_hits", 0)
+                m0 = store.stats.get("readahead_misses", 0)
             # batched store readahead first: the per-block loads below
             # then read sequentially-swept cache entries, not one random
             # record each (the proactive-caching path's storage half)
-            self.readahead_blocks(blocks)
+            self.readahead_blocks(blocks, span=span)
+            staged = 0
             for blk in blocks:
-                self.stage_block_sync(blk, shard=shard)
-        return self.submit(PRIO_DEMAND_STAGE if demand else PRIO_STAGE, do)
+                if self.stage_block_sync(blk, shard=shard, span=span):
+                    staged += 1
+            if span and store is not None:
+                span.set(
+                    staged=staged,
+                    readahead_hits=store.stats.get("readahead_hits", 0) - h0,
+                    readahead_misses=store.stats.get(
+                        "readahead_misses", 0) - m0)
+        return self.submit(PRIO_DEMAND_STAGE if demand else PRIO_STAGE, do,
+                           span=span)
 
-    def request_readahead(self, window: WindowState) -> threading.Event:
+    def request_readahead(self, window: WindowState,
+                          parent=None) -> threading.Event:
         """Queue a storage-only readahead for a window's spilled blocks
         (no host/device residency change): proactive caching drives this
         ahead of the actual pre-stage, so the store's sequential sweep
         runs before the staging deadline instead of inside it."""
         blocks = [b for b in window.blocks if b.tier == Tier.STORAGE]
+        span = self._task_span(parent, "readahead",
+                               window=_wkey(window), blocks=len(blocks))
 
         def do():
-            self.readahead_blocks(blocks)
-        return self.submit(PRIO_READAHEAD, do)
+            self.readahead_blocks(blocks, span=span)
+        return self.submit(PRIO_READAHEAD, do, span=span)
 
     def request_segment_readahead(self, sid: int, keys: List,
                                   on_swept: Optional[Callable] = None,
-                                  priority: int = PRIO_READAHEAD
-                                  ) -> threading.Event:
+                                  priority: int = PRIO_READAHEAD,
+                                  parent=None) -> threading.Event:
         """Queue ONE sequential sweep over log segment ``sid`` caching
         ``keys``'s records (the learned planner's unit of readahead).
         ``on_swept(seconds, nbytes)`` feeds the measured sweep back into
@@ -982,6 +1088,9 @@ class IOScheduler:
         speculative readahead class; the pipelined prefetch hook passes
         ``PRIO_STAGE`` so its sweeps run (FIFO) before the stage tasks
         they feed."""
+        span = self._task_span(parent, "segment_readahead",
+                               segment=sid, keys=len(keys))
+
         def do():
             if self.store is None:
                 return
@@ -991,14 +1100,14 @@ class IOScheduler:
             # readahead_blocks (the demand path still fetches)
             if self._with_retries(
                     lambda: self.store.readahead_segments(sid, keys),
-                    "readahead", shed_ok=True) is None:
+                    "readahead", shed_ok=True, span=span) is None:
                 return
             if on_swept is not None:
                 nbytes = self.store.stats.get("sweep_bytes_read", 0) \
                     - before
                 if nbytes > 0:
                     on_swept(time.time() - t0, nbytes)
-        return self.submit(priority, do)
+        return self.submit(priority, do, span=span)
 
     def request_coalesce(self, window_keys: List) -> Optional[threading.Event]:
         """Queue a storage-layout coalescing pass (background priority):
@@ -1010,8 +1119,7 @@ class IOScheduler:
         def do():
             n = self.store.coalesce_windows(window_keys)
             if n:
-                self.stats["coalesced_windows"] = \
-                    self.stats.get("coalesced_windows", 0) + n
+                self.stats.inc("coalesced_windows", n)
         return self.submit(PRIO_DESTAGE, do)
 
     def request_compaction(self, max_ratio: Optional[float] = None
@@ -1028,14 +1136,16 @@ class IOScheduler:
             self._with_retries(self.store.commit, "commit")
             reclaimed = self.store.compact_if_needed(ratio)
             if reclaimed:
-                self.stats["compacted_bytes"] = \
-                    self.stats.get("compacted_bytes", 0) + reclaimed
+                self.stats.inc("compacted_bytes", reclaimed)
         return self.submit(PRIO_DESTAGE, do)
 
     def request_destage(self, window: WindowState,
-                        keep_bootstrap: int = 0) -> threading.Event:
+                        keep_bootstrap: int = 0,
+                        parent=None) -> threading.Event:
         """Queue destaging (background, lowest priority). Preemptible: the
         executor checks for higher-priority work between chunks."""
+        span = self._task_span(parent, "destage", window=_wkey(window))
+
         def do():
             m = window.m_blocks()
             keep = set(id(b) for b in m[:keep_bootstrap])
@@ -1049,17 +1159,18 @@ class IOScheduler:
                 if self.sequential_io and \
                         self.has_higher_priority_pending(PRIO_DESTAGE):
                     # re-queue the remainder and yield (preemption)
-                    self.stats["preemptions"] += 1
+                    self.stats.inc("preemptions")
+                    span.event("preempted", remaining=len(pending) - i)
                     rest = pending[i:]
                     if rest:
                         self.submit(PRIO_DESTAGE,
                                     lambda r=rest: [self.destage_block_sync(b)
                                                     for b in r])
                     return
-        return self.submit(PRIO_DESTAGE, do)
+        return self.submit(PRIO_DESTAGE, do, span=span)
 
-    def request_late_write(self, window: WindowState, blocks: List[Block]
-                           ) -> threading.Event:
+    def request_late_write(self, window: WindowState, blocks: List[Block],
+                           parent=None) -> threading.Event:
         """Late events were appended host-side; this acknowledges/persists
         them at middle priority (and spills if the host tier is over
         budget).
@@ -1071,9 +1182,12 @@ class IOScheduler:
         p-bucket's persistent shadow. The legacy npz backend keeps the
         seed behaviour (flag + simulated cost only)."""
         durable = self.store is not None and self.store.durable_writes
+        span = self._task_span(parent, "late_write",
+                               window=_wkey(window), blocks=len(blocks),
+                               durable=durable)
 
         def do():
-            self.stats["late_write_blocks"] += len(blocks)
+            self.stats.inc("late_write_blocks", len(blocks))
             total = 0
             wrote: List[Block] = []
             for blk in blocks:
@@ -1084,7 +1198,7 @@ class IOScheduler:
                             and blk.host_data is not None:
                         self._with_retries(
                             lambda b=blk: b.put_to_store(self.store),
-                            "put")
+                            "put", span=span)
                     wrote.append(blk)
                 total += self._cost_bytes(blk)
 
@@ -1099,9 +1213,11 @@ class IOScheduler:
             if durable and self._coalescer is not None:
                 # join the coalesced group commit: one fsync covers this
                 # late write and any spill batches queued around it
+                span.event("coalesced_commit_joined")
                 self._coalescer.after_commit(fin)
             else:
                 if durable:
-                    self._with_retries(self.store.commit, "commit")
+                    self._with_retries(self.store.commit, "commit",
+                                       span=span)
                 fin(True)
-        return self.submit(PRIO_LATE_WRITE, do)
+        return self.submit(PRIO_LATE_WRITE, do, span=span)

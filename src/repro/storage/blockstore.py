@@ -118,15 +118,22 @@ class BlockStore:
     #: (the legacy npz backend only flips the ``persisted`` flag).
     durable_writes = False
 
-    def __init__(self, sim_spb: float = 0.0):
+    def __init__(self, sim_spb: float = 0.0, registry=None):
+        from repro.obs import MetricsRegistry, StatsMap
         self.simcost = SimulatedCost(sim_spb)
-        self.stats: Dict[str, float] = {
-            "puts": 0, "gets": 0, "deletes": 0, "commits": 0,
-            "bytes_written": 0, "bytes_read": 0, "bytes_compacted": 0,
-            "logical_bytes_written": 0, "batched_reads": 0,
-            "readahead_hits": 0, "readahead_misses": 0,
-            "readahead_bytes": 0, "compactions": 0,
-        }
+        # registry-backed counters behind the legacy dict API; backends
+        # extend the set via ``self.stats.update({...})`` (auto-registers)
+        if registry is None:
+            registry = MetricsRegistry()
+        self.registry = registry
+        self.stats = StatsMap(registry, f"aion_store_{self.name}")
+        self.stats.register_many([
+            "puts", "gets", "deletes", "commits",
+            "bytes_written", "bytes_read", "bytes_compacted",
+            "logical_bytes_written", "batched_reads",
+            "readahead_hits", "readahead_misses",
+            "readahead_bytes", "compactions",
+        ])
 
     # ------------------------------------------------------------- writes
     def put(self, window_key: Optional[WindowKey], block_id: int,

@@ -146,8 +146,8 @@ class LogBlockStore(BlockStore):
 
     def __init__(self, directory: Path, *, segment_bytes: int = 1 << 20,
                  sim_spb: float = 0.0, readahead_bytes: int = 16 << 20,
-                 fsync: bool = True):
-        super().__init__(sim_spb=sim_spb)
+                 fsync: bool = True, registry=None):
+        super().__init__(sim_spb=sim_spb, registry=registry)
         self.directory = Path(directory)
         self.directory.mkdir(parents=True, exist_ok=True)
         self.segment_bytes = max(int(segment_bytes), 4096)

@@ -29,8 +29,9 @@ class NpzBlockStore(BlockStore):
     name = "npz"
     durable_writes = False      # legacy late writes only flip `persisted`
 
-    def __init__(self, directory: Path, sim_spb: float = 0.0):
-        super().__init__(sim_spb=sim_spb)
+    def __init__(self, directory: Path, sim_spb: float = 0.0,
+                 registry=None):
+        super().__init__(sim_spb=sim_spb, registry=registry)
         self.directory = Path(directory)
         # engine main thread (purge tombstones) and the I/O executor
         # (spill/stage) both call in
